@@ -1,0 +1,69 @@
+"""Paper Figure 10 — data-centric vs model-centric latency crossover.
+
+The paper's observation: model-centric wins at small workload, data-centric
+wins at large. We reproduce it with the roofline latency model evaluated on
+the ACTUAL per-mode costs of one MoE layer on the production mesh:
+
+  model-centric: tokens all-gathered over TP + partial-output reduction;
+                 weights stationary.
+  data-centric : weights all-gathered over the mesh (cache re-fill per
+                 layer); tokens stationary.
+
+Cost model terms use the v5e constants from the dry-run (197 TF, 819 GB/s,
+50 GB/s link); crossover position depends on the ratio of token bytes moved
+(∝ batch) to weight bytes moved (constant) exactly as in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def layer_latency(mode: str, tokens: int, d: int, f: int, e: int, k: int,
+                  n_dev: int = 16) -> float:
+    """One MoE FFN layer (fwd), bf16, on an n_dev TP/DP group."""
+    active_rows = tokens * k
+    flops = 2 * active_rows * d * f * 2  # two MLPs
+    w_bytes = e * 2 * d * f * 2          # full expert params, bf16
+    tok_bytes = tokens * d * 2
+    if mode == "model_centric":
+        compute = flops / n_dev / PEAK           # rows x F/n per device
+        mem = (w_bytes / n_dev + tok_bytes) / HBM
+        coll = (tok_bytes + tok_bytes) / LINK    # AG tokens + RS outputs
+    else:  # data_centric
+        compute = flops / n_dev / PEAK           # tokens/n per device
+        mem = (w_bytes + tok_bytes / n_dev) / HBM
+        coll = w_bytes * (n_dev - 1) / n_dev / LINK  # AG weights
+    return max(compute, mem, coll)
+
+
+def run(quick: bool = True):
+    d, f, e, k = 1024, 4096, 8, 2
+    rows = []
+    crossover = None
+    # crossover where 2x token bytes ~ gathered weight bytes: ~E*f tokens
+    batches = [2 ** i for i in range(4, 18)]
+    prev = None
+    for tokens in batches:
+        t_m = layer_latency("model_centric", tokens, d, f, e, k)
+        t_d = layer_latency("data_centric", tokens, d, f, e, k)
+        rows.append((tokens, t_m, t_d))
+        winner = "model" if t_m < t_d else "data"
+        if prev and prev != winner:
+            crossover = tokens
+        prev = winner
+        emit(f"centric_F10/tokens{tokens}", t_m * 1e6,
+             f"model_us={t_m * 1e6:.1f};data_us={t_d * 1e6:.1f};winner={winner}")
+    assert rows[0][1] < rows[0][2], "model-centric must win small workloads"
+    assert rows[-1][2] < rows[-1][1], "data-centric must win large workloads"
+    emit("centric_F10/crossover_tokens", 0.0, f"{crossover}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def compiled_stats(fn, *abstract_args) -> dict:
+    """Compile (AOT) and return memory/cost stats without executing."""
+    lowered = jax.jit(fn).lower(*abstract_args)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    return {
+        "peak_bytes": ma.argument_size_in_bytes + ma.temp_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "arg_bytes": ma.argument_size_in_bytes,
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The run.py CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: expert-specific op implementations on CPU.
+
+us_per_call for esmm / esfk across impls. 'pallas' runs in interpret mode
+here (correctness path; its TPU perf story is the dry-run roofline —
+interpret timing is NOT representative). 'blocked' is the fair CPU
+execution path; 'dense_ep' computes every expert densely (the redundancy
+the paper removes) as the flop baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.reindex import build_reindex, gather_sorted
+from repro.kernels import ops
+
+
+def run(quick: bool = True):
+    n, d, f, e, k, blk = (1024, 256, 512, 8, 2, 64)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    ei = jax.random.randint(ks[0], (n, k), 0, e)
+    g = jax.random.uniform(ks[1], (n, k))
+    ri = build_reindex(ei, g, e, blk)
+    x = jax.random.normal(ks[2], (n, d), jnp.float32)
+    xs = gather_sorted(x, ri)
+    w = jax.random.normal(ks[3], (e, d, f)) * 0.1
+
+    impls = ["blocked", "ragged"] + ([] if quick else ["pallas"])
+    base = None
+    for impl in impls:
+        fn = jax.jit(
+            lambda xs, w: ops.esmm(xs, w, None, ri.block_expert,
+                                   ri.padded_counts, impl=impl)
+        )
+        us = time_fn(fn, xs, w, iters=5, warmup=2)
+        if base is None:
+            base = us
+        emit(f"kernel/esmm/{impl}", us, f"rows={ri.num_rows};D={d};F={f}")
+
+    # dense every-expert baseline (zero-redundancy counterpoint)
+    dense = jax.jit(lambda x, w: jnp.einsum("nd,edf->nef", x, w))
+    us = time_fn(dense, x, w, iters=3, warmup=1)
+    emit("kernel/esmm/dense_all_experts", us,
+         f"redundancy={e}/{k}={e / k:.0f}x")
+
+    # fused backward
+    dy = jax.random.normal(jax.random.PRNGKey(9), (ri.num_rows, f))
+    for impl in impls:
+        fn = jax.jit(
+            lambda xs, dy: ops.esfk(xs, dy, ri.block_expert,
+                                    ri.padded_counts, impl=impl)
+        )
+        us = time_fn(fn, xs, dy, iters=5, warmup=2)
+        emit(f"kernel/esfk/{impl}", us, "dW+db fused")
+
+
+if __name__ == "__main__":
+    run()

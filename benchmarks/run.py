@@ -1,0 +1,54 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+``--full`` widens sweeps to the paper's full grids (slow on 1 CPU core).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: kernel,hetero,centric,"
+                         "memory,latency,ablation")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        ablation,
+        centric_crossover,
+        hetero_alloc,
+        kernel_bench,
+        latency_table,
+        memory_table,
+    )
+
+    suites = {
+        "kernel": kernel_bench.run,
+        "hetero": hetero_alloc.run,
+        "centric": centric_crossover.run,
+        "memory": memory_table.run,
+        "latency": latency_table.run,
+        "ablation": ablation.run,
+    }
+    wanted = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in wanted:
+        try:
+            suites[name](quick=quick)
+        except Exception:  # noqa: BLE001 — report and continue
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving example: continuous-batching-lite server on a tiny
+Mixtral-style model (MoE decode path with sliding-window KV cache).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve  # noqa: E402
+
+if __name__ == "__main__":
+    serve.main([
+        "--arch", "mixtral-8x7b", "--smoke",
+        "--slots", "4", "--max-seq", "64",
+        "--requests", "6", "--max-new", "12",
+    ])

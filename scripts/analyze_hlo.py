@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Perf-analysis over a dry-run HLO dump (.hlo.gz from dryrun --save-hlo):
+per-shape collective breakdown, biggest tensors, duplicate-op (remat) count.
+
+  python scripts/analyze_hlo.py dump.hlo.gz [--top 20]
+"""
+import argparse
+import collections
+import gzip
+import re
+
+DT = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
+      "s8": 1, "u8": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2}
+CRE = re.compile(
+    r"= ([a-z0-9]+)\[([\d,]*)\][^=]*? "
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+SRE = re.compile(r"([a-z0-9]+)\[([\d,]+)\]")
+
+
+def nbytes(dt, dims):
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DT.get(dt, 0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+    opener = gzip.open if args.path.endswith(".gz") else open
+    txt = opener(args.path, "rt").read()
+
+    print("== collectives by shape ==")
+    agg, cnt = collections.Counter(), collections.Counter()
+    for line in txt.splitlines():
+        m = CRE.search(line)
+        if not m:
+            continue
+        dt, dims, kind = m.groups()
+        key = f"{kind} {dt}[{dims}]"
+        agg[key] += nbytes(dt, dims)
+        cnt[key] += 1
+    for k, b in agg.most_common(args.top):
+        print(f"{b / 1e9:9.3f} GB x{cnt[k]:4d}  {k}")
+
+    print("\n== largest tensor shapes (mention counts) ==")
+    sizes = collections.Counter()
+    for m in SRE.finditer(txt):
+        b = nbytes(m.group(1), m.group(2))
+        if b > 100e6:
+            sizes[f"{m.group(1)}[{m.group(2)}]"] += 1
+    for k, c in sizes.most_common(args.top):
+        dt = k.split("[")[0]
+        print(f"{nbytes(dt, k[k.index('[') + 1:-1]) / 1e9:9.2f} GB "
+              f"x{c:5d}  {k}")
+
+    print("\n== op-kind counts (fusion/remat smell) ==")
+    kinds = collections.Counter(
+        m.group(1) for m in re.finditer(r"= \S+ ([a-z\-]+)\(", txt)
+    )
+    for k, c in kinds.most_common(15):
+        print(f"{c:7d}  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+#!/usr/bin/env python
+"""Assemble the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+cached cell JSONs. Regenerates content between AUTOGEN markers."""
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "experiments", "dryrun")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+ARCH_ORDER = [
+    "qwen3_moe_30b_a3b", "mixtral_8x7b", "jamba_1_5_large_398b",
+    "phi3_medium_14b", "starcoder2_15b", "gemma3_12b", "gemma_2b",
+    "musicgen_large", "xlstm_350m", "paligemma_3b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(mesh):
+    cells = {}
+    for path in glob.glob(os.path.join(OUT, f"*__{mesh}.json")):
+        base = os.path.basename(path)[: -len(f"__{mesh}.json")]
+        arch, shape = base.rsplit("__", 1)
+        with open(path) as f:
+            cells[(arch, shape)] = json.load(f)
+    return cells
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 0.01:
+        return f"{x:.3f}"
+    return f"{x:.2e}"
+
+
+def dryrun_table(single, multi):
+    lines = [
+        "| arch | shape | mode | mesh 16x16 | peak GB/dev | mesh 2x16x16 |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            s = single.get((arch, shape))
+            m = multi.get((arch, shape))
+            if s is None and m is None:
+                continue
+            if s and s.get("status") == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | - | SKIP ({s['reason'][:40]}) | - | SKIP |")
+                continue
+
+            def cellstat(c):
+                if c is None:
+                    return "pending"
+                if c.get("status") != "ok":
+                    return c.get("status", "?").upper()
+                return "PASS"
+
+            peak = "-"
+            mode = "-"
+            if s and s.get("status") == "ok":
+                peak = f"{s['memory']['peak_per_device'] / 1e9:.1f}"
+                mode = s.get("mode", "-")
+            lines.append(
+                f"| {arch} | {shape} | {mode} | {cellstat(s)} | {peak} "
+                f"| {cellstat(m)} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(single):
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem kern (s) | t_coll (s) | dominant "
+        "| MODEL_FLOPs/HLO | note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            c = single.get((arch, shape))
+            if c is None or c.get("status") != "ok":
+                continue
+            r = c["roofline"]
+            frac = r.get("useful_flops_fraction")
+            note = ""
+            tk = r.get("t_memory_kernel_s", r["t_memory_s"])
+            dom_t = max(r["t_compute_s"], tk, r["t_collective_s"])
+            rf = r["t_compute_s"] / dom_t if dom_t else 0
+            note = f"roofline frac {rf:.2f}"
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(r['t_compute_s'])} "
+                f"| {fmt_s(tk)} | {fmt_s(r['t_collective_s'])} "
+                f"| {r['dominant']} | {frac:.2f} | {note} |"
+            )
+    return "\n".join(lines)
+
+
+def collective_summary(single):
+    lines = [
+        "| arch | shape | AG GB | AR GB | RS GB | A2A GB | CP GB |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            c = single.get((arch, shape))
+            if c is None or c.get("status") != "ok":
+                continue
+            co = c.get("collectives", {})
+            g = lambda k: co.get(k, {}).get("bytes", 0) / 1e9
+            lines.append(
+                f"| {arch} | {shape} | {g('all-gather'):.1f} "
+                f"| {g('all-reduce'):.1f} | {g('reduce-scatter'):.1f} "
+                f"| {g('all-to-all'):.2f} | {g('collective-permute'):.2f} |"
+            )
+    return "\n".join(lines)
+
+
+def inject(text, marker, content):
+    start = f"<!-- AUTOGEN:{marker} -->"
+    end = f"<!-- /AUTOGEN:{marker} -->"
+    block = f"{start}\n{content}\n{end}"
+    if start in text:
+        return re.sub(
+            re.escape(start) + r".*?" + re.escape(end),
+            lambda _: block, text, flags=re.S,
+        )
+    return text + "\n" + block + "\n"
+
+
+def main():
+    single = load_cells("single")
+    multi = load_cells("multi")
+    if not os.path.exists(EXP):
+        text = "# EXPERIMENTS\n"
+    else:
+        with open(EXP) as f:
+            text = f.read()
+    text = inject(text, "dryrun", dryrun_table(single, multi))
+    text = inject(text, "roofline", roofline_table(single))
+    text = inject(text, "collectives", collective_summary(single))
+    with open(EXP, "w") as f:
+        f.write(text)
+    n_ok = sum(1 for c in single.values() if c.get("status") == "ok")
+    n_skip = sum(1 for c in single.values() if c.get("status") == "skipped")
+    n_bad = sum(1 for c in single.values()
+                if c.get("status") in ("error", "timeout"))
+    print(f"single-pod: {n_ok} ok, {n_skip} skipped, {n_bad} failed; "
+          f"multi-pod: {sum(1 for c in multi.values() if c.get('status') == 'ok')} ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Batch driver for the multi-pod dry-run: every (arch x shape x mesh) cell
+in its own subprocess, JSON-cached so the sweep is resumable.
+
+  python scripts/run_dryruns.py [--mesh single|multi|both] [--force]
+        [--archs a,b] [--shapes s1,s2] [--timeout 3600]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "experiments", "dryrun")
+
+ARCHS = [
+    "qwen3_moe_30b_a3b", "mixtral_8x7b", "jamba_1_5_large_398b",
+    "phi3_medium_14b", "starcoder2_15b", "gemma3_12b", "gemma_2b",
+    "musicgen_large", "xlstm_350m", "paligemma_3b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cell_path(arch, shape, mesh):
+    return os.path.join(OUT, f"{arch}__{shape}__{mesh}.json")
+
+
+def run_cell(arch, shape, mesh, timeout, extra):
+    out = cell_path(arch, shape, mesh)
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--out", out,
+    ] + (["--multi-pod", "--scan"] if mesh == "multi" else []) + extra
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("JAX_PLATFORMS", None)
+    t0 = time.time()
+    try:
+        res = subprocess.run(cmd, capture_output=True, text=True,
+                             timeout=timeout, env=env, cwd=ROOT)
+        ok = res.returncode == 0 and os.path.exists(out)
+        if not ok:
+            with open(out, "w") as f:
+                json.dump({"status": "error",
+                           "stderr": res.stderr[-4000:],
+                           "stdout": res.stdout[-1000:]}, f, indent=1)
+        return ok, time.time() - t0
+    except subprocess.TimeoutExpired:
+        with open(out, "w") as f:
+            json.dump({"status": "timeout", "timeout_s": timeout}, f)
+        return False, time.time() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--archs", default=None)
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--timeout", type=int, default=5400)
+    ap.add_argument("--extra", default="", help="extra dryrun args")
+    args = ap.parse_args()
+
+    os.makedirs(OUT, exist_ok=True)
+    archs = args.archs.split(",") if args.archs else ARCHS
+    shapes = args.shapes.split(",") if args.shapes else SHAPES
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    extra = args.extra.split() if args.extra else []
+
+    todo = []
+    for mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                p = cell_path(arch, shape, mesh)
+                if args.force or not os.path.exists(p) or _is_error(p):
+                    todo.append((arch, shape, mesh))
+    print(f"{len(todo)} cells to run "
+          f"({len(archs) * len(shapes) * len(meshes) - len(todo)} cached)")
+    for i, (arch, shape, mesh) in enumerate(todo):
+        ok, dt = run_cell(arch, shape, mesh, args.timeout, extra)
+        status = "OK " if ok else "FAIL"
+        print(f"[{i + 1}/{len(todo)}] {status} {arch} {shape} {mesh} "
+              f"({dt:.0f}s)", flush=True)
+
+
+def _is_error(path):
+    try:
+        with open(path) as f:
+            return json.load(f).get("status") in ("error", "timeout")
+    except Exception:  # noqa: BLE001
+        return True
+
+
+if __name__ == "__main__":
+    main()

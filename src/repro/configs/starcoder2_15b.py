@@ -1,0 +1,39 @@
+"""StarCoder2-15B — dense, GQA + RoPE, classic MLP with LayerNorm.
+[arXiv:2402.19173; hf]
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    act="gelu",
+    glu=False,
+    norm="layernorm",
+    rope_theta=1e5,
+    tie_embeddings=False,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="starcoder2-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=128,
+    act="gelu",
+    glu=False,
+    norm="layernorm",
+    tie_embeddings=False,
+)

@@ -1,0 +1,125 @@
+"""Baseline MoE execution paths the paper compares against.
+
+* ``dispatch_combine_moe`` — Tutel-style: tokens are dispatched into a dense
+  (E, C, D) capacity buffer (padding + dropping!), experts run as batched
+  dense GeMMs, outputs are combined back. This carries the computation
+  redundancy Hexa-MoE eliminates: capacity padding is computed like real
+  tokens and overflow is dropped (a model-quality compromise).
+
+* ``grouped_dense_moe`` — MegaBlocks(MoE)-style: the same capacity buffer
+  with capacity set to the max group size each step (no dropping, all
+  padding), which is what grouped GeMM without block-sparsity must do.
+
+* ``ep_all_to_all`` helpers — classic expert parallelism: tokens travel via
+  all-to-all to the expert-owning device and back. Used only inside
+  ``parallel.strategies`` to build the distributed EP baseline for the
+  roofline comparison (the paper's motivation: Hexa-MoE needs NO all-to-all).
+
+All paths consume the same ``RouterOutput`` so numerical comparisons are
+exact where no token is dropped.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import cdiv
+from repro.core.routing import RouterOutput
+
+
+def _dispatch_ranks(expert_idx: jax.Array, num_experts: int):
+    """Position of each token-copy within its expert's queue (stable)."""
+    n, k = expert_idx.shape
+    e_flat = expert_idx.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    counts = jnp.bincount(e_flat, length=num_experts)
+    offset = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])
+    rank_sorted = jnp.arange(n * k) - offset[e_flat[order]]
+    rank = jnp.zeros((n * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    return rank.reshape(n, k), counts
+
+
+def dispatch_combine_moe(
+    x: jax.Array,
+    r: RouterOutput,
+    w1: jax.Array,
+    b1: Optional[jax.Array],
+    w2: jax.Array,
+    b2: Optional[jax.Array],
+    *,
+    act,
+    capacity_factor: float = 1.25,
+    capacity: Optional[int] = None,
+    glu_up: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Tutel-like dense dispatch/combine MoE FFN.
+
+    Capacity C = ceil(N*k/E * capacity_factor); copies ranked past C are
+    DROPPED (their contribution is zero), copies below C are padded into a
+    dense (E, C, D) buffer — the redundancy source.
+    """
+    n, d = x.shape
+    e = w1.shape[0]
+    k = r.expert_idx.shape[1]
+    if capacity is None:
+        capacity = int(cdiv(n * k, e) * capacity_factor)
+        capacity = max(capacity, 1)
+
+    rank, _ = _dispatch_ranks(r.expert_idx, e)
+    keep = rank < capacity  # (N, k)
+
+    # Dispatch: scatter token copies into the (E, C, D) buffer.
+    flat_slot = r.expert_idx * capacity + rank  # (N, k)
+    flat_slot = jnp.where(keep, flat_slot, e * capacity)  # drop -> OOB
+    buf = jnp.zeros((e * capacity, d), x.dtype)
+    src = jnp.broadcast_to(x[:, None, :], (n, k, d)).reshape(n * k, d)
+    buf = buf.at[flat_slot.reshape(-1)].set(src, mode="drop")
+    buf = buf.reshape(e, capacity, d)
+
+    # Expert computation as dense batched GeMM — pads are computed too.
+    h = jnp.einsum("ecd,edf->ecf", buf, w1.astype(x.dtype))
+    if b1 is not None:
+        h = h + b1[:, None].astype(x.dtype)
+    if glu_up is not None:
+        u = jnp.einsum("ecd,edf->ecf", buf, glu_up.astype(x.dtype))
+        h = act(h) * u
+    else:
+        h = act(h)
+    y = jnp.einsum("ecf,efd->ecd", h, w2.astype(x.dtype))
+    if b2 is not None:
+        y = y + b2[:, None].astype(x.dtype)
+
+    # Combine: gather each kept copy back, weight by gate, sum over k.
+    y_flat = y.reshape(e * capacity, d)
+    got = y_flat[jnp.minimum(flat_slot, e * capacity - 1).reshape(-1)]
+    got = got.reshape(n, k, d)
+    gates = (r.gates * keep.astype(r.gates.dtype))[..., None].astype(x.dtype)
+    return jnp.sum(got * gates, axis=1)
+
+
+def grouped_dense_moe(
+    x: jax.Array,
+    r: RouterOutput,
+    w1: jax.Array,
+    b1: Optional[jax.Array],
+    w2: jax.Array,
+    b2: Optional[jax.Array],
+    *,
+    act,
+    glu_up: Optional[jax.Array] = None,
+) -> jax.Array:
+    """MegaBlocks(MoE)-like: capacity = worst-case N*k (no drops, all pad).
+
+    Exact (never drops) but computes on a buffer padded to the max possible
+    group size — the static-shape analogue of per-step max-group capacity.
+    """
+    n, _ = x.shape
+    e = w1.shape[0]
+    k = r.expert_idx.shape[1]
+    return dispatch_combine_moe(
+        x, r, w1, b1, w2, b2, act=act,
+        capacity=int(cdiv(n * k, 1)),  # worst case: all copies to one expert
+        glu_up=glu_up,
+    )

@@ -1,0 +1,135 @@
+"""Layer-level expert-specific MoE computation (paper Fig. 3, in-place form).
+
+The full pipeline for one MoE FFN:
+
+  route -> build_reindex -> gather_sorted -> ESMM -> act -> ESMM -> combine
+
+with zero computation redundancy: no capacity factor, no token drop, at most
+BLK-1 pad rows per expert. Autodiff flows through the custom-vjp'd ``esmm``
+(dX via ESMM, dW/db via the fused ESFK), i.e. exactly the paper's Table 5.
+
+Two expert body types are supported:
+  * ``moe_mlp`` — the paper's 2-MLP expert (Swin-MoE, classic GShard FFN).
+  * ``moe_glu`` — gate/up/down GLU experts (Mixtral / Qwen3 / Jamba).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reindex import (
+    ReIndex,
+    build_reindex,
+    combine_scatter,
+    gather_sorted,
+)
+from repro.core.routing import RouterOutput, route
+from repro.kernels import ops
+
+ACTIVATIONS: dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def moe_mlp(
+    x: jax.Array,
+    ri: ReIndex,
+    w1: jax.Array,
+    b1: Optional[jax.Array],
+    w2: jax.Array,
+    b2: Optional[jax.Array],
+    *,
+    act: str = "gelu",
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Paper-form 2-MLP expert FFN over a flat token batch x: (N, D)."""
+    f = ACTIVATIONS[act]
+    xs = gather_sorted(x, ri)
+    h = ops.esmm(xs, w1, b1, ri.block_expert, ri.padded_counts, impl=impl)
+    h = f(h)
+    ys = ops.esmm(h, w2, b2, ri.block_expert, ri.padded_counts, impl=impl)
+    return combine_scatter(ys, ri, x.shape[0])
+
+
+def moe_glu(
+    x: jax.Array,
+    ri: ReIndex,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    act: str = "silu",
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """GLU expert FFN: y = (act(x Wg) * (x Wu)) Wd, routed per token."""
+    f = ACTIVATIONS[act]
+    xs = gather_sorted(x, ri)
+    g = ops.esmm(xs, w_gate, None, ri.block_expert, ri.padded_counts, impl=impl)
+    u = ops.esmm(xs, w_up, None, ri.block_expert, ri.padded_counts, impl=impl)
+    h = f(g) * u
+    ys = ops.esmm(h, w_down, None, ri.block_expert, ri.padded_counts, impl=impl)
+    return combine_scatter(ys, ri, x.shape[0])
+
+
+class MoEOutput(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+    z_loss: jax.Array
+    router: RouterOutput
+
+
+def hexa_moe_ffn(
+    x: jax.Array,
+    params: dict,
+    *,
+    num_experts: int,
+    top_k: int,
+    act: str,
+    glu: bool,
+    blk: int = 128,
+    norm_topk: bool = True,
+    softmax_after_topk: bool = False,
+    noise_rng: Optional[jax.Array] = None,
+    impl: Optional[str] = None,
+) -> MoEOutput:
+    """Complete Hexa-MoE FFN: routing + expert-specific computation.
+
+    x: (N, D) flat tokens. params holds 'router' (D, E) plus either
+    {'w1','b1','w2','b2'} (mlp) or {'w_gate','w_up','w_down'} (glu).
+    """
+    r = route(
+        x,
+        params["router"],
+        top_k,
+        norm_topk=norm_topk,
+        softmax_after_topk=softmax_after_topk,
+        noise_rng=noise_rng,
+    )
+    ri = build_reindex(r.expert_idx, r.gates, num_experts, blk)
+    if glu:
+        y = moe_glu(
+            x,
+            ri,
+            params["w_gate"],
+            params["w_up"],
+            params["w_down"],
+            act=act,
+            impl=impl,
+        )
+    else:
+        y = moe_mlp(
+            x,
+            ri,
+            params["w1"],
+            params.get("b1"),
+            params["w2"],
+            params.get("b2"),
+            act=act,
+            impl=impl,
+        )
+    return MoEOutput(y=y, aux_loss=r.aux_loss, z_loss=r.z_loss, router=r)

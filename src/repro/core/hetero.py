@@ -1,0 +1,119 @@
+"""Heterogeneous-aware workload allocation (paper §4.4, Eq. 1/2).
+
+The paper measures per-device capacity t_i on a proxy task and assigns
+
+  data-centric :  B_i = (1/t_i) / sum_j(1/t_j) * B_global        (Eq. 1)
+  model-centric:  h_i = (1/t_i) / sum_j(1/t_j) * H               (Eq. 2)
+
+with integer rounding that preserves the exact global total. On TPU,
+heterogeneity arises across pod generations / slices and — dynamically — from
+degraded chips (stragglers). The runtime's straggler detector feeds observed
+per-device step latencies back into this planner (see ``runtime.straggler``),
+closing the loop the paper leaves manual.
+
+Also includes the latency model used by ``benchmarks/hetero_alloc.py`` to
+reproduce Table 3 / Figure 11's "optimal split minimises latency" result.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Per-device capacity measurement (paper Table 3)."""
+    name: str
+    proxy_latency_s: float  # t_i from the proxy task
+
+    @property
+    def capacity(self) -> float:
+        return 1.0 / self.proxy_latency_s
+
+
+def proportional_split(
+    latencies: Sequence[float], total: int, *, quantum: int = 1
+) -> list[int]:
+    """Split ``total`` units proportional to 1/t_i (Eq. 1/2), rounded to
+    multiples of ``quantum`` while preserving the exact total.
+
+    ``quantum`` lets model-centric splits stay MXU-aligned (e.g. 128-multiple
+    hidden sub-dimensions) — a TPU adaptation: unaligned tiles waste MXU.
+    """
+    t = np.asarray(latencies, dtype=np.float64)
+    if np.any(t <= 0):
+        raise ValueError("latencies must be positive")
+    if total % quantum != 0:
+        raise ValueError(f"total {total} not a multiple of quantum {quantum}")
+    weights = (1.0 / t) / np.sum(1.0 / t)
+    units = total // quantum
+    raw = weights * units
+    base = np.floor(raw).astype(np.int64)
+    # Largest-remainder method to distribute the leftover units.
+    leftover = units - int(base.sum())
+    order = np.argsort(-(raw - base))
+    base[order[:leftover]] += 1
+    out = (base * quantum).astype(np.int64)
+    assert out.sum() == total
+    return [int(v) for v in out]
+
+
+def plan_data_centric(
+    profiles: Sequence[DeviceProfile], global_batch: int
+) -> list[int]:
+    """Eq. 1: per-device local batch sizes."""
+    return proportional_split(
+        [p.proxy_latency_s for p in profiles], global_batch
+    )
+
+
+def plan_model_centric(
+    profiles: Sequence[DeviceProfile], hidden_size: int, *, quantum: int = 128
+) -> list[int]:
+    """Eq. 2: per-device FFN hidden sub-dimensions (MXU-aligned)."""
+    q = quantum
+    while hidden_size % q != 0 or hidden_size // q < len(profiles):
+        q //= 2
+        if q == 0:
+            raise ValueError("hidden_size too small for the device count")
+    return proportional_split(
+        [p.proxy_latency_s for p in profiles], hidden_size, quantum=q
+    )
+
+
+def step_latency_model(
+    profiles: Sequence[DeviceProfile],
+    shares: Sequence[int],
+    total_work: int,
+    *,
+    fixed_overhead_s: float = 0.0,
+) -> float:
+    """Synchronous-step latency: max over devices of (work share) * t_i /
+    (work unit). A device's time is proportional to its share and its
+    measured per-unit latency; the step completes when the slowest finishes
+    (the all-reduce barrier)."""
+    per_unit = np.array([p.proxy_latency_s for p in profiles]) / total_work
+    times = np.asarray(shares) * per_unit * len(profiles)
+    return float(np.max(times) + fixed_overhead_s)
+
+
+def replan_from_step_times(
+    step_times_s: Sequence[float],
+    current_shares: Sequence[int],
+    total: int,
+    *,
+    quantum: int = 1,
+    smoothing: float = 0.5,
+) -> list[int]:
+    """Runtime straggler mitigation: observed per-device step times imply new
+    capacities (time / share = per-unit latency); re-split proportionally.
+    ``smoothing`` blends old and new implied latencies (EMA) so transient
+    noise does not thrash the allocation."""
+    shares = np.asarray(current_shares, dtype=np.float64)
+    times = np.asarray(step_times_s, dtype=np.float64)
+    per_unit = times / np.maximum(shares, 1)
+    uniform = np.full_like(per_unit, per_unit.mean())
+    blended = smoothing * per_unit + (1 - smoothing) * uniform
+    return proportional_split(blended, total, quantum=quantum)

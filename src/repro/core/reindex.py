@@ -1,0 +1,148 @@
+"""Re-index vector construction (paper §4.2, Algorithm 1) — TPU adaptation.
+
+The CUDA implementation builds a re-index vector with atomicAdd and gathers
+rows inside each kernel. On TPU we build the same logical object with one
+stable sort, and *materialise* the expert-sorted layout with a single gather
+so the Pallas kernels see contiguous, VMEM-tileable blocks:
+
+  - every BLK-row block of the sorted layout belongs to exactly one expert
+    (groups are padded to BLK boundaries with sentinel rows, value -1 in the
+    paper; here the sentinel gathers an all-zero row),
+  - ``block_expert`` is the scalar-prefetch map block -> expert,
+  - the inverse mapping (``row_token``/``row_gate``) drives the gate-weighted
+    scatter-add combine, which is the TPU analogue of the paper's atomicAdd
+    top-k memory optimisation (no (k, N, D) materialisation).
+
+Zero computation redundancy is preserved: padding is at most BLK-1 rows per
+expert, versus capacity-factor padding of dispatch/combine implementations.
+
+All shapes are static: Np = round_up(N*k + E*(BLK-1), BLK).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import round_up
+
+# Default block size: MXU-aligned.
+DEFAULT_BLK = 128
+
+
+class ReIndex(NamedTuple):
+    """Static-shape expert-sorted layout descriptor.
+
+    Attributes:
+      row_id:       (Np,) int32 — flat copy id (token*k + slot) or sentinel N*k.
+      row_token:    (Np,) int32 — source token id, or sentinel N for padding.
+      row_gate:     (Np,) f32   — combine gate, 0 for padding rows.
+      block_expert: (Np//BLK,) int32 — expert owning each BLK-row block.
+      counts:       (E,) int32  — true token-copies per expert.
+      padded_counts:(E,) int32  — counts rounded up to BLK (group extents).
+    """
+    row_id: jax.Array
+    row_token: jax.Array
+    row_gate: jax.Array
+    block_expert: jax.Array
+    counts: jax.Array
+    padded_counts: jax.Array
+
+    @property
+    def num_rows(self) -> int:
+        return self.row_id.shape[0]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.block_expert.shape[0]
+
+
+def padded_rows(n: int, k: int, num_experts: int, blk: int = DEFAULT_BLK) -> int:
+    """Static worst-case number of rows in the sorted layout."""
+    return round_up(n * k + num_experts * (blk - 1), blk)
+
+
+def build_reindex(
+    expert_idx: jax.Array,
+    gates: jax.Array,
+    num_experts: int,
+    blk: int = DEFAULT_BLK,
+) -> ReIndex:
+    """Build the expert-sorted block-padded layout from routing decisions.
+
+    Args:
+      expert_idx: (N, k) int32 routing choices.
+      gates: (N, k) float combine weights.
+      num_experts: E.
+      blk: block size (rows per single-expert block).
+    """
+    n, k = expert_idx.shape
+    nk = n * k
+    np_rows = padded_rows(n, k, num_experts, blk)
+
+    e_flat = expert_idx.reshape(nk)
+    g_flat = gates.reshape(nk).astype(jnp.float32)
+
+    counts = jnp.bincount(e_flat, length=num_experts).astype(jnp.int32)
+    padded_counts = ((counts + blk - 1) // blk * blk).astype(jnp.int32)
+    # Exclusive cumsum of padded group extents: group e spans
+    # [p_offset[e], p_offset[e] + padded_counts[e]).
+    p_offset = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_counts)]
+    )
+    u_offset = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)]
+    )
+
+    # Stable sort by expert: order[r] = flat copy id of the r-th sorted row.
+    order = jnp.argsort(e_flat, stable=True).astype(jnp.int32)
+    e_sorted = e_flat[order]
+    # Rank within the expert group, then destination in the padded layout.
+    rank = jnp.arange(nk, dtype=jnp.int32) - u_offset[e_sorted]
+    dest = p_offset[e_sorted] + rank
+
+    row_id = jnp.full((np_rows,), nk, jnp.int32).at[dest].set(order)
+    row_token = jnp.where(row_id == nk, n, row_id // k).astype(jnp.int32)
+    gp = jnp.concatenate([g_flat, jnp.zeros((1,), jnp.float32)])
+    row_gate = gp[jnp.minimum(row_id, nk)]
+
+    # block -> expert: block b (start s = b*blk) belongs to expert e with
+    # p_offset[e] <= s < p_offset[e+1]. Tail blocks past the last group get
+    # clamped to E-1; their rows are all sentinels so they compute on zeros.
+    starts = jnp.arange(np_rows // blk, dtype=jnp.int32) * blk
+    block_expert = (
+        jnp.searchsorted(p_offset, starts, side="right").astype(jnp.int32) - 1
+    )
+    block_expert = jnp.clip(block_expert, 0, num_experts - 1)
+
+    return ReIndex(
+        row_id=row_id,
+        row_token=row_token,
+        row_gate=row_gate,
+        block_expert=block_expert,
+        counts=counts,
+        padded_counts=padded_counts,
+    )
+
+
+def gather_sorted(x: jax.Array, ri: ReIndex) -> jax.Array:
+    """Materialise the expert-sorted layout: (Np, D) from (N, D) tokens.
+
+    Sentinel rows gather an appended all-zero row, so padded blocks compute
+    on zeros and never contaminate gradients.
+    """
+    xp = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+    return xp[ri.row_token]
+
+
+def combine_scatter(ys: jax.Array, ri: ReIndex, num_tokens: int) -> jax.Array:
+    """Gate-weighted scatter-add combine: (Np, D) sorted rows -> (N, D).
+
+    The TPU analogue of the paper's atomicAdd top-k accumulation: all k
+    routed copies of a token are summed in one scatter, never materialising
+    per-choice output copies.
+    """
+    vals = ys * ri.row_gate[:, None].astype(ys.dtype)
+    out = jnp.zeros((num_tokens, ys.shape[1]), ys.dtype)
+    return out.at[ri.row_token].add(vals, mode="drop")

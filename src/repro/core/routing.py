@@ -1,0 +1,80 @@
+"""Top-k expert routing.
+
+The router is shared by every MoE execution path (expert-specific ops,
+dispatch/combine baseline, grouped-GeMM baseline) so that correctness
+comparisons are apples-to-apples: identical logits -> identical assignment.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class RouterOutput(NamedTuple):
+    expert_idx: jax.Array  # (N, k) int32 — chosen expert per slot
+    gates: jax.Array       # (N, k) float32 — combine weights
+    aux_loss: jax.Array    # scalar — load-balancing auxiliary loss
+    z_loss: jax.Array      # scalar — router z-loss
+    probs: jax.Array       # (N, E) float32 — full router probabilities
+
+
+def route(
+    x: jax.Array,
+    router_w: jax.Array,
+    k: int,
+    *,
+    norm_topk: bool = True,
+    softmax_after_topk: bool = False,
+    noise_rng: Optional[jax.Array] = None,
+    noise_eps: float = 1e-2,
+) -> RouterOutput:
+    """Compute top-k routing for a flat token batch.
+
+    Args:
+      x: (N, D) tokens.
+      router_w: (D, E) router weights.
+      k: number of experts per token.
+      norm_topk: renormalise top-k probabilities to sum to 1 (Qwen-style).
+      softmax_after_topk: softmax over the selected top-k logits only
+        (Mixtral-style) instead of selecting from the full softmax.
+      noise_rng: optional PRNG key for multiplicative jitter (training).
+    """
+    n, _ = x.shape
+    e = router_w.shape[-1]
+    logits = jnp.dot(x.astype(jnp.float32), router_w.astype(jnp.float32))
+    if noise_rng is not None:
+        jitter = jax.random.uniform(
+            noise_rng, logits.shape, jnp.float32, 1.0 - noise_eps, 1.0 + noise_eps
+        )
+        logits = logits * jitter
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    if softmax_after_topk:
+        top_logits, expert_idx = jax.lax.top_k(logits, k)
+        gates = jax.nn.softmax(top_logits, axis=-1)
+    else:
+        gates, expert_idx = jax.lax.top_k(probs, k)
+        if norm_topk:
+            gates = gates / jnp.maximum(
+                jnp.sum(gates, axis=-1, keepdims=True), 1e-9
+            )
+
+    # Switch-Transformer style load-balance loss: E * sum_e f_e * P_e where
+    # f_e is the fraction of token-slots routed to e, P_e the mean prob.
+    one_hot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (N, k, E)
+    f_e = jnp.mean(jnp.sum(one_hot, axis=1), axis=0) / k        # (E,)
+    p_e = jnp.mean(probs, axis=0)                                # (E,)
+    aux_loss = e * jnp.sum(f_e * p_e)
+
+    # Router z-loss stabilises logits at scale (ST-MoE).
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    return RouterOutput(
+        expert_idx=expert_idx.astype(jnp.int32),
+        gates=gates.astype(jnp.float32),
+        aux_loss=aux_loss,
+        z_loss=z_loss,
+        probs=probs,
+    )

@@ -1,0 +1,296 @@
+"""Public expert-specific ops: impl dispatch + custom autodiff.
+
+Three interchangeable implementations of the same zero-redundancy semantics
+over the expert-sorted layout (see ``core.reindex``):
+
+  - ``pallas`` — the paper-faithful TPU kernels (esmm/esfk/ess/estmm);
+    interpret mode on CPU.
+  - ``ragged`` — ``lax.ragged_dot(_general)``: XLA's grouped-GeMM lowering.
+    Used for the multi-pod dry-run/compile path and CPU benchmarks (a Pallas
+    interpret-mode kernel would unroll its grid into the HLO).
+  - ``ref``    — pure-jnp one-hot oracle (tests only).
+
+The backward pass is wired by ``custom_vjp`` exactly as the paper's Table 5:
+dX via ESMM with transposed weights, (dW, db) via the fused ESFK (or the
+unfused ESTMM + ESS pair when ``fused=False``, paper Fig. 12 ablation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common import on_tpu
+from repro.kernels import ref as _ref
+from repro.kernels.esmm import esmm_pallas
+from repro.kernels.esfk import esfk_pallas
+from repro.kernels.ess import ess_pallas
+from repro.kernels.estmm import estmm_pallas
+
+_DEFAULT_IMPL: Optional[str] = None
+_FUSED_BACKWARD: bool = True
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    """Set the process-wide default implementation (None = auto)."""
+    global _DEFAULT_IMPL
+    assert impl in (None, "pallas", "ragged", "blocked", "ref")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    if _DEFAULT_IMPL is not None:
+        return _DEFAULT_IMPL
+    return "pallas" if on_tpu() else "blocked"
+
+
+# ---------------------------------------------------------------------------
+# blocked (batched block-diagonal einsum) implementation
+#
+# Exploits the sorted layout's invariant directly in XLA: every BLK-row
+# block uses ONE expert, so the grouped matmul is a plain batched matmul
+# against per-block gathered weight tiles. Compiled FLOPs equal the
+# zero-redundancy count (Np * D1 * D2 * 2) exactly — unlike
+# lax.ragged_dot, whose CPU lowering computes every group densely (E x
+# redundancy). This is both the dry-run compile path and the fastest
+# CPU execution path; on TPU the Pallas kernels replace it (the per-block
+# weight gather becomes the scalar-prefetched DMA).
+# ---------------------------------------------------------------------------
+
+def _blocked_esmm(xs, w, b, block_expert, transpose_rhs):
+    np_rows = xs.shape[0]
+    nblk = block_expert.shape[0]
+    blk = np_rows // nblk
+    xb = xs.reshape(nblk, blk, -1)
+    wb = w[block_expert]  # (nblk, D1, D2) or (nblk, D2, D1)
+    if transpose_rhs:
+        y = jnp.einsum(
+            "gbk,gnk->gbn", xb, wb, preferred_element_type=xs.dtype
+        )
+    else:
+        y = jnp.einsum(
+            "gbk,gkn->gbn", xb, wb, preferred_element_type=xs.dtype
+        )
+    if b is not None:
+        y = y + b[block_expert][:, None].astype(y.dtype)
+    return y.reshape(np_rows, -1)
+
+
+def _blocked_estmm(x1, x2, block_expert, num_experts):
+    np_rows = x1.shape[0]
+    nblk = block_expert.shape[0]
+    blk = np_rows // nblk
+    per_block = jnp.einsum(
+        "gbd,gbf->gdf",
+        x1.reshape(nblk, blk, -1),
+        x2.reshape(nblk, blk, -1),
+        preferred_element_type=jnp.float32,
+    )
+    out = jnp.zeros((num_experts,) + per_block.shape[1:], jnp.float32)
+    return out.at[block_expert].add(per_block)
+
+
+def set_fused_backward(fused: bool) -> None:
+    """Toggle the ESFK fusion (paper Fig. 12 'fused kernel' ablation)."""
+    global _FUSED_BACKWARD
+    _FUSED_BACKWARD = fused
+
+
+# ---------------------------------------------------------------------------
+# ragged (lax.ragged_dot) implementation
+# ---------------------------------------------------------------------------
+
+def _full_group_sizes(padded_counts: jax.Array, np_rows) -> jax.Array:
+    """Group sizes covering *all* rows: the tail (static over-allocation past
+    the last group) is absorbed into the final group so no row is left with
+    unspecified output. Tail rows are all-zero sentinels, so this is exact."""
+    tail = np_rows - jnp.sum(padded_counts)
+    return padded_counts.at[-1].add(tail.astype(padded_counts.dtype))
+
+
+def _ragged_esmm(xs, w, b, block_expert, padded_counts, transpose_rhs):
+    np_rows = xs.shape[0]
+    gs = _full_group_sizes(padded_counts, np_rows)
+    if transpose_rhs:
+        dn = lax.RaggedDotDimensionNumbers(
+            dot_dimension_numbers=(((1,), (2,)), ((), ())),
+            lhs_ragged_dimensions=[0],
+            rhs_group_dimensions=[0],
+        )
+        y = lax.ragged_dot_general(
+            xs, w, gs, dn, preferred_element_type=xs.dtype
+        )
+    else:
+        y = lax.ragged_dot(xs, w, gs, preferred_element_type=xs.dtype)
+    if b is not None:
+        nblk = block_expert.shape[0]
+        blk = np_rows // nblk
+        y = (
+            y.reshape(nblk, blk, -1) + b[block_expert][:, None].astype(y.dtype)
+        ).reshape(np_rows, -1)
+    return y
+
+
+def _ragged_estmm(x1, x2, padded_counts):
+    gs = _full_group_sizes(padded_counts, x1.shape[0])
+    dn = lax.RaggedDotDimensionNumbers(
+        dot_dimension_numbers=(((0,), (0,)), ((), ())),
+        lhs_ragged_dimensions=[0],
+        rhs_group_dimensions=[],
+    )
+    return lax.ragged_dot_general(
+        x1, x2, gs, dn, preferred_element_type=jnp.float32
+    )
+
+
+def _ragged_ess(x, block_expert, num_experts):
+    blk = x.shape[0] // block_expert.shape[0]
+    row_expert = jnp.repeat(block_expert, blk)
+    return jax.ops.segment_sum(
+        x.astype(jnp.float32),
+        row_expert,
+        num_segments=num_experts,
+        indices_are_sorted=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# impl dispatch (no autodiff)
+# ---------------------------------------------------------------------------
+
+def _esmm_any(impl, transpose_rhs, xs, w, b, block_expert, padded_counts):
+    if impl == "pallas":
+        blk = xs.shape[0] // block_expert.shape[0]
+        return esmm_pallas(
+            xs, w, b, block_expert, transpose_rhs=transpose_rhs, bm=blk
+        )
+    if impl == "ragged":
+        return _ragged_esmm(xs, w, b, block_expert, padded_counts, transpose_rhs)
+    if impl == "blocked":
+        return _blocked_esmm(xs, w, b, block_expert, transpose_rhs)
+    if impl == "ref":
+        return _ref.esmm(xs, w, b, block_expert, transpose_rhs=transpose_rhs)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def _esfk_any(impl, fused, x1, x2, block_expert, padded_counts, need_db):
+    """(dW, db) with db=None when need_db is False."""
+    e = padded_counts.shape[0]
+    if impl == "pallas":
+        blk = x1.shape[0] // block_expert.shape[0]
+        if fused and need_db:
+            dw, db = esfk_pallas(x1, x2, block_expert, padded_counts, bm=blk)
+            return dw, db
+        dw = estmm_pallas(x1, x2, block_expert, padded_counts, bm=blk)
+        db = (
+            ess_pallas(x2, block_expert, padded_counts, bm=blk)
+            if need_db
+            else None
+        )
+        return dw, db
+    if impl == "ragged":
+        dw = _ragged_estmm(x1, x2, padded_counts)
+        db = _ragged_ess(x2, block_expert, e) if need_db else None
+        return dw, db
+    if impl == "blocked":
+        dw = _blocked_estmm(x1, x2, block_expert, e)
+        db = _ragged_ess(x2, block_expert, e) if need_db else None
+        return dw, db
+    if impl == "ref":
+        dw = _ref.estmm(x1, x2, block_expert, e)
+        db = _ref.ess(x2, block_expert, e) if need_db else None
+        return dw, db
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# differentiable esmm (paper Table 5 wiring)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _esmm(impl, transpose_rhs, fused, xs, w, b, block_expert, padded_counts):
+    return _esmm_any(impl, transpose_rhs, xs, w, b, block_expert, padded_counts)
+
+
+def _esmm_fwd(impl, transpose_rhs, fused, xs, w, b, block_expert, padded_counts):
+    y = _esmm_any(impl, transpose_rhs, xs, w, b, block_expert, padded_counts)
+    return y, (xs, w, b is not None, block_expert, padded_counts)
+
+
+def _esmm_bwd(impl, transpose_rhs, fused, res, dy):
+    xs, w, has_b, block_expert, padded_counts = res
+    # dX: ESMM with the opposite weight orientation (paper rows 6/10).
+    dxs = _esmm_any(
+        impl, not transpose_rhs, dy, w, None, block_expert, padded_counts
+    )
+    # dW (ESTMM) + db (ESS), fused as ESFK (paper rows 4/5/8/9).
+    if transpose_rhs:
+        dw, db = _esfk_any(
+            impl, fused, dy, xs, block_expert, padded_counts, has_b
+        )
+    else:
+        dw, db = _esfk_any(
+            impl, fused, xs, dy, block_expert, padded_counts, has_b
+        )
+    dw = dw.astype(w.dtype)
+    if db is not None:
+        db = db.astype(dy.dtype)
+    return (dxs, dw, db if has_b else None, None, None)
+
+
+_esmm.defvjp(_esmm_fwd, _esmm_bwd)
+
+
+def esmm(
+    xs: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array],
+    block_expert: jax.Array,
+    padded_counts: jax.Array,
+    *,
+    transpose_rhs: bool = False,
+    impl: Optional[str] = None,
+    fused: Optional[bool] = None,
+) -> jax.Array:
+    """Differentiable expert-specific matmul on the sorted layout.
+
+    xs: (Np, K); w: (E, K, N) — or (E, N, K) with transpose_rhs; b: (E, N)
+    or None; block_expert/padded_counts from ``core.reindex.build_reindex``.
+    """
+    impl = impl or get_default_impl()
+    fused = _FUSED_BACKWARD if fused is None else fused
+    return _esmm(impl, transpose_rhs, fused, xs, w, b, block_expert, padded_counts)
+
+
+# Non-differentiable public wrappers (tests / ablation benchmarks).
+
+def ess(x, block_expert, padded_counts, *, impl=None):
+    impl = impl or get_default_impl()
+    e = padded_counts.shape[0]
+    if impl == "pallas":
+        blk = x.shape[0] // block_expert.shape[0]
+        return ess_pallas(x, block_expert, padded_counts, bm=blk)
+    if impl in ("ragged", "blocked"):
+        return _ragged_ess(x, block_expert, e)
+    return _ref.ess(x, block_expert, e)
+
+
+def estmm(x1, x2, block_expert, padded_counts, *, impl=None):
+    impl = impl or get_default_impl()
+    e = padded_counts.shape[0]
+    if impl == "pallas":
+        blk = x1.shape[0] // block_expert.shape[0]
+        return estmm_pallas(x1, x2, block_expert, padded_counts, bm=blk)
+    if impl == "ragged":
+        return _ragged_estmm(x1, x2, padded_counts)
+    if impl == "blocked":
+        return _blocked_estmm(x1, x2, block_expert, e)
+    return _ref.estmm(x1, x2, block_expert, e)
+
+
+def esfk(x1, x2, block_expert, padded_counts, *, impl=None, fused=True):
+    impl = impl or get_default_impl()
+    return _esfk_any(impl, fused, x1, x2, block_expert, padded_counts, True)

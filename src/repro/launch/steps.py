@@ -1,0 +1,204 @@
+"""Step builders: train_step (loss+grads+optimizer), prefill_step,
+serve_step — the functions the dry-run lowers and the drivers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.inputs import activation_spec
+from repro.models import lm
+from repro.optim import adamw
+from repro.parallel.sharding import (
+    ParallelConfig,
+    divisible_spec,
+    resolve_spec,
+    tree_shardings,
+)
+
+
+def xent_loss(logits, labels, mask):
+    """Vocab-parallel-safe cross entropy. logits (B,S,[C,]V) f32."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per_tok = lse - ll
+    if per_tok.ndim == 3:  # (B, S, num_codebooks)
+        per_tok = per_tok.mean(-1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per_tok * mask) / denom
+
+
+def chunked_xent(x, params, cfg: ModelConfig, labels, mask,
+                 n_chunks: int = 16, pcfg=None, mesh=None):
+    """Cross entropy over sequence chunks: the (B, S_c, V) logits block is
+    materialised (vocab-sharded) one chunk at a time and rematerialised in
+    backward — peak memory drops by n_chunks vs. full-sequence logits,
+    which otherwise dominate activation memory for 150k-260k vocabularies.
+    x: (B, S, D) final hidden states."""
+    from repro.parallel.sharding import constrain
+
+    b, s, _ = x.shape
+    while s % n_chunks:
+        n_chunks //= 2
+    cs = s // n_chunks
+
+    # Gather the (small, bf16) hidden states over the seq-parallel axis so
+    # chunk slicing is local and every rank computes every chunk with its
+    # vocab shard (balanced vocab-parallel loss).
+    if pcfg is not None and mesh is not None:
+        x = constrain(x, (("dp",), None, None), pcfg, mesh)
+
+    # Localise the D contraction: the embedding's fsdp (D) shard would
+    # otherwise make every logits chunk a full (B,S_c,V) all-reduce over
+    # "data". Gathering the table's D once (a few 10s of MB) instead keeps
+    # logits purely vocab-sharded.
+    if pcfg is not None and mesh is not None:
+        params = dict(params)
+        if cfg.num_codebooks > 1 and "cb_heads" in params:
+            params["cb_heads"] = constrain(
+                params["cb_heads"], (None, None, "tp"), pcfg, mesh)
+        elif cfg.tie_embeddings:
+            params["embed"] = constrain(
+                params["embed"], ("tp", None), pcfg, mesh)
+        elif "head" in params:
+            params["head"] = constrain(
+                params["head"], (None, "tp"), pcfg, mesh)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(x_c, lbl_c, m_c):
+        logits = lm._logits_out(params, x_c, cfg)
+        lg = logits.astype(jnp.float32)
+        mx = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(lg - mx), axis=-1)) + mx[..., 0]
+        ll = jnp.take_along_axis(lg, lbl_c[..., None], axis=-1)[..., 0]
+        per_tok = lse - ll
+        if per_tok.ndim == 3:
+            per_tok = per_tok.mean(-1)
+        return jnp.sum(per_tok * m_c)
+
+    total = jnp.zeros((), jnp.float32)
+    for c in range(n_chunks):
+        sl = slice(c * cs, (c + 1) * cs)
+        total = total + chunk_loss(x[:, sl], labels[:, sl], mask[:, sl])
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Optional[Mesh],
+                 batch_shape3):
+    x_spec = activation_spec(batch_shape3, pcfg, mesh)
+    aw = cfg.moe.aux_weight if cfg.moe else 0.0
+    zw = cfg.moe.z_weight if cfg.moe else 0.0
+
+    def loss_fn(params, batch):
+        hidden, _, aux, z = lm.forward(
+            params, batch, cfg, pcfg, mesh, mode="train", x_spec=x_spec,
+            return_hidden=True,
+        )
+        labels = batch["labels"]
+        mask = batch["loss_mask"]
+        if cfg.frontend == "siglip":
+            # no loss on the image prefix
+            n_img = hidden.shape[1] - (labels.shape[1])
+            if n_img > 0:
+                hidden = hidden[:, n_img:]
+        loss = chunked_xent(hidden, params, cfg, labels, mask,
+                            pcfg=pcfg, mesh=mesh)
+        total = loss + aw * aux + zw * z
+        return total, {"loss": loss, "aux_loss": aux, "z_loss": z}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    mesh: Optional[Mesh],
+    opt_cfg: adamw.OptimizerConfig,
+    batch_shape3,
+):
+    loss_fn = make_loss_fn(cfg, pcfg, mesh, batch_shape3)
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, om = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        return params, opt_state, {**metrics, **om, "total_loss": total}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                      mesh: Optional[Mesh], batch_shape3):
+    x_spec = activation_spec(batch_shape3, pcfg, mesh)
+
+    def prefill_step(params, inputs, cache):
+        logits, new_cache, _, _ = lm.forward(
+            params, inputs, cfg, pcfg, mesh, mode="prefill",
+            cache=cache, x_spec=x_spec,
+        )
+        return logits, new_cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                    mesh: Optional[Mesh], batch_shape3):
+    # decode tokens are replicated over TP (S=1 can't shard).
+    x_spec = activation_spec(batch_shape3, pcfg, mesh)
+
+    def serve_step(params, inputs, cache):
+        logits, new_cache, _, _ = lm.forward(
+            params, inputs, cfg, pcfg, mesh, mode="decode",
+            cache=cache, x_spec=x_spec,
+        )
+        return logits, new_cache
+
+    return serve_step
+
+
+def sharded_params(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Mesh):
+    """(abstract_params_with_shardings, shardings_tree, logical_specs)."""
+    values, specs = lm.abstract_params(cfg)
+    sh = tree_shardings(values, specs, pcfg, mesh)
+    abstract = jax.tree.map(
+        lambda v, s: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=s),
+        values, sh,
+    )
+    return abstract, sh, specs
+
+
+def sharded_opt_state(abstract_params, opt_cfg: adamw.OptimizerConfig,
+                      mesh: Mesh):
+    """Abstract optimizer state whose moments inherit param shardings."""
+    def like(p, dtype):
+        return jax.ShapeDtypeStruct(p.shape, dtype, sharding=p.sharding)
+
+    sd = jnp.dtype(opt_cfg.state_dtype)
+    state = {
+        "m": jax.tree.map(lambda p: like(p, sd), abstract_params),
+        "v": jax.tree.map(lambda p: like(p, sd), abstract_params),
+        "step": jax.ShapeDtypeStruct(
+            (), jnp.int32, sharding=NamedSharding(mesh, P())
+        ),
+    }
+    if opt_cfg.master_fp32:
+        state["master"] = jax.tree.map(
+            lambda p: (
+                like(p, jnp.float32)
+                if jnp.issubdtype(p.dtype, jnp.floating) and p.dtype != jnp.float32
+                else None
+            ),
+            abstract_params,
+        )
+    return state

@@ -1,0 +1,32 @@
+"""Modality frontends.
+
+Per the assignment, [audio]/[vlm] entries specify the transformer BACKBONE
+only — the modality frontend is a STUB: ``input_specs()`` provides
+precomputed frame/patch embeddings. What remains real here is the learned
+projection from the frontend embedding space into the backbone d_model
+(which is part of the backbone checkpoint in both MusicGen and PaliGemma).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Param, normal_init
+
+
+def init_frontend(key, cfg: ModelConfig, dtype) -> dict:
+    if cfg.frontend is None:
+        return {}
+    assert cfg.frontend_dim > 0, cfg.name
+    return {
+        "proj": Param(
+            normal_init(key, (cfg.frontend_dim, cfg.d_model), dtype),
+            (None, "fsdp"),
+        )
+    }
+
+
+def project_frontend(p: dict, feats: jax.Array, dtype) -> jax.Array:
+    """(B, S, frontend_dim) precomputed embeddings -> (B, S, D)."""
+    return feats.astype(dtype) @ p["proj"].astype(dtype)

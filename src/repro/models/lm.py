@@ -1,0 +1,404 @@
+"""LM assembly: parameter init, forward pass (train/prefill/decode),
+KV/state cache management, and loss.
+
+Layers are grouped into *periods* (the lcm of the layer/attention/MoE
+patterns); parameters are stacked over periods and the forward runs a
+``lax.scan`` over periods with the blocks of one period unrolled inside.
+This keeps the HLO size O(period) regardless of depth — essential for the
+72-layer Jamba dry-run — and is where the remat policy (the paper's
+pipeline-shared cache, DESIGN.md §2) is applied.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import frontends, mamba, transformer as tfm, xlstm
+from repro.models.transformer import Ctx
+from repro.parallel.sharding import (
+    ParallelConfig,
+    Param,
+    constrain,
+    normal_init,
+    split_tree,
+)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _ffn_kind(cfg: ModelConfig, idx: int) -> Optional[str]:
+    kind = cfg.layer_kind(idx)
+    if kind == "slstm":
+        return "slstm_ffn"
+    if kind == "mlstm":
+        return None
+    if cfg.is_moe_layer(idx):
+        return "moe"
+    if cfg.d_ff > 0:
+        return "dense"
+    return None
+
+
+def init_block(key, cfg: ModelConfig, idx: int, dtype) -> dict:
+    kind = cfg.layer_kind(idx)
+    ks = jax.random.split(key, 6)
+    p: dict = {"ln1": tfm.init_norm(cfg)}
+    if kind == "attn":
+        p["mixer"] = tfm.init_attention(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mixer"] = mamba.init_mamba(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mixer"] = xlstm.init_mlstm(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mixer"] = xlstm.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.cross_attn and kind == "attn":
+        p["ln_x"] = tfm.init_norm(cfg)
+        p["xattn"] = tfm.init_cross_attention(ks[1], cfg, dtype)
+    fk = _ffn_kind(cfg, idx)
+    if fk is not None:
+        p["ln2"] = tfm.init_norm(cfg)
+        if fk == "moe":
+            p["ffn"] = tfm.init_moe_ffn(ks[2], cfg, dtype)
+        elif fk == "dense":
+            p["ffn"] = tfm.init_dense_ffn(ks[2], cfg, dtype)
+        else:  # slstm_ffn: small GLU
+            f = int(cfg.xlstm.ffn_factor * cfg.d_model)
+            f = (f + 63) // 64 * 64
+            sub = dataclasses.replace(cfg, d_ff=f, glu=True)
+            p["ffn"] = tfm.init_dense_ffn(ks[2], sub, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    """Full parameter tree (Param leaves). eval_shape-safe."""
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    period = cfg.period
+    n_periods = cfg.num_layers // period
+
+    layers = []
+    for pos in range(period):
+        per_period = [
+            init_block(keys[pp * period + pos], cfg, pos, dtype)
+            for pp in range(n_periods)
+        ]
+        stacked = jax.tree.map(
+            lambda *xs: Param(
+                jnp.stack([x.value for x in xs]),
+                (None,) + xs[0].spec,
+            ),
+            *per_period,
+            is_leaf=lambda x: isinstance(x, Param),
+        )
+        layers.append(stacked)
+
+    p = {
+        "embed": Param(
+            normal_init(keys[-1], (cfg.vocab_size, cfg.d_model), dtype),
+            ("tp", "fsdp"),
+        ),
+        "final_norm": tfm.init_norm(cfg),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = Param(
+            normal_init(keys[-2], (cfg.d_model, cfg.vocab_size), dtype),
+            ("fsdp", "tp"),
+        )
+    if cfg.num_codebooks > 1:
+        p["cb_heads"] = Param(
+            normal_init(
+                keys[-2], (cfg.num_codebooks, cfg.d_model, cfg.vocab_size), dtype
+            ),
+            (None, "fsdp", "tp"),
+        )
+    if cfg.frontend:
+        p["frontend"] = frontends.init_frontend(keys[-3], cfg, dtype)
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, logical spec tree) without allocating."""
+    shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    # eval_shape maps over Param leaves; reconstruct specs from a concrete
+    # tiny init of the STRUCTURE only: specs are static, rebuild via init on
+    # the abstract tree (Param is a NamedTuple, eval_shape keeps it intact
+    # with .spec as aux? no — spec is an array-free leaf). Simplest: call
+    # init_params under eval_shape and read spec from the returned tree.
+    values = jax.tree.map(
+        lambda p: p.value, shapes, is_leaf=lambda x: isinstance(x, Param)
+    )
+    specs = jax.tree.map(
+        lambda p: p.spec, shapes, is_leaf=lambda x: isinstance(x, Param)
+    )
+    return values, specs
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Abstract decode cache (stacked over periods per position)."""
+    dtype = jnp.dtype(cfg.dtype)
+    period = cfg.period
+    n_periods = cfg.num_layers // period
+    layers = []
+    for pos in range(period):
+        kind = cfg.layer_kind(pos)
+        if kind == "attn":
+            spec = tfm.cache_spec_attention(cfg, pos, batch, seq_len, dtype)
+        elif kind == "mamba":
+            spec = mamba.cache_spec_mamba(cfg, batch, dtype)
+        elif kind == "mlstm":
+            spec = xlstm.cache_spec_mlstm(cfg, batch, dtype)
+        elif kind == "slstm":
+            spec = xlstm.cache_spec_slstm(cfg, batch)
+        layers.append(
+            jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (n_periods,) + s.shape, s.dtype
+                ),
+                spec,
+            )
+        )
+    return {
+        "layers": layers,
+        "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def cache_logical_specs(cfg: ModelConfig, cache: dict) -> dict:
+    """Logical partition specs for the cache tree (batch -> dp; the cache
+    sequence dim -> sp so long contexts shard; states shard inner dims)."""
+    def leaf_spec(path_leaf):
+        s = path_leaf.shape if hasattr(path_leaf, "shape") else None
+        return s
+
+    layers = []
+    period = cfg.period
+    for pos in range(period):
+        kind = cfg.layer_kind(pos)
+        if kind == "attn":
+            spec = {"k": (None, "dp", "sp", None, None),
+                    "v": (None, "dp", "sp", None, None)}
+        elif kind == "mamba":
+            spec = {"conv": (None, "dp", None, "tp"),
+                    "ssm": (None, "dp", "tp", None)}
+        elif kind == "mlstm":
+            spec = {"c": (None, "dp", None, None, None),
+                    "n": (None, "dp", None, None),
+                    "m": (None, "dp", None),
+                    "conv": (None, "dp", None, "tp")}
+        else:  # slstm
+            spec = {k: (None, "dp", None, None) for k in ("c", "n", "h", "m")}
+        layers.append(spec)
+    return {"layers": layers, "len": ("dp",)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    spec = cache_spec(cfg, batch, seq_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def apply_block(p, x, ctx: Ctx, pos: int, cache):
+    kind = ctx.cfg.layer_kind(pos)
+    h = tfm.apply_norm(p["ln1"], x, ctx.cfg)
+    if kind == "attn":
+        out, new_cache = tfm.apply_attention(p["mixer"], h, ctx, pos, cache)
+    elif kind == "mamba":
+        out, new_cache = mamba.apply_mamba(p["mixer"], h, ctx, cache)
+    elif kind == "mlstm":
+        out, new_cache = xlstm.apply_mlstm(p["mixer"], h, ctx, cache)
+    else:
+        out, new_cache = xlstm.apply_slstm(p["mixer"], h, ctx, cache)
+    x = x + out
+    if "xattn" in p:
+        x = x + tfm.apply_cross_attention(
+            p["xattn"], tfm.apply_norm(p["ln_x"], x, ctx.cfg), ctx
+        )
+    aux = jnp.zeros((), jnp.float32)
+    z = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h2 = tfm.apply_norm(p["ln2"], x, ctx.cfg)
+        if ctx.cfg.is_moe_layer(pos):
+            y, aux, z = tfm.apply_moe_ffn(p["ffn"], h2, ctx)
+        else:
+            y = tfm.apply_dense_ffn(p["ffn"], h2, ctx)
+        x = x + y
+    x = constrain(x, (("dp",), "sp", None), ctx.pcfg, ctx.mesh)
+    return x, new_cache, aux, z
+
+
+def _remat_policy(pcfg: ParallelConfig):
+    cp = jax.checkpoint_policies
+    if pcfg.cache_policy == "janus":
+        return cp.save_only_these_names("gathered_w")
+    if pcfg.cache_policy == "dots":
+        return cp.checkpoint_dots
+    return cp.nothing_saveable
+
+
+def run_layers(layers, x, ctx: Ctx, cache_layers):
+    cfg, pcfg = ctx.cfg, ctx.pcfg
+    period = cfg.period
+
+    def period_fn(carry, xs):
+        x, aux, z = carry
+        lp, lc = xs
+        new_caches = []
+        for pos in range(period):
+            c_in = None if lc is None else lc[pos]
+            x, nc, a, zz = apply_block(lp[pos], x, ctx, pos, c_in)
+            new_caches.append(nc)
+            aux = aux + a
+            z = z + zz
+        return (x, aux, z), new_caches
+
+    if pcfg.remat != "none" and ctx.mode == "train":
+        period_fn = jax.checkpoint(
+            period_fn, policy=_remat_policy(pcfg), prevent_cse=False
+        )
+
+    zero = jnp.zeros((), jnp.float32)
+    if pcfg.scan_layers:
+        (x, aux, z), new_cache = jax.lax.scan(
+            period_fn, (x, zero, zero), (layers, cache_layers)
+        )
+    else:
+        n_periods = cfg.num_layers // period
+        carry = (x, zero, zero)
+        outs = []
+        for pp in range(n_periods):
+            lp = jax.tree.map(lambda v: v[pp], layers)
+            lc = (
+                None
+                if cache_layers is None
+                else jax.tree.map(lambda v: v[pp], cache_layers)
+            )
+            carry, nc = period_fn(carry, (lp, lc))
+            outs.append(nc)
+        x, aux, z = carry
+        new_cache = (
+            None
+            if cache_layers is None
+            else jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        )
+    return x, aux, z, new_cache
+
+
+def _embed_in(params, inputs, cfg: ModelConfig, dtype):
+    emb = params["embed"]
+    if cfg.frontend == "siglip" and "patches" in inputs:
+        patches = frontends.project_frontend(
+            params["frontend"], inputs["patches"], dtype
+        )
+        x_txt = emb[inputs["tokens"]].astype(dtype)
+        x = jnp.concatenate([patches, x_txt], axis=1)
+    elif cfg.frontend == "encodec":
+        x = frontends.project_frontend(
+            params["frontend"], inputs["embeds"], dtype
+        )
+    else:
+        x = emb[inputs["tokens"]].astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def _logits_out(params, x, cfg: ModelConfig):
+    # bf16 operands, f32 accumulation (MXU-native mixed precision).
+    if cfg.num_codebooks > 1:
+        return jnp.einsum(
+            "bsd,cdv->bscv", x, params["cb_heads"],
+            preferred_element_type=jnp.float32,
+        )
+    if cfg.tie_embeddings:
+        return jnp.einsum(
+            "bsd,vd->bsv", x, params["embed"],
+            preferred_element_type=jnp.float32,
+        )
+    return jnp.einsum(
+        "bsd,dv->bsv", x, params["head"],
+        preferred_element_type=jnp.float32,
+    )
+
+
+def forward(
+    params: dict,
+    inputs: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    mesh: Optional[Mesh],
+    *,
+    mode: str,
+    cache: Optional[dict] = None,
+    x_spec: P = P(None, None, None),
+    rng: Optional[jax.Array] = None,
+    return_hidden: bool = False,
+):
+    """Returns (logits, new_cache, aux_loss, z_loss). With
+    ``return_hidden`` the first element is the final normed hidden states
+    instead (callers compute chunked logits/loss themselves)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_in(params, inputs, cfg, dtype)
+    b, s, _ = x.shape
+
+    if mode == "decode":
+        cache_len = cache["len"]
+        positions = cache_len[:, None]
+    else:
+        cache_len = None
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    ctx = Ctx(
+        cfg=cfg,
+        pcfg=pcfg,
+        mesh=mesh,
+        mode=mode,
+        positions=positions,
+        cache_len=cache_len,
+        x_spec=x_spec,
+        rng=rng,
+        cond=inputs.get("cond"),
+    )
+    x = constrain(x, (("dp",), "sp", None), pcfg, mesh)
+    cache_layers = None if cache is None else cache["layers"]
+    x, aux, z, new_cache_layers = run_layers(
+        params["layers"], x, ctx, cache_layers
+    )
+    x = tfm.apply_norm(params["final_norm"], x, cfg)
+
+    if return_hidden:
+        logits = x
+    elif mode == "prefill":
+        logits = _logits_out(params, x[:, -1:], cfg)
+    else:
+        logits = _logits_out(params, x, cfg)
+
+    new_cache = None
+    if cache is not None:
+        new_len = (
+            cache["len"] + s if mode == "decode"
+            else jnp.full((b,), s, jnp.int32)
+        )
+        new_cache = {"layers": new_cache_layers, "len": new_len}
+    n_moe = max(sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers)), 1)
+    return logits, new_cache, aux / n_moe, z / n_moe

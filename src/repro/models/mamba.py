@@ -1,0 +1,214 @@
+"""Mamba-1 selective-SSM layer (for the Jamba hybrid architecture).
+
+Training/prefill uses a *chunked* parallel scan: within a chunk of length C
+the recurrence h_t = a_t ⊙ h_{t-1} + b_t is evaluated with an associative
+scan (log-depth, materialises (B, C, d_inner, d_state) transients only per
+chunk); chunks are chained sequentially with a tiny carry. Decode is the
+O(1)-per-step recurrent update.
+
+TP mapping: everything between in_proj and out_proj is elementwise in
+d_inner, so sharding d_inner over "model" (Megatron-style) keeps the SSM
+entirely local — one psum at out_proj, inserted by GSPMD from the param
+specs. This mirrors how the paper's model-centric TP splits the FFN hidden
+dim (the SSM inner dim plays the same role).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Param, normal_init
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return d_in, m.d_state, m.d_conv, dt_rank
+
+
+def causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal 1D conv. x: (B,S,D); w: (K,D); b: (D,).
+
+    Native grouped conv — never materialises the (B,S,K,D) stack.
+    """
+    k, d = w.shape
+    out = jax.lax.conv_general_dilated(
+        x,
+        w[:, None, :].astype(x.dtype),        # (K, 1, D) WIO
+        window_strides=(1,),
+        padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=d,
+    )
+    return out.astype(jnp.float32) + b
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in, d_state, d_conv, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    # S4D-real initialisation for A.
+    a = jnp.broadcast_to(
+        jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_in, d_state)
+    )
+    dt = jnp.exp(
+        jax.random.uniform(ks[6], (d_in,), jnp.float32)
+        * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    # inverse softplus so softplus(dt_bias) == dt at init
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": Param(normal_init(ks[0], (d, 2 * d_in), dtype), ("fsdp", "tp")),
+        "conv_w": Param(normal_init(ks[1], (d_conv, d_in), dtype, 0.2), (None, "tp")),
+        "conv_b": Param(jnp.zeros((d_in,), jnp.float32), ("tp",)),
+        "x_proj": Param(
+            normal_init(ks[2], (d_in, dt_rank + 2 * d_state), dtype), ("tp", None)
+        ),
+        "dt_proj": Param(normal_init(ks[3], (dt_rank, d_in), dtype), (None, "tp")),
+        "dt_bias": Param(dt_bias, ("tp",)),
+        "a_log": Param(jnp.log(a), ("tp", None)),
+        "d_skip": Param(jnp.ones((d_in,), jnp.float32), ("tp",)),
+        "out_proj": Param(normal_init(ks[4], (d_in, d), dtype), ("tp", "fsdp")),
+    }
+
+
+def _ssm_chunked(u, dt, b_in, c_in, a, chunk):
+    """Selective scan. u: (B,S,Din) bf16; dt: (B,S,Din) f32;
+    b_in/c_in: (B,S,Dst); a: (Din,Dst) f32.
+    Returns y: (B, S, Din) f32 and final state (B, Din, Dst).
+
+    Discretisation happens INSIDE the rematerialised chunk step: the
+    (B, C, Din, Dst) transients never exist at full sequence length.
+    """
+    bsz, s, d_in = u.shape
+    d_state = a.shape[1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+
+    chunked = lambda t: jnp.moveaxis(
+        t.reshape(bsz, nc, chunk, *t.shape[2:]), 1, 0
+    )
+
+    def combine(left, right):
+        la, lb = left
+        ra, rb = right
+        return la + ra, jnp.exp(ra) * lb + rb
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(h, inp):
+        u_c, dt_c, b_c, cc = inp   # (B,C,Din)x2, (B,C,Dst)x2
+        dt_f = dt_c.astype(jnp.float32)
+        log_a = dt_f[..., None] * a[None, None]               # (B,C,Din,Dst)
+        bu = (dt_f * u_c.astype(jnp.float32))[..., None] * \
+            b_c.astype(jnp.float32)[:, :, None, :]
+        acc_a, acc_b = jax.lax.associative_scan(
+            combine, (log_a, bu), axis=1
+        )
+        h_t = acc_b + jnp.exp(acc_a) * h[:, None]             # (B,C,Din,Dst)
+        y = jnp.einsum("bcds,bcs->bcd", h_t, cc.astype(jnp.float32))
+        return h_t[:, -1], y
+
+    h0 = jnp.zeros((bsz, d_in, d_state), jnp.float32)
+    hN, ys = jax.lax.scan(
+        chunk_step, h0,
+        (chunked(u), chunked(dt), chunked(b_in), chunked(c_in)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, d_in)
+    return y, hN
+
+
+def apply_mamba(
+    p: dict,
+    x: jax.Array,
+    ctx,
+    cache: Optional[dict],
+):
+    """x: (B, S, D) -> (y, new_cache). Cache: {"conv": (B, K-1, Din),
+    "ssm": (B, Din, Dst)} for decode."""
+    from repro.parallel.sharding import constrain
+
+    cfg, mode = ctx.cfg, ctx.mode
+    bsz, s, _ = x.shape
+    d_in, d_state, d_conv, dt_rank = _dims(cfg)
+    xz = x @ p["in_proj"].astype(x.dtype)
+    # Megatron-SP transition: the SSM time loop needs a LOCAL seq dim;
+    # parallelism moves to the inner channel dim for the mixer body.
+    # (A two-step seq-local-then-a2a variant was tried and REFUTED:
+    # EXPERIMENTS.md §Perf jamba iteration 2a — GSPMD answered with more
+    # all-reduce, not less.)
+    xz = constrain(xz, (("dp",), None, "tp"), ctx.pcfg, ctx.mesh)
+    xm, z = jnp.split(xz, 2, axis=-1)  # (B, S, Din) each
+
+    new_cache = cache
+    if mode == "decode":
+        assert s == 1 and cache is not None
+        conv_state = jnp.concatenate(
+            [cache["conv"], xm.astype(cache["conv"].dtype)], axis=1
+        )  # (B, K, Din)
+        xm_c = jnp.einsum(
+            "bkd,kd->bd", conv_state.astype(jnp.float32),
+            p["conv_w"].astype(jnp.float32),
+        ) + p["conv_b"]
+        xm = jax.nn.silu(xm_c)[:, None].astype(x.dtype)
+        new_conv = conv_state[:, 1:]
+    else:
+        xm_conv = causal_depthwise_conv(xm, p["conv_w"], p["conv_b"])
+        new_conv = (
+            jnp.pad(xm, [(0, 0), (d_conv - 1, 0), (0, 0)])[:, -(d_conv - 1):]
+            if cache is not None else None
+        )
+        xm = jax.nn.silu(xm_conv).astype(x.dtype)
+
+    proj = xm @ p["x_proj"].astype(x.dtype)
+    proj = constrain(proj, (("dp",), None, None), ctx.pcfg, ctx.mesh)
+    dt_lr, b_in, c_in = jnp.split(
+        proj, [dt_rank, dt_rank + d_state], axis=-1
+    )
+    dt = jax.nn.softplus(
+        dt_lr.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"]
+    )  # (B, S, Din) f32
+    dt = constrain(dt, (("dp",), None, "tp"), ctx.pcfg, ctx.mesh)
+    a = -jnp.exp(p["a_log"])  # (Din, Dst)
+
+    if mode == "decode":
+        uf = xm.astype(jnp.float32)
+        bf = b_in.astype(jnp.float32)
+        cf = c_in.astype(jnp.float32)
+        h = cache["ssm"]
+        da = jnp.exp(dt[:, 0, :, None] * a[None])            # (B,Din,Dst)
+        h = da * h + (dt[:, 0] * uf[:, 0])[..., None] * bf[:, 0][:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, cf[:, 0])[:, None]
+        new_ssm = h
+    else:
+        y, hN = _ssm_chunked(xm, dt, b_in, c_in, a, cfg.mamba.chunk)
+        new_ssm = hN if cache is not None else None
+
+    y = y + p["d_skip"] * xm.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"].astype(x.dtype)
+    # NOTE: constraining out to (dp, sp, -) here was tried and REFUTED
+    # (EXPERIMENTS.md §Perf jamba iteration 2b: GSPMD turned it into MORE
+    # all-reduce, +1.4s t_coll). The block-exit constraint in apply_block
+    # handles the transition.
+
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    return out, new_cache
+
+
+def cache_spec_mamba(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_in, d_state, d_conv, _ = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, d_conv - 1, d_in), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, d_in, d_state), jnp.float32),
+    }

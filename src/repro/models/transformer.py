@@ -1,0 +1,371 @@
+"""Transformer building blocks: norms, dense FFN, GQA attention blocks,
+and the generic block dispatcher used by every architecture.
+
+Parameter trees use ``parallel.sharding.Param`` leaves (value + logical
+spec). Apply functions consume plain value trees (specs are stripped at
+model assembly time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.parallel.moe_parallel import MoEParams, MoEStatic, moe_layer
+from repro.parallel.sharding import (
+    ParallelConfig,
+    Param,
+    constrain,
+    normal_init,
+    ones_init,
+    zeros_init,
+)
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context threaded through apply functions."""
+    cfg: ModelConfig
+    pcfg: ParallelConfig
+    mesh: Optional[Mesh]
+    mode: str                       # train | prefill | decode
+    positions: jax.Array            # (B, S) absolute positions
+    cache_len: Optional[jax.Array]  # (B,) filled length before this step
+    x_spec: P                       # sharding of (B, S, D) activations
+    rng: Optional[jax.Array] = None
+    cond: Optional[jax.Array] = None  # cross-attention memory (B, T, Dc)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": Param(jnp.ones((d,), jnp.float32), (None,))}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> dict:
+    return {
+        "scale": Param(jnp.ones((d,), jnp.float32), (None,)),
+        "bias": Param(jnp.zeros((d,), jnp.float32), (None,)),
+    }
+
+
+def layernorm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "bias" in p:
+        return layernorm(p, x, cfg.norm_eps)
+    return rmsnorm(p, x, cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    return init_layernorm(d) if cfg.norm == "layernorm" else init_rmsnorm(d)
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+# ---------------------------------------------------------------------------
+
+def init_dense_ffn(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    if cfg.glu:
+        return {
+            "w_gate": Param(normal_init(ks[0], (d, f), dtype), ("fsdp", "tp")),
+            "w_up": Param(normal_init(ks[1], (d, f), dtype), ("fsdp", "tp")),
+            "w_down": Param(normal_init(ks[2], (f, d), dtype), ("tp", "fsdp")),
+        }
+    return {
+        "w1": Param(normal_init(ks[0], (d, f), dtype), ("fsdp", "tp")),
+        "b1": Param(jnp.zeros((f,), jnp.float32), ("tp",)),
+        "w2": Param(normal_init(ks[1], (f, d), dtype), ("tp", "fsdp")),
+        "b2": Param(jnp.zeros((d,), jnp.float32), (None,)),
+    }
+
+
+def apply_dense_ffn(p: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
+    """Megatron FFN: AG activations over seq once, hidden sharded over TP,
+    reduce-scatter the down-projection partials back to seq-sharded.
+    Without the explicit hidden constraints GSPMD gathers the full FFN
+    weights instead (EXPERIMENTS.md §Perf, jamba iteration 2)."""
+    from repro.core.espec import ACTIVATIONS
+
+    act = ACTIVATIONS[ctx.cfg.act]
+    hid = (("dp",), None, "tp")
+    out_spec = (("dp",), "sp", None)
+    if ctx.mode == "decode":
+        hid = (("dp",), None, "tp")
+        out_spec = None
+    if "w_gate" in p:
+        g = constrain(x @ p["w_gate"].astype(x.dtype), hid, ctx.pcfg, ctx.mesh)
+        u = constrain(x @ p["w_up"].astype(x.dtype), hid, ctx.pcfg, ctx.mesh)
+        y = (act(g) * u) @ p["w_down"].astype(x.dtype)
+    else:
+        h = constrain(
+            x @ p["w1"].astype(x.dtype) + p["b1"].astype(x.dtype),
+            hid, ctx.pcfg, ctx.mesh,
+        )
+        y = act(h) @ p["w2"].astype(x.dtype) + p["b2"].astype(x.dtype)
+    if out_spec is not None:
+        y = constrain(y, out_spec, ctx.pcfg, ctx.mesh)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN (espec path through the distributed island)
+# ---------------------------------------------------------------------------
+
+def init_moe_ffn(key, cfg: ModelConfig, dtype) -> dict:
+    from repro.parallel.moe_parallel import MOE_PARAM_LOGICAL as L
+
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff, m.num_experts
+    ks = jax.random.split(key, 5)
+    p = {"router": Param(normal_init(ks[0], (d, e), jnp.float32), L["router"])}
+    if cfg.glu:
+        p["w_gate"] = Param(normal_init(ks[1], (e, d, f), dtype), L["w_gate"])
+        p["w_up"] = Param(normal_init(ks[2], (e, d, f), dtype), L["w_up"])
+        p["w_down"] = Param(normal_init(ks[3], (e, f, d), dtype), L["w_down"])
+    else:
+        p["w1"] = Param(normal_init(ks[1], (e, d, f), dtype), L["w1"])
+        p["b1"] = Param(jnp.zeros((e, f), jnp.float32), L["b1"])
+        p["w2"] = Param(normal_init(ks[2], (e, f, d), dtype), L["w2"])
+        p["b2"] = Param(jnp.zeros((e, d), jnp.float32), L["b2"])
+    return p
+
+
+def apply_moe_ffn(p: dict, x: jax.Array, ctx: Ctx):
+    """Returns (y, aux_loss, z_loss). x: (B, S, D)."""
+    m = ctx.cfg.moe
+    ms = MoEStatic(
+        num_experts=m.num_experts,
+        top_k=m.top_k,
+        act=ctx.cfg.act,
+        glu=ctx.cfg.glu,
+        norm_topk=m.norm_topk,
+        softmax_after_topk=m.softmax_after_topk,
+    )
+    mp = MoEParams(
+        router=p["router"],
+        w_gate=p.get("w_gate"),
+        w_up=p.get("w_up"),
+        w_down=p.get("w_down"),
+        w1=p.get("w1"),
+        b1=p.get("b1"),
+        w2=p.get("w2"),
+        b2=p.get("b2"),
+    )
+    return moe_layer(
+        x, mp, ms, ctx.pcfg, ctx.mesh, x_spec=ctx.x_spec, noise_rng=ctx.rng
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": Param(normal_init(ks[0], (d, hq * hd), dtype), ("fsdp", "tp")),
+        "wk": Param(normal_init(ks[1], (d, hkv * hd), dtype), ("fsdp", "tp")),
+        "wv": Param(normal_init(ks[2], (d, hkv * hd), dtype), ("fsdp", "tp")),
+        "wo": Param(normal_init(ks[3], (hq * hd, d), dtype), ("tp", "fsdp")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = Param(jnp.ones((hd,), jnp.float32), (None,))
+        p["k_norm"] = Param(jnp.ones((hd,), jnp.float32), (None,))
+    return p
+
+
+def _head_rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def apply_attention(
+    p: dict,
+    x: jax.Array,
+    ctx: Ctx,
+    layer_idx: int,
+    cache: Optional[dict],
+):
+    """Self-attention (train/prefill/decode). Returns (y, new_cache)."""
+    cfg = ctx.cfg
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    local = cfg.attn_kind(layer_idx) == "local" and cfg.window > 0
+    window = cfg.window if local else None
+
+    # Attention sharding (perf iteration 1, EXPERIMENTS.md §Perf):
+    #  * head-sharded path (heads divisible by TP): gather x ONCE before
+    #    qkv (1 AG), compute with heads sharded, reduce-scatter after wo —
+    #    replaces the baseline's per-tensor q/k/v gathers + all-reduce.
+    #  * seq-sharded path (heads NOT divisible, e.g. phi3's 40, MQA's 8):
+    #    queries stay sequence-sharded (one q chunk), K/V are gathered
+    #    (small: kv heads only) — without this GSPMD silently REPLICATES
+    #    attention over the model axis (26 TB/step for phi3).
+    tp_size = 1
+    if ctx.mesh is not None:
+        tp_axis = ctx.pcfg.axes(ctx.mesh)["tp"]
+        tp_size = ctx.mesh.shape[tp_axis] if tp_axis else 1
+    heads_shardable = hq % tp_size == 0 and hkv % tp_size == 0
+    seq_parallel_attn = ctx.mode != "decode" and not heads_shardable
+
+    if ctx.mode != "decode" and heads_shardable:
+        x = constrain(x, (("dp",), None, None), ctx.pcfg, ctx.mesh)
+
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, hq, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    if ctx.mode != "decode":
+        if heads_shardable:
+            head_spec = (("dp",), None, "tp", None)
+            q = constrain(q, head_spec, ctx.pcfg, ctx.mesh)
+            k = constrain(k, head_spec, ctx.pcfg, ctx.mesh)
+            v = constrain(v, head_spec, ctx.pcfg, ctx.mesh)
+        else:
+            q = constrain(q, (("dp",), "sp", None, None), ctx.pcfg, ctx.mesh)
+    if cfg.qk_norm:
+        q = _head_rms(q, p["q_norm"], cfg.norm_eps)
+        k = _head_rms(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = attn_lib.rope(q, ctx.positions, cfg.rope_theta)
+        k = attn_lib.rope(k, ctx.positions, cfg.rope_theta)
+
+    new_cache = cache
+    if ctx.mode == "decode":
+        assert cache is not None and s == 1
+        s_cache = cache["k"].shape[1]
+        slot = (ctx.cache_len % s_cache).astype(jnp.int32)  # rolling (window)
+
+        def write(buf, new):
+            return jax.vmap(
+                lambda bb, nn, ss: jax.lax.dynamic_update_slice(
+                    bb, nn, (ss, 0, 0)
+                )
+            )(buf, new, slot)
+
+        k_cache = write(cache["k"], k)
+        v_cache = write(cache["v"], v)
+        new_cache = {"k": k_cache, "v": v_cache}
+        valid = jnp.minimum(ctx.cache_len + 1, s_cache)
+        out = attn_lib.decode_attention(
+            q, k_cache, v_cache, valid, softcap=cfg.logit_softcap
+        )
+    else:
+        k_attn, v_attn = k, v
+        q_chunk = 2048
+        if seq_parallel_attn:
+            # gather (small) K/V over the seq axis; queries stay sharded;
+            # a single full-length q chunk keeps the sharded dim unsliced.
+            k_attn = constrain(k, (("dp",), None, None, None),
+                               ctx.pcfg, ctx.mesh)
+            v_attn = constrain(v, (("dp",), None, None, None),
+                               ctx.pcfg, ctx.mesh)
+            q_chunk = s
+        out = attn_lib.chunked_attention(
+            q, k_attn, v_attn,
+            causal=True,
+            window=window,
+            prefix_len=cfg.prefix_len,
+            softcap=cfg.logit_softcap,
+            q_chunk=q_chunk,
+        )
+        if ctx.mode == "prefill" and cache is not None:
+            s_cache = cache["k"].shape[1]
+            if s_cache >= s:
+                pad = [(0, 0), (0, s_cache - s), (0, 0), (0, 0)]
+                new_cache = {
+                    "k": jnp.pad(k, pad).astype(cache["k"].dtype),
+                    "v": jnp.pad(v, pad).astype(cache["v"].dtype),
+                }
+            else:  # windowed layer: keep the tail, rotated so that absolute
+                # position p lives at slot p % s_cache (decode writes there).
+                new_cache = {
+                    "k": jnp.roll(
+                        k[:, s - s_cache:], s, axis=1
+                    ).astype(cache["k"].dtype),
+                    "v": jnp.roll(
+                        v[:, s - s_cache:], s, axis=1
+                    ).astype(cache["v"].dtype),
+                }
+
+    if ctx.mode != "decode" and heads_shardable:
+        out = constrain(out, (("dp",), None, "tp", None), ctx.pcfg, ctx.mesh)
+    y = out.reshape(b, s, hq * hd) @ p["wo"].astype(x.dtype)
+    if ctx.mode != "decode":
+        # reduce-scatter the TP partial sums straight back to seq-sharded
+        y = constrain(y, (("dp",), "sp", None), ctx.pcfg, ctx.mesh)
+    return y, new_cache
+
+
+def cache_spec_attention(cfg: ModelConfig, layer_idx: int, batch: int,
+                         seq_len: int, dtype) -> dict:
+    """Abstract KV cache for one attention layer (window-bounded)."""
+    local = cfg.attn_kind(layer_idx) == "local" and cfg.window > 0
+    s_cache = min(seq_len, cfg.window) if local else seq_len
+    shape = (batch, s_cache, cfg.num_kv_heads, cfg.hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cross attention (musicgen conditioning)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, hq, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    dc = cfg.cross_d
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": Param(normal_init(ks[0], (d, hq * hd), dtype), ("fsdp", "tp")),
+        "wk": Param(normal_init(ks[1], (dc, hq * hd), dtype), (None, "tp")),
+        "wv": Param(normal_init(ks[2], (dc, hq * hd), dtype), (None, "tp")),
+        "wo": Param(normal_init(ks[3], (hq * hd, d), dtype), ("tp", "fsdp")),
+    }
+
+
+def apply_cross_attention(p: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
+    cfg = ctx.cfg
+    b, s, d = x.shape
+    hq, hd = cfg.num_heads, cfg.hd
+    cond = ctx.cond.astype(x.dtype)
+    t = cond.shape[1]
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, hq, hd)
+    k = (cond @ p["wk"].astype(x.dtype)).reshape(b, t, hq, hd)
+    v = (cond @ p["wv"].astype(x.dtype)).reshape(b, t, hq, hd)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * hd ** -0.5
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return out.reshape(b, s, hq * hd) @ p["wo"].astype(x.dtype)

@@ -1,0 +1,317 @@
+"""xLSTM layers: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential) — for the xlstm-350m architecture.
+
+mLSTM trains with the chunkwise form: within a chunk the exponential-gating
+decay structure is an attention-like (C x C) matrix per head (stabilised by
+a running max m); across chunks a (hd x hd) matrix memory is carried. This
+is the TPU-friendly shape — per-chunk work is dense matmuls. Decode is the
+O(hd^2) recurrent update, which is what makes xlstm a long_500k architecture.
+
+sLSTM has a true sequential dependency through its block-diagonal recurrent
+matrix, so it runs as a lax.scan over time (cheap: scalar memory per
+channel).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Param, normal_init
+
+NEG = -1e30
+
+
+def _dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_in = int(x.proj_factor * cfg.d_model)
+    nh = cfg.num_heads
+    hd = d_in // nh
+    return d_in, nh, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in, nh, hd = _dims(cfg)
+    kconv = cfg.xlstm.conv_kernel
+    ks = jax.random.split(key, 8)
+    return {
+        "up": Param(normal_init(ks[0], (d, 2 * d_in), dtype), ("fsdp", "tp")),
+        "conv_w": Param(normal_init(ks[1], (kconv, d_in), dtype, 0.2), (None, "tp")),
+        "conv_b": Param(jnp.zeros((d_in,), jnp.float32), ("tp",)),
+        "wq": Param(normal_init(ks[2], (d_in, d_in), dtype), ("tp", None)),
+        "wk": Param(normal_init(ks[3], (d_in, d_in), dtype), ("tp", None)),
+        "wv": Param(normal_init(ks[4], (d_in, d_in), dtype), ("tp", None)),
+        "w_if": Param(normal_init(ks[5], (d_in, 2 * nh), dtype), ("tp", None)),
+        "b_if": Param(
+            jnp.concatenate(
+                [jnp.zeros((nh,), jnp.float32), 3.0 * jnp.ones((nh,), jnp.float32)]
+            ),
+            (None,),
+        ),
+        "down": Param(normal_init(ks[6], (d_in, d), dtype), ("tp", "fsdp")),
+    }
+
+
+from repro.models.mamba import causal_depthwise_conv as _causal_conv  # noqa: E402
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk):
+    """q/k/v: (B,S,NH,HD) any dtype; log_i/log_f: (B,S,NH) f32.
+    Returns y (B,S,NH,HD) f32 and final (C, n, m) state."""
+    bsz, s, nh, hd = q.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+
+    # Keep scan inputs in the storage dtype (bf16); cast per chunk inside
+    # the rematerialised step so f32 copies never exist at full seq length.
+    out_dtype = v.dtype
+    q = q.reshape(bsz, nc, chunk, nh, hd)
+    k = k.reshape(bsz, nc, chunk, nh, hd)
+    v = v.reshape(bsz, nc, chunk, nh, hd)
+    log_i = log_i.reshape(bsz, nc, chunk, nh)
+    fcum = jnp.cumsum(log_f.reshape(bsz, nc, chunk, nh), axis=2)
+    fsum = fcum[:, :, -1]  # (B, nc, NH)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def step(carry, inp):
+        c_mat, n_vec, m_run = carry  # (B,NH,HD,HD), (B,NH,HD), (B,NH)
+        qc, kc, vc, li, fc, ft = inp  # per-chunk slices
+        qc = qc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32) / (hd ** 0.5)
+        vc = vc.astype(jnp.float32)
+        # Intra-chunk pair log-weights D[t,s] = fcum_t - fcum_s + i_s, s<=t.
+        dmat = fc[:, :, None, :] - fc[:, None, :, :] + li[:, None, :, :]
+        dmat = jnp.where(tri[None, :, :, None], dmat, NEG)   # (B,C,C,NH)
+        inter_log = fc + m_run[:, None, :]                   # (B,C,NH)
+        m_t = jnp.maximum(jnp.max(dmat, axis=2), inter_log)  # (B,C,NH)
+        w_pair = jnp.exp(dmat - m_t[:, :, None, :])          # (B,C,C,NH)
+        w_inter = jnp.exp(inter_log - m_t)                   # (B,C,NH)
+
+        logits = jnp.einsum("bthd,bshd->btsh", qc, kc)       # (B,C,C,NH)
+        num = (
+            jnp.einsum("btsh,bshd->bthd", logits * w_pair, vc)
+            + jnp.einsum("bthd,bhde->bthe", qc, c_mat) * w_inter[..., None]
+        )
+        n_t = (
+            jnp.einsum("btsh,bshd->bthd", w_pair, kc)
+            + w_inter[..., None] * n_vec[:, None]
+        )
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", qc, n_t)), jnp.exp(-m_t)
+        )
+        y = num / den[..., None]
+
+        # Chunk-end state.
+        end_log = ft[:, None, :] - fc + li                   # (B,C,NH)
+        m_end = jnp.maximum(ft + m_run, jnp.max(end_log, axis=1))
+        w_end = jnp.exp(end_log - m_end[:, None, :])         # (B,C,NH)
+        decay = jnp.exp(ft + m_run - m_end)                  # (B,NH)
+        c_new = decay[..., None, None] * c_mat + jnp.einsum(
+            "bsh,bshd,bshe->bhde", w_end, kc, vc
+        )
+        n_new = decay[..., None] * n_vec + jnp.einsum(
+            "bsh,bshd->bhd", w_end, kc
+        )
+        return (c_new, n_new, m_end), y.astype(out_dtype)
+
+    c0 = jnp.zeros((bsz, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((bsz, nh, hd), jnp.float32)
+    m0 = jnp.zeros((bsz, nh), jnp.float32)
+    (cN, nN, mN), ys = jax.lax.scan(
+        step,
+        (c0, n0, m0),
+        tuple(
+            jnp.moveaxis(t, 1, 0)
+            for t in (q, k, v, log_i, fcum, fsum)
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, nh, hd)
+    return y, (cN, nN, mN)
+
+
+def _mlstm_step(q, k, v, log_i, log_f, state):
+    """Single decode step. q/k/v: (B,NH,HD); gates: (B,NH)."""
+    c_mat, n_vec, m_run = state
+    hd = q.shape[-1]
+    k = k / (hd ** 0.5)
+    m_new = jnp.maximum(log_f + m_run, log_i)
+    decay = jnp.exp(log_f + m_run - m_new)
+    inw = jnp.exp(log_i - m_new)
+    c_new = decay[..., None, None] * c_mat + inw[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_new = decay[..., None] * n_vec + inw[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), jnp.exp(-m_new)
+    )
+    y = num / den[..., None]
+    return y, (c_new, n_new, m_new)
+
+
+def apply_mlstm(p, x, ctx, cache: Optional[dict]):
+    """x: (B,S,D) -> (y, cache'). cache: {"c","n","m","conv"}."""
+    from repro.parallel.sharding import constrain
+
+    cfg, mode = ctx.cfg, ctx.mode
+    bsz, s, _ = x.shape
+    d_in, nh, hd = _dims(cfg)
+    xz = x @ p["up"].astype(x.dtype)
+    # The recurrent head structure (nh=4) is too narrow for wide TP: the
+    # mixer body runs replicated over "model" (xlstm-scale models are small;
+    # see DESIGN.md §4 / the roofline table's honest verdict on this arch).
+    xz = constrain(xz, (("dp",), None, None), ctx.pcfg, ctx.mesh)
+    xm, z = jnp.split(xz, 2, axis=-1)
+
+    kconv = cfg.xlstm.conv_kernel
+    if mode == "decode":
+        conv_in = jnp.concatenate(
+            [cache["conv"], xm.astype(cache["conv"].dtype)], axis=1
+        )
+        xc = jnp.einsum(
+            "bkd,kd->bd", conv_in.astype(jnp.float32),
+            p["conv_w"].astype(jnp.float32),
+        ) + p["conv_b"]
+        xc = jax.nn.silu(xc)[:, None].astype(x.dtype)
+        new_conv = conv_in[:, 1:]
+    else:
+        xc = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"]))
+        xc = xc.astype(x.dtype)
+        new_conv = (
+            jnp.pad(xm, [(0, 0), (kconv - 1, 0), (0, 0)])[:, -(kconv - 1):]
+            if cache is not None else None
+        )
+
+    q = (xc @ p["wq"].astype(x.dtype)).reshape(bsz, s, nh, hd)
+    k = (xc @ p["wk"].astype(x.dtype)).reshape(bsz, s, nh, hd)
+    v = (xm @ p["wv"].astype(x.dtype)).reshape(bsz, s, nh, hd)
+    gif = (xc @ p["w_if"].astype(x.dtype)).astype(jnp.float32) + p["b_if"]
+    log_i, f_pre = jnp.split(gif, 2, axis=-1)           # (B,S,NH) each
+    log_f = jax.nn.log_sigmoid(f_pre)
+
+    if mode == "decode":
+        state = (cache["c"], cache["n"], cache["m"])
+        y, new_state = _mlstm_step(
+            q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), log_i[:, 0], log_f[:, 0], state,
+        )
+        y = y[:, None]
+    else:
+        y, new_state = _mlstm_chunked(q, k, v, log_i, log_f, cfg.xlstm.chunk)
+
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["down"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "c": new_state[0], "n": new_state[1], "m": new_state[2],
+            "conv": new_conv,
+        }
+    return out, new_cache
+
+
+def cache_spec_mlstm(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_in, nh, hd = _dims(cfg)
+    kconv = cfg.xlstm.conv_kernel
+    return {
+        "c": jax.ShapeDtypeStruct((batch, nh, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, kconv - 1, d_in), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    return {
+        # input projections for 4 gates (i, f, z, o)
+        "w_in": Param(normal_init(ks[0], (d, 4 * d), dtype), ("fsdp", "tp")),
+        # block-diagonal recurrent weights, per head
+        "r": Param(normal_init(ks[1], (nh, hd, 4 * hd), dtype), (None, None, None)),
+        "b": Param(
+            jnp.concatenate(
+                [jnp.zeros((d,)), 3.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]
+            ).astype(jnp.float32),
+            (None,),
+        ),
+    }
+
+
+def _slstm_scan(gates_in, r, b, nh, hd, state):
+    """gates_in: (B,S,4D) precomputed input contributions."""
+    bsz, s, _ = gates_in.shape
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def step(carry, g_t):
+        c, n, h, m = carry  # (B,NH,HD) x3, (B,NH,HD)
+        g_t = g_t.astype(jnp.float32)
+        rec = jnp.einsum(
+            "bhd,hdk->bhk", h, r.astype(jnp.float32)
+        )  # (B,NH,4HD)
+        g = g_t.reshape(bsz, nh, 4, hd) + rec.reshape(bsz, nh, 4, hd) \
+            + b.reshape(nh, 4, hd)[None]
+        i_pre, f_pre, z_pre, o_pre = (g[:, :, j] for j in range(4))
+        log_f = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        i_g = jnp.exp(i_pre - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        z_g = jnp.tanh(z_pre)
+        o_g = jax.nn.sigmoid(o_pre)
+        c_new = f_g * c + i_g * z_g
+        n_new = jnp.maximum(f_g * n + i_g, 1e-6)
+        h_new = o_g * c_new / n_new
+        return (c_new, n_new, h_new, m_new), h_new.astype(jnp.bfloat16)
+
+    gseq = jnp.moveaxis(gates_in.reshape(bsz, s, 4 * nh * hd), 1, 0)
+    (c, n, h, m), hs = jax.lax.scan(step, state, gseq)
+    return jnp.moveaxis(hs, 0, 1), (c, n, h, m)
+
+
+def apply_slstm(p, x, ctx, cache: Optional[dict]):
+    from repro.parallel.sharding import constrain
+
+    cfg, mode = ctx.cfg, ctx.mode
+    bsz, s, d = x.shape
+    nh = cfg.num_heads
+    hd = d // nh
+    gates_in = x @ p["w_in"].astype(x.dtype)  # (B,S,4D)
+    gates_in = constrain(gates_in, (("dp",), None, None), ctx.pcfg, ctx.mesh)
+    if cache is not None and mode == "decode":
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z = jnp.zeros((bsz, nh, hd), jnp.float32)
+        state = (z, z, z, z)
+    hs, new_state = _slstm_scan(gates_in, p["r"], p["b"], nh, hd, state)
+    y = hs.reshape(bsz, s, d).astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(zip(("c", "n", "h", "m"), new_state))
+    return y, new_cache
+
+
+def cache_spec_slstm(cfg: ModelConfig, batch: int) -> dict:
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    shp = (batch, nh, hd)
+    return {
+        k: jax.ShapeDtypeStruct(shp, jnp.float32) for k in ("c", "n", "h", "m")
+    }

@@ -1,0 +1,71 @@
+"""Error-feedback int8 gradient compression for thin cross-pod links.
+
+The inter-pod (DCN / optical) hop is the thinnest link in a multi-pod mesh;
+compressing the data-parallel gradient reduction over the "pod" axis cuts
+that traffic 2x (bf16) / 4x (f32). Error feedback keeps the compression
+unbiased over time: the quantisation residual is carried to the next step
+(Seide et al.; 1-bit Adam lineage).
+
+``compressed_psum`` is collective-correct: the shared scale is agreed with a
+(psum, max) of per-pod maxima, then int8 payloads are summed as int32 and
+dequantised — associative, so the result is exact for the quantised values.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(scale, 1e-30))
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_roundtrip(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(reconstruction, residual) for a single tensor (local use/tests)."""
+    scale = jnp.max(jnp.abs(x)).astype(jnp.float32) / 127.0
+    q = quantize_int8(x, scale)
+    rec = dequantize_int8(q, scale).astype(x.dtype)
+    return rec, x - rec
+
+
+def compressed_psum(
+    g: jax.Array,
+    axis_name: str,
+    residual: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """psum over ``axis_name`` with int8 payload + error feedback.
+
+    Must be called inside a shard_map that is manual over ``axis_name``.
+    Returns (summed_gradient, new_residual).
+    """
+    gf = g.astype(jnp.float32)
+    if residual is not None:
+        gf = gf + residual
+    scale = lax.pmax(jnp.max(jnp.abs(gf)), axis_name) / 127.0
+    q = quantize_int8(gf, scale)
+    local_rec = dequantize_int8(q, scale)
+    new_residual = gf - local_rec
+    total = lax.psum(q.astype(jnp.int32), axis_name)
+    out = dequantize_int8(total, scale).astype(g.dtype)
+    return out, new_residual.astype(g.dtype)
+
+
+def tree_compressed_psum(
+    grads: Any, axis_name: str, residuals: Optional[Any]
+) -> tuple[Any, Any]:
+    if residuals is None:
+        residuals = jax.tree.map(lambda g: jnp.zeros_like(g), grads)
+    pairs = jax.tree.map(
+        lambda g, r: compressed_psum(g, axis_name, r), grads, residuals
+    )
+    out = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return out, res

@@ -1,0 +1,195 @@
+"""Sharding substrate: logical axes, parameter trees, parallel config.
+
+Logical axis names used by every model definition:
+
+  "fsdp"  — ZeRO-3 style parameter sharding, gathered at use. Maps to the
+            ("pod", "data") mesh axes (the paper's *data-centric* gathering).
+  "tp"    — tensor parallelism, kept sharded through compute. Maps to
+            "model" (the paper's *model-centric* hidden-dim split).
+  "dp"    — batch data parallelism: ("pod", "data").
+  "sp"    — sequence parallelism for activations: "model".
+
+The paper's two configurations are corners of this family (DESIGN.md §3):
+model-centric disables "fsdp" (params replicated over data, TP compute);
+data-centric folds "tp" into the gather (params fully gathered at use, no
+TP compute). ``ParallelConfig.mode`` selects the mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Param:
+    """A parameter leaf: value (or ShapeDtypeStruct) + logical spec.
+
+    Registered as a pytree node with ``spec`` as static aux data, so Param
+    trees pass through jax.eval_shape (abstract init for the dry-run).
+    """
+    __slots__ = ("value", "spec")
+
+    def __init__(self, value: Any, spec: tuple):
+        self.value = value
+        self.spec = tuple(spec)
+
+    def __repr__(self):
+        return f"Param({self.value!r}, spec={self.spec})"
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.spec),
+    lambda spec, children: Param(children[0], spec),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_tree(tree):
+    """Split a tree of Param into (values, logical_specs)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    specs = jax.tree.map(lambda p: p.spec, tree, is_leaf=is_param)
+    return values, specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How logical axes map onto the physical mesh.
+
+    mode:
+      "hybrid"        — fsdp -> (pod, data), tp -> model  (default at scale)
+      "model_centric" — fsdp -> (),          tp -> model  (paper §4.3 TP)
+      "data_centric"  — fsdp -> ALL axes,    tp -> ()     (paper §4.3 gather)
+      "ep"            — expert parallelism baseline (all-to-all)
+    collective_schedule:
+      "ag_ar" — paper-faithful: tokens replicated in TP, outputs all-reduced.
+      "ag_rs" — bandwidth-optimal: all-gather in, reduce-scatter out (SP).
+    cache_policy:
+      "shared_cache" — paper's pipeline-shared cache: gathered params are NOT
+                       saved for backward (remat re-gathers per layer).
+      "janus"        — retain gathered params for backward (memory baseline).
+      "none"         — no remat at all.
+    """
+    mode: str = "hybrid"
+    collective_schedule: str = "ag_rs"
+    cache_policy: str = "shared_cache"
+    remat: str = "block"          # none | block
+    blk: int = 128                # expert-sorted layout block size
+    impl: Optional[str] = None    # kernel impl override
+    capacity_factor: float = 1.25 # EP baseline only
+    scan_layers: bool = True
+
+    def axes(self, mesh: Mesh) -> dict:
+        names = list(mesh.axis_names)
+        dp = tuple(n for n in ("pod", "data") if n in names)
+        tp = "model" if "model" in names else None
+        if self.mode == "model_centric":
+            return {"fsdp": (), "tp": tp, "dp": dp, "sp": tp}
+        if self.mode == "data_centric":
+            # paper §4.3: PURE data parallelism — every device computes its
+            # own batch shard; params are sharded over the whole mesh and
+            # gathered at use (pipeline-shared cache bounds residency).
+            all_axes = dp + ((tp,) if tp else ())
+            return {"fsdp": all_axes, "tp": None, "dp": all_axes, "sp": None}
+        if self.mode in ("hybrid", "ep"):
+            return {"fsdp": dp, "tp": tp, "dp": dp, "sp": tp}
+        raise ValueError(self.mode)
+
+
+def resolve_spec(logical: Sequence, cfg: ParallelConfig, mesh: Mesh) -> P:
+    """Translate a logical spec tuple into a physical PartitionSpec."""
+    table = cfg.axes(mesh)
+    out = []
+    for entry in logical:
+        if entry is None:
+            out.append(None)
+            continue
+        parts = entry if isinstance(entry, tuple) else (entry,)
+        phys: list = []
+        for p in parts:
+            m = table.get(p, p)
+            if m is None or m == ():
+                continue
+            phys.extend(m if isinstance(m, tuple) else (m,))
+        # Drop axes whose mesh extent doesn't divide... left to callers; XLA
+        # requires divisibility, configs are chosen to satisfy it.
+        if not phys:
+            out.append(None)
+        elif len(phys) == 1:
+            out.append(phys[0])
+        else:
+            out.append(tuple(phys))
+    return P(*out)
+
+
+def _dim_sizes(mesh: Mesh, spec: P) -> list[int]:
+    sizes = []
+    for entry in spec:
+        if entry is None:
+            sizes.append(1)
+        elif isinstance(entry, tuple):
+            sizes.append(int(np.prod([mesh.shape[a] for a in entry])))
+        else:
+            sizes.append(mesh.shape[entry])
+    return sizes
+
+
+def divisible_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop spec entries that do not divide the corresponding dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep: list = []
+        extent = 1
+        for a in axes:
+            if dim % (extent * mesh.shape[a]) == 0:
+                keep.append(a)
+                extent *= mesh.shape[a]
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def tree_shardings(values, logical_specs, cfg: ParallelConfig, mesh: Mesh):
+    """NamedShardings for a whole (already split) value tree."""
+    def one(v, spec):
+        phys = resolve_spec(spec, cfg, mesh)
+        phys = divisible_spec(v.shape, phys, mesh)
+        return NamedSharding(mesh, phys)
+    return jax.tree.map(one, values, logical_specs)
+
+
+def constrain(x, spec: Sequence, cfg: ParallelConfig, mesh: Optional[Mesh]):
+    """with_sharding_constraint via logical names (no-op without a mesh)."""
+    if mesh is None:
+        return x
+    phys = divisible_spec(x.shape, resolve_spec(spec, cfg, mesh), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, phys))
+
+
+# ---------------------------------------------------------------------------
+# initializers (pure, eval_shape friendly)
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def zeros_init(key, shape, dtype, scale: float = 0.0):
+    del key, scale
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype, scale: float = 0.0):
+    del key, scale
+    return jnp.ones(shape, dtype)

@@ -1,0 +1,57 @@
+"""Elastic scaling: choose a mesh for whatever devices survive.
+
+Checkpoints are mesh-agnostic (logical arrays), so elasticity reduces to:
+(1) pick a new (data, model) factorisation for the surviving device count,
+(2) re-apply shardings at restore. ``choose_mesh_shape`` prefers keeping the
+model axis at the architecture's minimum TP degree (enough HBM per shard)
+and gives the rest to data parallelism; the batch is re-split by the
+heterogeneous planner if the surviving pool is uneven.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from repro.common import tree_bytes
+
+
+def choose_mesh_shape(
+    num_devices: int,
+    *,
+    min_model: int = 1,
+    max_model: Optional[int] = None,
+    param_bytes: Optional[int] = None,
+    hbm_bytes: int = 16 * 2**30,
+) -> tuple[int, int]:
+    """Largest (data, model) grid with model >= minimum TP for memory.
+
+    If ``param_bytes`` is given, min_model is raised until params (+2x for
+    optimizer) fit per device under pure TP+FSDP sharding heuristics.
+    """
+    if param_bytes is not None:
+        # model axis must be wide enough that one TP-sharded copy of the
+        # (bf16) parameters occupies at most half a chip's HBM — the
+        # residency a decode/serving replica needs.
+        while (
+            min_model < num_devices
+            and param_bytes / min_model > hbm_bytes * 0.5
+        ):
+            min_model *= 2
+    model = min_model
+    max_model = max_model or num_devices
+    while num_devices % model != 0 and model <= max_model:
+        model += 1
+    model = min(model, max_model, num_devices)
+    data = num_devices // model
+    return data, model
+
+
+def make_mesh(shape: Sequence[int], names: Sequence[str],
+              devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    import numpy as np
+
+    arr = np.array(devices[: int(np.prod(shape))]).reshape(tuple(shape))
+    return Mesh(arr, tuple(names))

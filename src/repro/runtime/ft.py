@@ -1,0 +1,109 @@
+"""Fault tolerance: checkpoint policy, preemption handling, retry loop.
+
+The training driver wraps its step loop in ``run_with_recovery``:
+
+  * periodic async checkpoints (every ``save_every`` steps),
+  * a SIGTERM/SIGINT handler that requests an immediate checkpoint and a
+    clean exit (TPU preemption notice),
+  * on step failure (device error, NaN-loss watchdog): restore the latest
+    checkpoint and continue, up to ``max_failures`` times — the
+    single-controller analogue of a coordinated multi-host restart,
+  * deterministic data resume: the data pipeline is a pure function of the
+    step counter, so restore(step) replays the exact remaining stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str = "checkpoints"
+    save_every: int = 100
+    keep: int = 3
+    max_failures: int = 3
+    nan_is_failure: bool = True
+
+
+class PreemptionFlag:
+    """Set by SIGTERM/SIGINT; polled by the step loop."""
+
+    def __init__(self):
+        self.flag = False
+        self._orig = {}
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                self._orig[sig] = signal.signal(sig, self._handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.flag = True
+
+    def restore_handlers(self):
+        for sig, h in self._orig.items():
+            signal.signal(sig, h)
+
+
+def run_with_recovery(
+    *,
+    state: Any,
+    step_fn: Callable[[Any, int], tuple[Any, dict]],
+    start_step: int,
+    num_steps: int,
+    ft: FTConfig,
+    shardings: Optional[Any] = None,
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+) -> tuple[Any, int]:
+    """Run ``step_fn(state, step) -> (state, metrics)`` with checkpointing
+    and restore-on-failure. Returns (final_state, last_step)."""
+    saver = ckpt.AsyncSaver()
+    preempt = PreemptionFlag()
+    failures = 0
+    step = start_step
+
+    def save(sync=False):
+        saver.save(ft.ckpt_dir, step, state, meta={"step": step})
+        if sync:
+            saver.wait()
+        ckpt.gc_old(ft.ckpt_dir, ft.keep)
+
+    while step < num_steps:
+        try:
+            new_state, metrics = step_fn(state, step)
+            if ft.nan_is_failure and "loss" in metrics:
+                if not np.isfinite(float(metrics["loss"])):
+                    raise FloatingPointError(f"non-finite loss at {step}")
+            state = new_state
+            step += 1
+            if on_metrics:
+                on_metrics(step, metrics)
+            if step % ft.save_every == 0:
+                save()
+            if preempt.flag:
+                save(sync=True)
+                break
+        except Exception as e:  # noqa: BLE001 — any step failure
+            failures += 1
+            if failures > ft.max_failures:
+                raise
+            last = ckpt.latest_step(ft.ckpt_dir)
+            if last is None:
+                raise RuntimeError("failure before first checkpoint") from e
+            saver.wait()
+            state, meta = ckpt.restore(ft.ckpt_dir, last, state, shardings)
+            step = int(meta["step"])
+            print(f"[ft] step failure ({e!r}); restored step {step}, "
+                  f"failure {failures}/{ft.max_failures}")
+
+    saver.wait()
+    preempt.restore_handlers()
+    return state, step

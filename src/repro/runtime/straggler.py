@@ -1,0 +1,65 @@
+"""Straggler detection feeding the heterogeneous-aware planner.
+
+The paper (§4.4) measures device capacity once, offline, with a proxy task.
+At 1000-node scale capacity is *dynamic*: thermal throttling, ECC retries
+and preemption-neighbour noise degrade individual workers. This module
+closes the loop: observed per-worker step times -> implied capacities ->
+``core.hetero.replan_from_step_times`` -> new batch shares for the data
+pipeline (Eq. 1 applied online).
+
+In a single-controller SPMD run the per-worker timings arrive through the
+``report()`` interface (e.g. from host telemetry); the logic is pure and
+unit-tested with synthetic timelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.hetero import proportional_split, replan_from_step_times
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 16              # steps of history per worker
+    trigger_ratio: float = 1.3    # worker slower than ratio*median -> replan
+    min_steps_between_replans: int = 32
+    quantum: int = 1              # batch-share granularity
+
+
+class StragglerMonitor:
+    def __init__(self, num_workers: int, global_batch: int,
+                 cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.num_workers = num_workers
+        self.global_batch = global_batch
+        self.shares = proportional_split([1.0] * num_workers, global_batch,
+                                         quantum=cfg.quantum)
+        self._hist = [deque(maxlen=cfg.window) for _ in range(num_workers)]
+        self._last_replan = -10**9
+        self._step = 0
+
+    def report(self, step_times_s: Sequence[float]) -> Optional[list[int]]:
+        """Record one step's per-worker times; return new shares if a
+        replan triggered, else None."""
+        self._step += 1
+        for h, t in zip(self._hist, step_times_s):
+            h.append(t)
+        if self._step - self._last_replan < self.cfg.min_steps_between_replans:
+            return None
+        if min(len(h) for h in self._hist) < self.cfg.window // 2:
+            return None
+        means = np.array([np.mean(h) for h in self._hist])
+        med = np.median(means)
+        if np.max(means) < self.cfg.trigger_ratio * med:
+            return None
+        new = replan_from_step_times(
+            means, self.shares, self.global_batch,
+            quantum=self.cfg.quantum, smoothing=0.7,
+        )
+        self._last_replan = self._step
+        self.shares = new
+        return new

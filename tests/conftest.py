@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests and benches see ONE device (the dry-run sets its own XLA_FLAGS in a
+# subprocess). Keep CPU compile fast.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,39 @@
+"""Flash-attention Pallas kernel vs the XLA online-softmax reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import chunked_attention
+
+
+@pytest.mark.parametrize("s,bq,bk", [(64, 16, 16), (128, 32, 64)])
+@pytest.mark.parametrize("gqa", [1, 2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_reference(s, bq, bk, gqa, dtype):
+    b, hq, hd = 2, 4, 16
+    hkv = hq // gqa
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd)).astype(dtype)
+    out = flash_attention(q, k, v, bq=bq, bk=bk)
+    want = chunked_attention(q, k, v, q_chunk=32, kv_block=32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_non_causal():
+    b, s, h, hd = 1, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (b, s, h, hd)) for kk in ks)
+    out = flash_attention(q, k, v, causal=False, bq=32, bk=32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * hd ** -0.5
+    w = jax.nn.softmax(logits, -1)
+    want = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

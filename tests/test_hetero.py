@@ -1,0 +1,78 @@
+"""Heterogeneous-aware allocation (paper Eq. 1/2, Table 3 logic)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hetero import (
+    DeviceProfile,
+    plan_data_centric,
+    plan_model_centric,
+    proportional_split,
+    replan_from_step_times,
+    step_latency_model,
+)
+
+
+def test_eq1_proportions_match_paper_case1():
+    # Paper Table 3 case 1: t = (4.58, 3.06) -> R = (0.40, 0.60)
+    profiles = [DeviceProfile("D0", 4.58), DeviceProfile("D1", 3.06)]
+    shares = plan_data_centric(profiles, 100)
+    assert shares[0] + shares[1] == 100
+    assert abs(shares[0] - 40) <= 1 and abs(shares[1] - 60) <= 1
+
+
+def test_eq2_mxu_quantum():
+    profiles = [DeviceProfile("a", 1.0), DeviceProfile("b", 3.0)]
+    shares = plan_model_centric(profiles, 1024, quantum=128)
+    assert sum(shares) == 1024
+    assert all(s % 128 == 0 for s in shares)
+    assert shares[0] > shares[1]
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    lat=st.lists(st.floats(0.1, 100.0), min_size=1, max_size=16),
+    total=st.integers(1, 4096),
+)
+def test_split_exact_total_property(lat, total):
+    shares = proportional_split(lat, total)
+    assert sum(shares) == total
+    assert all(s >= 0 for s in shares)
+    # monotone: faster device never gets less than a strictly slower one
+    order = np.argsort(lat)
+    s = np.array(shares)[order]
+    assert all(s[i] >= s[i + 1] - 1 for i in range(len(s) - 1))
+
+
+def test_optimal_split_minimises_latency_model():
+    """Figure 11's claim: the Eq.1 split beats uniform on the latency model."""
+    profiles = [DeviceProfile("fast", 1.0), DeviceProfile("slow", 3.0)]
+    total = 120
+    opt = plan_data_centric(profiles, total)
+    uniform = [60, 60]
+    t_opt = step_latency_model(profiles, opt, total)
+    t_uni = step_latency_model(profiles, uniform, total)
+    assert t_opt < t_uni
+    # the paper reports double-digit % gains for a 3x skew
+    assert (t_uni - t_opt) / t_uni > 0.2
+
+
+def test_replan_shifts_load_away_from_straggler():
+    shares = [50, 50]
+    times = [1.0, 2.0]  # device 1 is degraded
+    new = replan_from_step_times(times, shares, 100, smoothing=1.0)
+    assert sum(new) == 100
+    assert new[0] > new[1]
+
+
+def test_replan_smoothing_damps():
+    shares = [50, 50]
+    times = [1.0, 2.0]
+    aggressive = replan_from_step_times(times, shares, 100, smoothing=1.0)
+    damped = replan_from_step_times(times, shares, 100, smoothing=0.2)
+    assert aggressive[0] >= damped[0] >= 50
+
+
+def test_quantum_divisibility_error():
+    with pytest.raises(ValueError):
+        proportional_split([1.0, 1.0], 101, quantum=2)

@@ -1,0 +1,99 @@
+"""Re-index layout invariants (paper Algorithm 1), incl. property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reindex import (
+    build_reindex, combine_scatter, gather_sorted, padded_rows,
+)
+from repro.core.routing import route
+
+
+def _routing(n, e, k, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, 16))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (16, e))
+    return route(x, w, k)
+
+
+def check_invariants(expert_idx, gates, e, blk):
+    n, k = expert_idx.shape
+    ri = build_reindex(jnp.asarray(expert_idx), jnp.asarray(gates), e, blk)
+    row_id = np.asarray(ri.row_id)
+    nk = n * k
+
+    # 1. static shape
+    assert ri.num_rows == padded_rows(n, k, e, blk)
+    assert ri.num_rows % blk == 0
+    # 2. every copy id appears exactly once
+    real = row_id[row_id < nk]
+    assert sorted(real.tolist()) == list(range(nk))
+    # 3. every block is single-expert and matches block_expert
+    be = np.asarray(ri.block_expert)
+    ef = np.asarray(expert_idx).reshape(-1)
+    for r, fid in enumerate(row_id):
+        if fid < nk:
+            assert ef[fid] == be[r // blk]
+    # 4. counts
+    assert np.asarray(ri.counts).sum() == nk
+    np.testing.assert_array_equal(
+        np.asarray(ri.counts),
+        np.bincount(ef, minlength=e),
+    )
+    # 5. padded counts are blk multiples covering counts
+    pc = np.asarray(ri.padded_counts)
+    assert (pc % blk == 0).all()
+    assert (pc >= np.asarray(ri.counts)).all()
+    # 6. gates: real rows carry the right gate; sentinels zero
+    g = np.asarray(gates).reshape(-1)
+    rg = np.asarray(ri.row_gate)
+    for r, fid in enumerate(row_id):
+        if fid < nk:
+            assert rg[r] == pytest.approx(g[fid], abs=1e-6)
+        else:
+            assert rg[r] == 0.0
+    return ri
+
+
+def test_basic_invariants():
+    r = _routing(64, 4, 2)
+    check_invariants(r.expert_idx, r.gates, 4, 16)
+
+
+def test_empty_experts():
+    # all tokens to expert 0: others empty
+    ei = jnp.zeros((32, 1), jnp.int32)
+    g = jnp.ones((32, 1), jnp.float32)
+    ri = check_invariants(ei, g, 8, 8)
+    assert int(ri.counts[0]) == 32
+    assert int(ri.counts[1:].sum()) == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    e=st.integers(1, 9),
+    k=st.integers(1, 3),
+    blk=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 5),
+)
+def test_property_invariants(n, e, k, blk, seed):
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    ei = rng.integers(0, e, size=(n, k)).astype(np.int32)
+    g = rng.random(size=(n, k)).astype(np.float32)
+    check_invariants(ei, g, e, blk)
+
+
+def test_gather_combine_roundtrip():
+    """combine(gather(x)) with gates summing to 1 == x (top-k identity)."""
+    n, d, e, k, blk = 32, 8, 4, 2, 8
+    r = _routing(n, e, k)
+    gates = jnp.full((n, k), 0.5)
+    ri = build_reindex(r.expert_idx, gates, e, blk)
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, d))
+    xs = gather_sorted(x, ri)
+    y = combine_scatter(xs, ri, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)

@@ -1,0 +1,72 @@
+"""Router behaviour: top-k selection, gate normalisation, aux losses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.routing import route
+
+
+def test_topk_selects_argmax():
+    x = jnp.eye(4, 8)
+    w = jnp.eye(8, 8)
+    r = route(x, w, 1, norm_topk=True)
+    np.testing.assert_array_equal(np.asarray(r.expert_idx[:, 0]),
+                                  np.arange(4))
+    np.testing.assert_allclose(np.asarray(r.gates), 1.0)
+
+
+def test_norm_topk_gates_sum_to_one():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 6))
+    r = route(x, w, 3, norm_topk=True)
+    np.testing.assert_allclose(np.asarray(r.gates.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_softmax_after_topk_mixtral_style():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 6))
+    r = route(x, w, 2, softmax_after_topk=True)
+    np.testing.assert_allclose(np.asarray(r.gates.sum(-1)), 1.0, rtol=1e-5)
+    # gates ordered with logits
+    assert bool((r.gates[:, 0] >= r.gates[:, 1]).all())
+
+
+def test_aux_loss_balanced_is_one():
+    """Perfectly uniform router probs => aux = E * sum(1/E * 1/E) * E = 1."""
+    n, e = 1024, 8
+    x = jnp.zeros((n, 4))
+    w = jnp.zeros((4, e))
+    r = route(x, w, 1)
+    # degenerate ties route everything to expert 0 -> f imbalanced; use
+    # random instead and check aux ~ 1 for a weak router
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, e)) * 1e-3
+    r = route(x, w, 1)
+    assert 0.9 < float(r.aux_loss) < 1.2
+
+
+def test_aux_loss_penalises_collapse():
+    n, e = 256, 8
+    x = jnp.ones((n, 4))
+    w = jnp.zeros((4, e)).at[:, 0].set(10.0)  # all mass on expert 0
+    r = route(x, w, 1)
+    assert float(r.aux_loss) > 4.0  # >> 1 (balanced)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 64), e=st.integers(2, 16), k=st.integers(1, 4),
+       seed=st.integers(0, 3))
+def test_router_invariants(n, e, k, seed):
+    k = min(k, e)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 8))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, e))
+    r = route(x, w, k)
+    idx = np.asarray(r.expert_idx)
+    assert idx.shape == (n, k)
+    assert (0 <= idx).all() and (idx < e).all()
+    # no duplicate expert per token
+    for row in idx:
+        assert len(set(row.tolist())) == k
+    assert np.isfinite(np.asarray(r.gates)).all()
+    assert (np.asarray(r.gates) >= 0).all()

@@ -1,0 +1,249 @@
+"""Substrate tests: optimizer, compression, data pipeline, checkpointing,
+fault-tolerance loop, straggler monitor, elastic mesh choice."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import manager as ckpt
+from repro.data.pipeline import DataConfig, Prefetcher, TokenSource
+from repro.optim import adamw, compression
+from repro.runtime import elastic, ft as ft_lib
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
+
+
+# ---------------------------------------------------------------- optimizer
+
+def test_adamw_optimises_quadratic():
+    cfg = adamw.OptimizerConfig(peak_lr=0.1, warmup_steps=5, decay_steps=200,
+                                weight_decay=0.0, master_fp32=False)
+    params = {"w": jnp.ones((8,)) * 5.0}
+    state = adamw.init_opt_state(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}  # d/dw w^2
+        params, state, m = adamw.apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_adamw_bf16_states_and_master():
+    cfg = adamw.OptimizerConfig(state_dtype="bfloat16", master_fp32=True)
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = adamw.init_opt_state(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    assert state["master"]["w"].dtype == jnp.float32
+    grads = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    params2, state2, _ = adamw.apply_updates(params, grads, state, cfg)
+    assert params2["w"].dtype == jnp.bfloat16
+    assert state2["step"] == 1
+
+
+def test_grad_clip():
+    cfg = adamw.OptimizerConfig(grad_clip=1.0, peak_lr=1.0, warmup_steps=0,
+                                decay_steps=10, weight_decay=0.0,
+                                master_fp32=False)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init_opt_state(params, cfg)
+    _, _, m = adamw.apply_updates(params, {"w": jnp.full((4,), 100.0)},
+                                  state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+# -------------------------------------------------------------- compression
+
+def test_int8_roundtrip_bounded_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    rec, res = compression.compress_roundtrip(x)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.abs(res).max()) <= scale * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the accumulated applied signal converges to the
+    accumulated true signal."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (64,)) * 0.01
+    res = jnp.zeros_like(g)
+    applied = jnp.zeros_like(g)
+    for _ in range(50):
+        rec, res = compression.compress_roundtrip(g + res)
+        applied = applied + rec
+    true = g * 50
+    rel = float(jnp.linalg.norm(applied - true) / jnp.linalg.norm(true))
+    assert rel < 0.05
+
+
+# --------------------------------------------------------------------- data
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(seq_len=16, global_batch=4, vocab_size=64, seed=7)
+    a = TokenSource(cfg)
+    b = TokenSource(cfg)
+    for step in (0, 5, 1000):
+        np.testing.assert_array_equal(a.batch(step)["tokens"],
+                                      b.batch(step)["tokens"])
+    assert not np.array_equal(a.batch(1)["tokens"], a.batch(2)["tokens"])
+
+
+def test_data_labels_shifted():
+    cfg = DataConfig(seq_len=16, global_batch=2, vocab_size=64, seed=1)
+    batch = TokenSource(cfg).batch(0)
+    np.testing.assert_array_equal(batch["tokens"][:, 1:],
+                                  batch["labels"][:, :-1])
+
+
+def test_data_markov_structure_learnable():
+    """Stream entropy must be below uniform (otherwise convergence examples
+    cannot show learning)."""
+    cfg = DataConfig(seq_len=512, global_batch=8, vocab_size=32, seed=2)
+    toks = TokenSource(cfg).batch(0)["tokens"]
+    pairs = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs.setdefault(int(a), []).append(int(b))
+    # conditional empirical entropy << log2(32)
+    ents = []
+    for a, nxt in pairs.items():
+        if len(nxt) < 16:
+            continue
+        _, counts = np.unique(nxt, return_counts=True)
+        prob = counts / counts.sum()
+        ents.append(-(prob * np.log2(prob)).sum())
+    assert np.mean(ents) < 4.0  # uniform would be 5 bits
+
+
+def test_unequal_shares():
+    cfg = DataConfig(seq_len=8, global_batch=10, vocab_size=16)
+    s0 = TokenSource(cfg, num_shards=2, shard=0, shares=[7, 3])
+    s1 = TokenSource(cfg, num_shards=2, shard=1, shares=[7, 3])
+    assert s0.batch(0)["tokens"].shape[0] == 7
+    assert s1.batch(0)["tokens"].shape[0] == 3
+
+
+def test_prefetcher():
+    cfg = DataConfig(seq_len=8, global_batch=2, vocab_size=16)
+    pf = Prefetcher(TokenSource(cfg), start_step=3)
+    step, batch = next(pf)
+    assert step == 3 and batch["tokens"].shape == (2, 8)
+    step, _ = next(pf)
+    assert step == 4
+    pf.close()
+
+
+# --------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(8.0), "b": {"c": jnp.ones((2, 3), jnp.bfloat16)}}
+    ckpt.save(str(tmp_path), 7, tree, meta={"step": 7})
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    restored, meta = ckpt.restore(str(tmp_path), 7, like)
+    assert meta["step"] == 7
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    saver = ckpt.AsyncSaver()
+    for step in (1, 2, 3, 4):
+        saver.save(str(tmp_path), step, {"x": jnp.full((4,), step)})
+    saver.wait()
+    ckpt.gc_old(str(tmp_path), keep=2)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"x": jnp.ones(3)})
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+# ------------------------------------------------------------------ ft loop
+
+def test_run_with_recovery_restores_after_failure(tmp_path):
+    calls = {"n": 0}
+
+    def step_fn(state, step):
+        calls["n"] += 1
+        if step == 7 and calls["n"] < 12:  # fail once at step 7
+            raise RuntimeError("injected device failure")
+        return {"w": state["w"] + 1}, {"loss": 1.0}
+
+    state, last = ft_lib.run_with_recovery(
+        state={"w": jnp.zeros(())},
+        step_fn=step_fn,
+        start_step=0,
+        num_steps=10,
+        ft=ft_lib.FTConfig(ckpt_dir=str(tmp_path), save_every=2,
+                           max_failures=2),
+    )
+    assert last == 10
+    assert float(state["w"]) == 10.0  # deterministic replay after restore
+
+
+def test_run_with_recovery_nan_watchdog(tmp_path):
+    # transient data corruption: NaN appears once at step 5, the watchdog
+    # restores and the retry succeeds (external cause, external counter).
+    seen = {"nans": 0}
+
+    def step_fn(state, step):
+        loss = 1.0
+        if step == 5 and seen["nans"] == 0:
+            seen["nans"] += 1
+            loss = float("nan")
+        return {"w": state["w"] + 1}, {"loss": loss}
+
+    state, last = ft_lib.run_with_recovery(
+        state={"w": jnp.zeros(())},
+        step_fn=step_fn, start_step=0, num_steps=8,
+        ft=ft_lib.FTConfig(ckpt_dir=str(tmp_path), save_every=2,
+                           max_failures=3),
+    )
+    assert last == 8
+    assert seen["nans"] == 1
+
+
+# ---------------------------------------------------------------- straggler
+
+def test_straggler_monitor_replans():
+    mon = StragglerMonitor(
+        4, 64,
+        StragglerConfig(window=4, trigger_ratio=1.2,
+                        min_steps_between_replans=0),
+    )
+    new = None
+    for _ in range(8):
+        new = mon.report([1.0, 1.0, 1.0, 2.5]) or new
+    assert new is not None
+    assert new[3] < new[0]
+    assert sum(new) == 64
+
+
+def test_straggler_quiet_on_homogeneous():
+    mon = StragglerMonitor(4, 64, StragglerConfig(window=4,
+                                                  min_steps_between_replans=0))
+    for _ in range(8):
+        assert mon.report([1.0, 1.01, 0.99, 1.0]) is None
+
+
+# ------------------------------------------------------------------ elastic
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 4096))
+def test_choose_mesh_shape_covers_devices(n):
+    data, model = elastic.choose_mesh_shape(n)
+    assert data * model <= n
+    assert data * model >= n // 2  # never waste more than half
+
+
+def test_choose_mesh_min_model_for_memory():
+    # 100GB of params need TP >= 100e9 / (0.5 * 17.2e9) ~ 12 -> 16
+    data, model = elastic.choose_mesh_shape(
+        256, param_bytes=100e9, hbm_bytes=16 * 2**30
+    )
+    assert data * model == 256
+    assert model >= 16
+    # small model: pure DP is fine
+    data2, model2 = elastic.choose_mesh_shape(256, param_bytes=1e9)
+    assert model2 == 1
