@@ -1,0 +1,21 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test bench docs-check ci
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	JAX_PLATFORMS=cpu $(PY) benchmarks/run.py --quick
+
+# Every `DESIGN.md §N` citation in src/ must resolve to a `## §N` heading.
+docs-check:
+	@fail=0; \
+	for n in $$(grep -rhoE 'DESIGN\.md §[0-9]+' src | grep -oE '[0-9]+' | sort -u); do \
+		grep -qE "^## §$$n\b" DESIGN.md || { echo "dangling citation: DESIGN.md §$$n"; fail=1; }; \
+	done; \
+	[ $$fail -eq 0 ] && echo "docs-check: all DESIGN.md citations resolve" || exit 1
+
+ci:
+	bash scripts/ci.sh

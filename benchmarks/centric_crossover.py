@@ -12,34 +12,16 @@ the ACTUAL per-mode costs of one MoE layer on the production mesh:
 Cost model terms use the v5e constants from the dry-run (197 TF, 819 GB/s,
 50 GB/s link); crossover position depends on the ratio of token bytes moved
 (∝ batch) to weight bytes moved (constant) exactly as in the paper.
+
+The cost model itself lives in ``repro.parallel.autotune`` (it is also the
+runtime chooser behind ``ParallelConfig(mode="auto")``); this module keeps
+the Fig. 10 sweep/emit harness on top of it so the offline roofline and the
+runtime decision can never drift apart.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit
-
-PEAK = 197e12
-HBM = 819e9
-LINK = 50e9
-
-
-def layer_latency(mode: str, tokens: int, d: int, f: int, e: int, k: int,
-                  n_dev: int = 16) -> float:
-    """One MoE FFN layer (fwd), bf16, on an n_dev TP/DP group."""
-    active_rows = tokens * k
-    flops = 2 * active_rows * d * f * 2  # two MLPs
-    w_bytes = e * 2 * d * f * 2          # full expert params, bf16
-    tok_bytes = tokens * d * 2
-    if mode == "model_centric":
-        compute = flops / n_dev / PEAK           # rows x F/n per device
-        mem = (w_bytes / n_dev + tok_bytes) / HBM
-        coll = (tok_bytes + tok_bytes) / LINK    # AG tokens + RS outputs
-    else:  # data_centric
-        compute = flops / n_dev / PEAK           # tokens/n per device
-        mem = (w_bytes + tok_bytes / n_dev) / HBM
-        coll = w_bytes * (n_dev - 1) / n_dev / LINK  # AG weights
-    return max(compute, mem, coll)
+from repro.parallel.autotune import crossover_tokens, layer_latency
 
 
 def run(quick: bool = True):
@@ -61,6 +43,8 @@ def run(quick: bool = True):
              f"model_us={t_m * 1e6:.1f};data_us={t_d * 1e6:.1f};winner={winner}")
     assert rows[0][1] < rows[0][2], "model-centric must win small workloads"
     assert rows[-1][2] < rows[-1][1], "data-centric must win large workloads"
+    assert crossover == crossover_tokens(d, f, e, k, n_dev=16), \
+        "runtime chooser disagrees with the Fig. 10 sweep"
     emit("centric_F10/crossover_tokens", 0.0, f"{crossover}")
     return rows
 

@@ -6,13 +6,24 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+# Runnable both as `python -m benchmarks.run` and `python benchmarks/run.py`,
+# with or without PYTHONPATH: suite modules need the repo root (for
+# `benchmarks.*`) AND src/ (for `repro.*`) on the path.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+    grids = ap.add_mutually_exclusive_group()
+    grids.add_argument("--full", action="store_true")
+    grids.add_argument("--quick", action="store_true",
+                       help="quick grids (the default; explicit flag for CI)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: kernel,hetero,centric,"
                          "memory,latency,ablation")

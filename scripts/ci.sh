@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI entry point: deps -> tier-1 tests (CPU, Pallas interpret) -> benchmark
+# smoke -> docs-check. Mirrors what `make test/bench/docs-check` run locally.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -r requirements.txt
+
+# Tier-1 on CPU; Pallas kernels run in interpret mode off-TPU (this is the
+# default in repro.common.pallas_interpret_default, forced here for clarity).
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export REPRO_PALLAS_INTERPRET=1
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+# Benchmark smoke: every paper-table module must at least run its quick grid.
+python benchmarks/run.py --quick
+
+make docs-check

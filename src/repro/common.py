@@ -34,6 +34,18 @@ def pallas_interpret_default() -> bool:
     return not on_tpu()
 
 
+def tpu_compiler_params(**kwargs):
+    """Mosaic compiler params across jax versions: the class is
+    ``pltpu.CompilerParams`` on 2025-era jax but ``TPUCompilerParams`` on
+    the 0.4.x line this toolchain pins."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
 def tree_bytes(tree: Any) -> int:
     """Total bytes of all arrays / ShapeDtypeStructs in a pytree."""
     leaves = jax.tree_util.tree_leaves(tree)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.common import pallas_interpret_default
+from repro.common import pallas_interpret_default, tpu_compiler_params
 
 
 def _esfk_kernel(
@@ -147,7 +147,7 @@ def esfk_pallas(
             jax.ShapeDtypeStruct((e, d1, d2), jnp.float32),
             jax.ShapeDtypeStruct((e + 1, d2), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         cost_estimate=pl.CostEstimate(

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.common import pallas_interpret_default
+from repro.common import pallas_interpret_default, tpu_compiler_params
 
 
 def _ess_kernel(block_expert, x_ref, o_ref, acc_ref):
@@ -70,7 +70,7 @@ def ess_pallas(
             scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((e, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         cost_estimate=pl.CostEstimate(

@@ -111,18 +111,28 @@ def _full_group_sizes(padded_counts: jax.Array, np_rows) -> jax.Array:
     return padded_counts.at[-1].add(tail.astype(padded_counts.dtype))
 
 
+#: jax 0.4.x only ships the fixed-layout lax.ragged_dot; the general
+#: dimension-numbers form arrived later. Fall back where possible.
+_HAS_RAGGED_DN = hasattr(lax, "RaggedDotDimensionNumbers")
+
+
 def _ragged_esmm(xs, w, b, block_expert, padded_counts, transpose_rhs):
     np_rows = xs.shape[0]
     gs = _full_group_sizes(padded_counts, np_rows)
     if transpose_rhs:
-        dn = lax.RaggedDotDimensionNumbers(
-            dot_dimension_numbers=(((1,), (2,)), ((), ())),
-            lhs_ragged_dimensions=[0],
-            rhs_group_dimensions=[0],
-        )
-        y = lax.ragged_dot_general(
-            xs, w, gs, dn, preferred_element_type=xs.dtype
-        )
+        if _HAS_RAGGED_DN:
+            dn = lax.RaggedDotDimensionNumbers(
+                dot_dimension_numbers=(((1,), (2,)), ((), ())),
+                lhs_ragged_dimensions=[0],
+                rhs_group_dimensions=[0],
+            )
+            y = lax.ragged_dot_general(
+                xs, w, gs, dn, preferred_element_type=xs.dtype
+            )
+        else:  # materialise the transpose; XLA folds it into the dot
+            y = lax.ragged_dot(
+                xs, jnp.swapaxes(w, 1, 2), gs, preferred_element_type=xs.dtype
+            )
     else:
         y = lax.ragged_dot(xs, w, gs, preferred_element_type=xs.dtype)
     if b is not None:
@@ -192,7 +202,12 @@ def _esfk_any(impl, fused, x1, x2, block_expert, padded_counts, need_db):
         )
         return dw, db
     if impl == "ragged":
-        dw = _ragged_estmm(x1, x2, padded_counts)
+        if _HAS_RAGGED_DN:
+            dw = _ragged_estmm(x1, x2, padded_counts)
+        else:
+            # grouped-transposed ragged dot is inexpressible with plain
+            # lax.ragged_dot; the blocked form computes the same dW
+            dw = _blocked_estmm(x1, x2, block_expert, e)
         db = _ragged_ess(x2, block_expert, e) if need_db else None
         return dw, db
     if impl == "blocked":

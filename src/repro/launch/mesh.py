@@ -13,14 +13,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    """Arbitrary mesh for tests/examples (e.g. (1, 1) on one CPU)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    """Arbitrary mesh for tests/examples (e.g. (1, 1) on one CPU).
+
+    axis_types= only exists on newer jax; older releases (0.4.3x) default to
+    Auto axes anyway, so fall back to the plain call there."""
+    try:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    except (AttributeError, TypeError):
+        return jax.make_mesh(tuple(shape), tuple(axes))

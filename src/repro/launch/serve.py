@@ -98,6 +98,17 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--mode", default="auto",
+                    choices=["hybrid", "model_centric", "data_centric",
+                             "auto", "ep"],
+                    help="parallel mode; 'auto' (default) lets each MoE "
+                         "layer pick data-/model-centric dispatch from the "
+                         "roofline — decode steps (few tokens) resolve "
+                         "model-centric, large prefills data-centric")
+    ap.add_argument("--cache-layers", type=int, default=0,
+                    help="pipeline-shared prefetch cache residency bound "
+                         "(gathered MoE periods) for the decode forward; "
+                         ">0 unrolls the layer loop")
     args = ap.parse_args(argv)
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
@@ -106,7 +117,11 @@ def main(argv=None):
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
         mesh = make_mesh(dims, ("pod", "data", "model")[-len(dims):])
-    pcfg = ParallelConfig(mode="model_centric", blk=16)
+    pcfg = ParallelConfig(
+        mode=args.mode, blk=16,
+        cache_layers=args.cache_layers,
+        scan_layers=args.cache_layers <= 0,
+    )
 
     params, specs = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
     if mesh is not None:

@@ -53,9 +53,26 @@ def main(argv=None):
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--mesh", default=None, help="e.g. '2,4' => data,model")
-    ap.add_argument("--mode", default="hybrid")
+    ap.add_argument("--mode", default="hybrid",
+                    choices=["hybrid", "model_centric", "data_centric",
+                             "auto", "ep"],
+                    help="'auto' picks data/model-centric per MoE layer "
+                         "from the roofline (parallel.autotune)")
     ap.add_argument("--schedule", default="ag_rs")
     ap.add_argument("--cache-policy", default="shared_cache")
+    ap.add_argument("--cache-layers", type=int, default=0,
+                    help="pipeline-shared prefetch cache residency bound "
+                         "(gathered MoE periods); >0 implies --no-scan. "
+                         "Inference-side mechanism: the remat'd train step "
+                         "itself keeps using the remat-policy cache "
+                         "(gathered params re-gathered in backward), so "
+                         "this mainly affects eval/serve-style forwards")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="unroll the period loop instead of lax.scan")
+    ap.add_argument("--proxy-latencies", default=None,
+                    help="comma-separated per-device proxy latencies t_i "
+                         "(core.hetero); makes the auto chooser "
+                         "heterogeneity-aware")
     ap.add_argument("--impl", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--warmup", type=int, default=20)
@@ -79,10 +96,23 @@ def main(argv=None):
         axes = ("pod", "data", "model")[-len(dims):]
         mesh = make_mesh(dims, axes)
 
+    latencies = None
+    if args.proxy_latencies:
+        try:
+            latencies = tuple(
+                float(t) for t in args.proxy_latencies.split(",")
+            )
+        except ValueError:
+            ap.error("--proxy-latencies must be comma-separated numbers")
+        if any(t <= 0 for t in latencies):
+            ap.error("--proxy-latencies must all be positive (seconds)")
     pcfg = ParallelConfig(
         mode=args.mode,
         collective_schedule=args.schedule,
         cache_policy=args.cache_policy,
+        cache_layers=args.cache_layers,
+        scan_layers=not (args.no_scan or args.cache_layers > 0),
+        device_latencies=latencies,
         impl=args.impl,
         blk=min(128, max(16, args.seq_len // 4)),
     )

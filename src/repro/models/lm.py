@@ -218,7 +218,7 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
 # forward
 # ---------------------------------------------------------------------------
 
-def apply_block(p, x, ctx: Ctx, pos: int, cache):
+def apply_block(p, x, ctx: Ctx, pos: int, cache, ffn_gathered=None):
     kind = ctx.cfg.layer_kind(pos)
     h = tfm.apply_norm(p["ln1"], x, ctx.cfg)
     if kind == "attn":
@@ -239,7 +239,10 @@ def apply_block(p, x, ctx: Ctx, pos: int, cache):
     if "ffn" in p:
         h2 = tfm.apply_norm(p["ln2"], x, ctx.cfg)
         if ctx.cfg.is_moe_layer(pos):
-            y, aux, z = tfm.apply_moe_ffn(p["ffn"], h2, ctx)
+            y, aux, z = tfm.apply_moe_ffn(
+                p["ffn"], h2, dataclasses.replace(ctx, layer_idx=pos),
+                gathered=ffn_gathered,
+            )
         else:
             y = tfm.apply_dense_ffn(p["ffn"], h2, ctx)
         x = x + y
@@ -256,17 +259,25 @@ def _remat_policy(pcfg: ParallelConfig):
     return cp.nothing_saveable
 
 
+#: Residency/hit accounting of the last pipeline-shared cache built by
+#: run_layers (trace-time stats; populated on the first trace of a jitted
+#: forward). Benchmarks and tests read it after a call.
+LAST_PIPELINE_CACHE_STATS: Optional[dict] = None
+
+
 def run_layers(layers, x, ctx: Ctx, cache_layers):
     cfg, pcfg = ctx.cfg, ctx.pcfg
     period = cfg.period
 
     def period_fn(carry, xs):
         x, aux, z = carry
-        lp, lc = xs
+        lp, lc, gf = xs
         new_caches = []
         for pos in range(period):
             c_in = None if lc is None else lc[pos]
-            x, nc, a, zz = apply_block(lp[pos], x, ctx, pos, c_in)
+            g = None if gf is None else gf.get(pos)
+            x, nc, a, zz = apply_block(lp[pos], x, ctx, pos, c_in,
+                                       ffn_gathered=g)
             new_caches.append(nc)
             aux = aux + a
             z = z + zz
@@ -279,11 +290,54 @@ def run_layers(layers, x, ctx: Ctx, cache_layers):
 
     zero = jnp.zeros((), jnp.float32)
     if pcfg.scan_layers:
+        if pcfg.cache_layers > 0 and cfg.moe is not None:
+            raise ValueError(
+                "cache_layers > 0 requires scan_layers=False (the "
+                "pipeline-shared prefetch cache lives in the unrolled "
+                "layer loop)"
+            )
         (x, aux, z), new_cache = jax.lax.scan(
-            period_fn, (x, zero, zero), (layers, cache_layers)
+            period_fn, (x, zero, zero), (layers, cache_layers, None)
         )
     else:
         n_periods = cfg.num_layers // period
+        moe_positions = [
+            pos for pos in range(period)
+            if cfg.is_moe_layer(pos) and _ffn_kind(cfg, pos) == "moe"
+        ]
+        # Pipeline-shared cache (DESIGN.md §2): gather each period's MoE fsdp
+        # weight factors OUTSIDE the island, holding at most cache_layers
+        # gathered periods and prefetching period pp+1 before period pp's
+        # compute ops are emitted (the all-gather overlaps the MXU). One
+        # cache entry = ONE period (all its MoE positions together), so the
+        # residency bound counts what is actually live even when a period
+        # holds several MoE layers.
+        #
+        # Inference-side mechanism only: under the remat'd training step the
+        # gathered trees would become jax.checkpoint inputs and be SAVED as
+        # residuals for every period — Janus residency with a cache sticker
+        # on it. There the remat policy (cache_policy="shared_cache",
+        # backward re-gathers per layer) is the paper's cache; skip the
+        # prefetcher.
+        remat_train = pcfg.remat != "none" and ctx.mode == "train"
+        pcache = None
+        if (pcfg.cache_layers > 0 and moe_positions and pcfg.mode != "ep"
+                and not remat_train):
+            from repro.parallel.cache import (
+                PipelineSharedCache,
+                gather_ffn_params,
+            )
+            pcache = PipelineSharedCache(pcfg.cache_layers)
+
+            def gather_period(pp):
+                return {
+                    pos: gather_ffn_params(
+                        jax.tree.map(lambda v: v[pp], layers[pos]["ffn"]),
+                        pcfg, ctx.mesh,
+                    )
+                    for pos in moe_positions
+                }
+
         carry = (x, zero, zero)
         outs = []
         for pp in range(n_periods):
@@ -293,9 +347,18 @@ def run_layers(layers, x, ctx: Ctx, cache_layers):
                 if cache_layers is None
                 else jax.tree.map(lambda v: v[pp], cache_layers)
             )
-            carry, nc = period_fn(carry, (lp, lc))
+            gf = None
+            if pcache is not None:
+                gf = pcache.fetch(pp, lambda: gather_period(pp))
+                if pcache.capacity_layers >= 2 and pp + 1 < n_periods:
+                    # double-buffer: issue pp+1's gathers before pp computes
+                    pcache.prefetch(pp + 1, lambda: gather_period(pp + 1))
+            carry, nc = period_fn(carry, (lp, lc, gf))
             outs.append(nc)
         x, aux, z = carry
+        if pcache is not None:
+            global LAST_PIPELINE_CACHE_STATS
+            LAST_PIPELINE_CACHE_STATS = pcache.stats()
         new_cache = (
             None
             if cache_layers is None

@@ -39,6 +39,7 @@ class Ctx:
     x_spec: P                       # sharding of (B, S, D) activations
     rng: Optional[jax.Array] = None
     cond: Optional[jax.Array] = None  # cross-attention memory (B, T, Dc)
+    layer_idx: Optional[int] = None   # period position (auto-mode plan key)
 
     @property
     def dtype(self):
@@ -158,8 +159,13 @@ def init_moe_ffn(key, cfg: ModelConfig, dtype) -> dict:
     return p
 
 
-def apply_moe_ffn(p: dict, x: jax.Array, ctx: Ctx):
-    """Returns (y, aux_loss, z_loss). x: (B, S, D)."""
+def apply_moe_ffn(p: dict, x: jax.Array, ctx: Ctx,
+                  gathered: Optional[dict] = None):
+    """Returns (y, aux_loss, z_loss). x: (B, S, D).
+
+    ``gathered``: fsdp-pregathered weight leaves from the pipeline-shared
+    cache (parallel.cache); they replace the sharded ones and the island
+    skips its internal fsdp all-gather."""
     m = ctx.cfg.moe
     ms = MoEStatic(
         num_experts=m.num_experts,
@@ -169,18 +175,22 @@ def apply_moe_ffn(p: dict, x: jax.Array, ctx: Ctx):
         norm_topk=m.norm_topk,
         softmax_after_topk=m.softmax_after_topk,
     )
+    src = dict(p)
+    if gathered is not None:
+        src.update({k: v for k, v in gathered.items() if v is not None})
     mp = MoEParams(
-        router=p["router"],
-        w_gate=p.get("w_gate"),
-        w_up=p.get("w_up"),
-        w_down=p.get("w_down"),
-        w1=p.get("w1"),
-        b1=p.get("b1"),
-        w2=p.get("w2"),
-        b2=p.get("b2"),
+        router=src["router"],
+        w_gate=src.get("w_gate"),
+        w_up=src.get("w_up"),
+        w_down=src.get("w_down"),
+        w1=src.get("w1"),
+        b1=src.get("b1"),
+        w2=src.get("w2"),
+        b2=src.get("b2"),
     )
     return moe_layer(
-        x, mp, ms, ctx.pcfg, ctx.mesh, x_spec=ctx.x_spec, noise_rng=ctx.rng
+        x, mp, ms, ctx.pcfg, ctx.mesh, x_spec=ctx.x_spec, noise_rng=ctx.rng,
+        layer_idx=ctx.layer_idx, pregathered=gathered is not None,
     )
 
 

@@ -1,0 +1,230 @@
+"""Adaptive data-/model-centric dispatch (paper §4.5, Fig. 10) at runtime.
+
+The paper's observation: for one MoE FFN layer the collective bill is
+token-proportional under model-centric execution (all-gather tokens over TP,
+reduce partial outputs; weights stationary) but constant under data-centric
+execution (all-gather expert weights; tokens stationary). Model-centric wins
+small workloads, data-centric wins large ones, and the crossover sits where
+moved token bytes ≈ moved weight bytes.
+
+This module promotes the offline roofline (``benchmarks/centric_crossover.py``
+now imports it from here) into a per-layer *runtime* decision:
+
+  * ``layer_latency`` — the roofline itself: max(compute, HBM, link) for one
+    MoE FFN layer under a given mode. Byte/FLOP terms only; no device state.
+  * ``choose_mode`` / ``crossover_tokens`` — argmin over modes for a given
+    token workload, and the workload where the winner flips.
+  * ``resolve_layer_mode`` — the hook ``moe_parallel.moe_layer`` calls when
+    ``ParallelConfig.mode == "auto"``: derives (d, f, e, k) from the param
+    shapes, the TP group size from the mesh, and an effective device count
+    from heterogeneous ``core.hetero.DeviceProfile`` measurements.
+  * ``plan_layer_modes`` — a whole-model per-layer plan (one entry per
+    period position) that can be pinned into ``ParallelConfig.layer_mode_plan``.
+
+Because the decision is a pure function of static shapes, prefill and decode
+traces naturally land on different sides of the crossover: a 32k-token
+prefill picks data-centric while a batch-of-slots decode step (tokens = a few
+dozen) picks model-centric — the serving scenario the paper's Fig. 10 implies
+but never wires up.
+
+All decisions are made OUTSIDE shard_map/jit tracing of collectives (shapes
+are static), so ``mode="auto"`` compiles to exactly the same HLO as the
+equivalent forced mode — bitwise-identical outputs, which the tier-1 suite
+asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    """Per-device roofline constants (bytes/s, FLOP/s)."""
+    peak_flops: float = 197e12   # bf16 MXU peak (v5e)
+    hbm_bw: float = 819e9        # HBM bytes/s (v5e)
+    link_bw: float = 50e9        # ICI per-link bytes/s (v5e)
+
+
+V5E = HardwareProfile()
+
+#: Modes the runtime chooser may return, in tie-break preference order:
+#: when the roofline says equal (usually both compute-bound), prefer
+#: model-centric — it moves no weights, so it never inflates HBM residency.
+CHOOSABLE_MODES = ("model_centric", "data_centric")
+
+
+def layer_latency(
+    mode: str,
+    tokens: int,
+    d: int,
+    f: int,
+    e: int,
+    k: int,
+    n_dev: float = 16,
+    hw: HardwareProfile = V5E,
+) -> float:
+    """One MoE FFN layer (fwd), bf16, on an ``n_dev`` TP/DP group.
+
+    model_centric: tokens all-gathered over TP + partial-output reduction;
+                   weights stationary.
+    data_centric : weights all-gathered over the group (pipeline-shared
+                   cache re-fill per layer); tokens stationary.
+    ``n_dev`` may be fractional: heterogeneous groups report an *effective*
+    device count (see ``effective_devices``).
+    """
+    active_rows = tokens * k
+    flops = 2 * active_rows * d * f * 2  # two MLPs
+    w_bytes = e * 2 * d * f * 2          # full expert params, bf16
+    tok_bytes = tokens * d * 2
+    if mode == "model_centric":
+        compute = flops / n_dev / hw.peak_flops   # rows x F/n per device
+        mem = (w_bytes / n_dev + tok_bytes) / hw.hbm_bw
+        coll = (tok_bytes + tok_bytes) / hw.link_bw  # AG tokens + RS outputs
+    elif mode == "data_centric":
+        compute = flops / n_dev / hw.peak_flops   # tokens/n per device
+        mem = (w_bytes + tok_bytes / n_dev) / hw.hbm_bw
+        coll = w_bytes * (n_dev - 1) / n_dev / hw.link_bw  # AG weights
+    else:
+        raise ValueError(mode)
+    return max(compute, mem, coll)
+
+
+def effective_devices(proxy_latencies: Sequence[float]) -> float:
+    """Heterogeneity-aware effective group size (paper §4.4 planner view).
+
+    With the proportional split of Eq. 1/2 every device finishes together,
+    so the group behaves like ``sum(t_min / t_i)`` devices rated at the
+    fastest chip's roofline: a (1x fast + 1x half-speed) pair is worth 1.5
+    fast devices, not 2.
+    """
+    t = np.asarray(proxy_latencies, dtype=np.float64)
+    if t.size == 0:
+        return 1.0
+    if np.any(t <= 0):
+        raise ValueError("proxy latencies must be positive")
+    return float(np.sum(np.min(t) / t))
+
+
+def choose_mode(
+    tokens: int,
+    d: int,
+    f: int,
+    e: int,
+    k: int,
+    *,
+    n_dev: float = 16,
+    hw: HardwareProfile = V5E,
+) -> str:
+    """argmin-latency mode for one MoE layer's token workload (ties resolve
+    in CHOOSABLE_MODES order: model-centric first)."""
+    if n_dev <= 1:
+        # No group to move tokens or weights across: the modes coincide;
+        # report data_centric (weights-stationary == weights-local).
+        return "data_centric"
+    costs = {
+        m: layer_latency(m, tokens, d, f, e, k, n_dev, hw)
+        for m in CHOOSABLE_MODES
+    }
+    return min(costs, key=costs.get)
+
+
+def crossover_tokens(
+    d: int,
+    f: int,
+    e: int,
+    k: int,
+    *,
+    n_dev: float = 16,
+    hw: HardwareProfile = V5E,
+    lo_exp: int = 4,
+    hi_exp: int = 18,
+) -> Optional[int]:
+    """First power-of-two token count where the winner flips model->data.
+
+    Scans the same 2**lo_exp .. 2**(hi_exp-1) grid as the Fig. 10 benchmark
+    so the runtime chooser and the offline roofline agree exactly.
+    """
+    prev = None
+    for tokens in (2 ** i for i in range(lo_exp, hi_exp)):
+        winner = choose_mode(tokens, d, f, e, k, n_dev=n_dev, hw=hw)
+        if prev is not None and prev != winner:
+            return tokens
+        prev = winner
+    return None
+
+
+# ---------------------------------------------------------------------------
+# runtime hooks (called from moe_parallel / lm with static shapes)
+# ---------------------------------------------------------------------------
+
+def _tp_group_size(cfg, mesh) -> int:
+    """TP group extent under the given config/mesh (1 without a mesh)."""
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return 1
+    tp = cfg.axes(mesh)["tp"]
+    return int(mesh.shape[tp]) if tp else 1
+
+
+def resolve_layer_mode(
+    tokens: int,
+    *,
+    d: int,
+    f: int,
+    e: int,
+    k: int,
+    cfg,
+    mesh,
+    layer_idx: Optional[int] = None,
+) -> str:
+    """Per-layer mode decision for ``ParallelConfig.mode == "auto"``.
+
+    Precedence: ``cfg.forced_layer_mode`` > ``cfg.layer_mode_plan`` (indexed
+    by ``layer_idx`` modulo plan length) > the roofline chooser. The chooser
+    folds heterogeneous device measurements (``cfg.device_latencies``, the
+    proxy latencies of ``core.hetero.DeviceProfile``) into an effective TP
+    group size.
+    """
+    if cfg.forced_layer_mode is not None:
+        return cfg.forced_layer_mode
+    if cfg.layer_mode_plan and layer_idx is not None:
+        planned = cfg.layer_mode_plan[layer_idx % len(cfg.layer_mode_plan)]
+        if planned is not None:
+            return planned
+    n_dev = float(_tp_group_size(cfg, mesh))
+    if cfg.device_latencies:
+        lat = list(cfg.device_latencies)
+        # Exactly one latency per group member: use them directly. A shorter
+        # (or longer) list is a representative sample of the fleet mix —
+        # scale its effective fraction to the group size rather than
+        # silently modelling an n_dev-wide group as len(lat) devices.
+        if len(lat) == int(n_dev):
+            n_dev = effective_devices(lat)
+        else:
+            n_dev = n_dev * effective_devices(lat) / len(lat)
+    return choose_mode(tokens, d, f, e, k, n_dev=n_dev)
+
+
+def plan_layer_modes(model_cfg, cfg, mesh, tokens: int) -> Tuple[Optional[str], ...]:
+    """Whole-model plan: one entry per period position (None = not MoE).
+
+    Pin the result into ``ParallelConfig.layer_mode_plan`` to freeze the
+    decision (e.g. for the dry-run, or to ship a serving config that never
+    re-derives it).
+    """
+    if model_cfg.moe is None:
+        return ()
+    m = model_cfg.moe
+    out = []
+    for pos in range(model_cfg.period):
+        if not model_cfg.is_moe_layer(pos):
+            out.append(None)
+            continue
+        out.append(resolve_layer_mode(
+            tokens,
+            d=model_cfg.d_model, f=m.d_ff, e=m.num_experts, k=m.top_k,
+            cfg=cfg, mesh=mesh, layer_idx=pos,
+        ))
+    return tuple(out)

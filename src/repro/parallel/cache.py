@@ -1,0 +1,161 @@
+"""Pipeline-shared cache: bounded gathered-expert-weight residency with
+double-buffered prefetch (paper §4.5; DESIGN.md §2).
+
+Data-centric execution all-gathers each MoE layer's expert weights at use.
+Done naively, either (a) every layer re-gathers on the critical path (gather
+latency exposed), or (b) all gathered copies stay live (residency = L layers
+— the Janus baseline). The paper's pipeline-shared cache is the middle
+point: at most C layers' gathered params are resident, and layer l+1's
+gather is issued while layer l computes so the interconnect overlaps the
+MXU.
+
+``PipelineSharedCache`` realises this as a *trace-time* structure: the LM
+forward's unrolled layer loop (``models.lm.run_layers`` with
+``scan_layers=False`` and ``cache_layers > 0``) fetches layer l's gathered
+tree (a hit — it was prefetched) and then prefetches layer l+1 BEFORE
+emitting layer l's compute ops. In the lowered program the layer-(l+1)
+all-gather therefore precedes, and is data-independent of, layer-l compute —
+exactly the overlap XLA's latency-hiding scheduler needs — while eviction
+drops the last reference to layer l-C+1's gathered buffers, bounding their
+liveness. Residency accounting (resident/peak layers and bytes, hit/miss
+counters) is exposed so ``benchmarks/memory_table.py`` can report it.
+
+The gather itself is ``gather_ffn_params``: a GSPMD-level all-gather
+expressed as a sharding constraint that drops the "fsdp" factor from each
+weight's logical spec. ``moe_parallel.moe_layer(..., pregathered=True)``
+then skips the island-internal fsdp gather and adjusts its in_specs.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable
+
+from repro.common import tree_bytes  # noqa: F401  (re-exported: cache API)
+
+
+class PipelineSharedCache:
+    """Bounded FIFO cache of gathered parameter trees.
+
+    capacity_layers: maximum simultaneously-resident gathered layers. 2 is
+    the double-buffer (current + prefetched next); the Janus baseline is
+    effectively capacity = num_layers.
+    """
+
+    def __init__(self, capacity_layers: int = 2):
+        if capacity_layers < 1:
+            raise ValueError("capacity_layers must be >= 1")
+        self.capacity_layers = capacity_layers
+        self._resident: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0      # fetch-path gathers (critical-path stalls)
+        self.prefetches = 0  # gathers issued ahead of use (overlapped)
+        self.evictions = 0
+        self.peak_resident_layers = 0
+        self.peak_resident_bytes = 0
+
+    # -- core ---------------------------------------------------------------
+
+    def fetch(self, key: Hashable, gather_fn: Callable[[], Any]) -> Any:
+        """Return the gathered tree for ``key``, gathering on a miss."""
+        if key in self._resident:
+            self.hits += 1
+            return self._resident[key]
+        self.misses += 1
+        value = gather_fn()
+        self._insert(key, value)
+        return value
+
+    def prefetch(self, key: Hashable, gather_fn: Callable[[], Any]) -> None:
+        """Issue the gather for ``key`` now (no-op if already resident).
+
+        Call AFTER fetching the current layer and BEFORE emitting its
+        compute: the prefetched gather then has no data dependence on the
+        current layer's ops and can overlap them. Counted separately from
+        misses — a prefetched gather is off the critical path.
+        """
+        if key not in self._resident:
+            self.prefetches += 1
+            self._insert(key, gather_fn())
+
+    def _insert(self, key: Hashable, value: Any) -> None:
+        self._resident[key] = value
+        while len(self._resident) > self.capacity_layers:
+            self._resident.popitem(last=False)
+            self.evictions += 1
+        self.peak_resident_layers = max(
+            self.peak_resident_layers, len(self._resident)
+        )
+        self.peak_resident_bytes = max(
+            self.peak_resident_bytes, self.resident_bytes()
+        )
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def resident_layers(self) -> int:
+        return len(self._resident)
+
+    def resident_bytes(self) -> int:
+        return sum(tree_bytes(v) for v in self._resident.values())
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "capacity_layers": self.capacity_layers,
+            "resident_layers": self.resident_layers,
+            "resident_bytes": self.resident_bytes(),
+            "peak_resident_layers": self.peak_resident_layers,
+            "peak_resident_bytes": self.peak_resident_bytes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "prefetches": self.prefetches,
+            "evictions": self.evictions,
+        }
+
+
+# ---------------------------------------------------------------------------
+# the gather the cache holds
+# ---------------------------------------------------------------------------
+
+def _drop_fsdp(logical: tuple) -> tuple:
+    out = []
+    for entry in logical:
+        if entry == "fsdp":
+            out.append(None)
+        elif isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a != "fsdp")
+            out.append(kept if kept else None)
+        else:
+            out.append(entry)
+    return tuple(out)
+
+
+def gather_ffn_params(ffn: dict, cfg, mesh) -> dict:
+    """All-gather the fsdp factor of every MoE FFN weight leaf.
+
+    Expressed as a sharding constraint (GSPMD inserts the all-gather), so it
+    composes with jit/scan and is a no-op without a mesh. The router stays
+    replicated; TP factors stay sharded — per-layer data-centric dispatch
+    gathers those inside the island (see moe_parallel).
+    """
+    from repro.parallel.moe_parallel import MOE_PARAM_LOGICAL
+    from repro.parallel.sharding import constrain
+
+    out = {}
+    for name, v in ffn.items():
+        logical = MOE_PARAM_LOGICAL.get(name)
+        if v is None or logical is None or name == "router":
+            out[name] = v
+            continue
+        out[name] = constrain(v, _drop_fsdp(logical), cfg, mesh)
+    return out
+
+
+def gathered_layer_bytes(d: int, f: int, e: int, *, glu: bool = True,
+                         bytes_per_el: int = 2) -> int:
+    """Bytes of ONE layer's fully-gathered expert weights (the unit the
+    residency bound multiplies)."""
+    n_mats = 3 if glu else 2
+    total = e * n_mats * d * f * bytes_per_el
+    if not glu:
+        total += e * (f + d) * 4  # f32 biases
+    return total

@@ -7,10 +7,17 @@ schedule (auditable in the dry-run HLO):
     all-gathered over "model"; partial outputs reduced. NO weight movement.
   data-centric (paper Janus-style): expert params sharded over every mesh
     axis; all-gathered to each device at use; tokens never move. The
-    pipeline-shared cache (bounded gathered-param residency) is realised by
-    the surrounding remat policy: gathered params are not saved as backward
-    residuals, the backward re-gathers layer by layer.
+    pipeline-shared cache (bounded gathered-param residency) is realised two
+    ways: the surrounding remat policy (gathered params are not saved as
+    backward residuals, the backward re-gathers layer by layer) and, in the
+    unrolled layer loop, parallel.cache.PipelineSharedCache's double-buffered
+    prefetch (DESIGN.md §2).
   hybrid (beyond paper): fsdp gather over ("pod","data") + TP over "model".
+  auto (paper §4.5 / Fig. 10, runtime form): hybrid physical layout; each
+    MoE layer picks data- or model-centric dispatch at trace time via
+    parallel.autotune's roofline — "move tokens over TP" vs "gather the
+    weights' TP factor" is a per-layer ``layer_mode`` choice inside the
+    island, so prefill and decode land on opposite sides of the crossover.
   ep (baseline): classic expert parallelism with all-to-all + capacity
     buffer — exists to quantify the paper's motivation in the roofline.
 
@@ -59,6 +66,35 @@ class MoEStatic(NamedTuple):
     softmax_after_topk: bool = False
 
 
+def _resolve_shard_map():
+    """jax.shard_map moved out of jax.experimental in 2025-era jax; the
+    replication check was renamed check_rep -> check_vma along the way (some
+    releases expose jax.shard_map but still spell it check_rep). Resolve
+    both once at import so the mesh path runs across the 0.4.x-0.6.x span."""
+    import inspect
+
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        kw = ("check_vma" if "check_vma" in inspect.signature(sm).parameters
+              else "check_rep")
+    except (TypeError, ValueError):  # C-level signature: assume modern name
+        kw = "check_vma"
+    return sm, kw
+
+
+_SHARD_MAP, _SHARD_MAP_CHECK_KW = _resolve_shard_map()
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    return _SHARD_MAP(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_SHARD_MAP_CHECK_KW: False},
+    )
+
+
 def _ag(x, axes, dim):
     """all_gather over possibly-multiple mesh axes (tiled)."""
     if not axes:
@@ -83,15 +119,25 @@ def hexa_moe_island(
     *,
     tokens_sharded_tp: bool,
     noise_rng: Optional[jax.Array] = None,
+    layer_mode: Optional[str] = None,
+    pregathered: bool = False,
 ):
     """Body of the shard_map island: local tokens x (N_l, D) -> (y, aux, z).
 
     ``tokens_sharded_tp``: whether the incoming token dim is sharded over the
     TP axis (training/prefill with SP) or replicated (decode).
+    ``layer_mode``: per-layer dispatch under ``cfg.mode == "auto"`` —
+    "data_centric" gathers the weights' TP factor and keeps tokens (and the
+    output) local; "model_centric"/None keeps the TP compute split and moves
+    tokens. ``pregathered``: the fsdp factor of the weights was already
+    gathered outside the island (pipeline-shared cache), skip it here.
     """
     axes = cfg.axes(mesh)
     fsdp, tp = axes["fsdp"], axes["tp"]
-    gather_tokens = tp is not None and tokens_sharded_tp
+    if pregathered:
+        fsdp = ()
+    dc = layer_mode == "data_centric" and tp is not None
+    gather_tokens = tp is not None and tokens_sharded_tp and not dc
 
     if gather_tokens:
         x = _ag(x, tp, 0)
@@ -104,20 +150,24 @@ def hexa_moe_island(
     )
     ri = build_reindex(r.expert_idx, r.gates, ms.num_experts, cfg.blk)
 
+    tp_w = tp if dc else None  # data-centric: gather the weights' TP factor
     name = checkpoint_name  # pipeline-shared cache tagging
     if ms.glu:
-        wg = name(_ag(p.w_gate, fsdp, 1), "gathered_w")
-        wu = name(_ag(p.w_up, fsdp, 1), "gathered_w")
-        wd = name(_ag(p.w_down, fsdp, 2), "gathered_w")
+        wg = name(_ag(_ag(p.w_gate, fsdp, 1), tp_w, 2), "gathered_w")
+        wu = name(_ag(_ag(p.w_up, fsdp, 1), tp_w, 2), "gathered_w")
+        wd = name(_ag(_ag(p.w_down, fsdp, 2), tp_w, 1), "gathered_w")
         y = espec.moe_glu(x, ri, wg, wu, wd, act=ms.act, impl=cfg.impl)
     else:
-        w1 = name(_ag(p.w1, fsdp, 1), "gathered_w")
-        w2 = name(_ag(p.w2, fsdp, 2), "gathered_w")
-        b1 = p.b1  # (E, F_l): local TP slice adds locally.
-        b2 = _mask_rank0(_ag(p.b2, fsdp, 1), tp)
+        w1 = name(_ag(_ag(p.w1, fsdp, 1), tp_w, 2), "gathered_w")
+        w2 = name(_ag(_ag(p.w2, fsdp, 2), tp_w, 1), "gathered_w")
+        # (E, F_l) bias: local TP slice adds locally; dc gathers it full.
+        b1 = _ag(p.b1, tp_w, 1)
+        b2 = _ag(p.b2, fsdp, 1)
+        if not dc:
+            b2 = _mask_rank0(b2, tp)
         y = espec.moe_mlp(x, ri, w1, b1, w2, b2, act=ms.act, impl=cfg.impl)
 
-    if tp is not None:
+    if tp is not None and not dc:
         # Partial products over the TP-sharded contraction dim.
         if gather_tokens and cfg.collective_schedule == "ag_rs":
             y = lax.psum_scatter(y, tp, scatter_dimension=0, tiled=True)
@@ -204,6 +254,32 @@ def ep_moe_island(
     return y, r.aux_loss, r.z_loss
 
 
+def _auto_layer_mode(
+    p: MoEParams,
+    ms: MoEStatic,
+    cfg: ParallelConfig,
+    mesh: Optional[Mesh],
+    tokens: int,
+    layer_idx: Optional[int],
+) -> str:
+    """Resolve the per-layer dispatch for cfg.mode == "auto" from static
+    shapes (paper Fig. 10 roofline; see parallel.autotune)."""
+    from repro.parallel import autotune
+
+    w = p.w_gate if p.w_gate is not None else p.w1
+    e, d, f = w.shape
+    if mesh is not None and getattr(mesh, "axis_names", ()):
+        dp_axes = cfg.axes(mesh)["dp"]
+        dp = 1
+        for a in dp_axes:
+            dp *= mesh.shape[a]
+        tokens = max(tokens // max(dp, 1), 1)  # workload per TP group
+    return autotune.resolve_layer_mode(
+        tokens, d=d, f=f, e=ms.num_experts, k=ms.top_k,
+        cfg=cfg, mesh=mesh, layer_idx=layer_idx,
+    )
+
+
 def moe_layer(
     x: jax.Array,                    # (B, S, D) global
     p: MoEParams,                    # sharded per resolve_spec
@@ -213,12 +289,24 @@ def moe_layer(
     *,
     x_spec: P,                       # how (B, S, D) is sharded
     noise_rng: Optional[jax.Array] = None,
+    layer_idx: Optional[int] = None,
+    pregathered: bool = False,
 ):
     """Distributed MoE FFN over a (B, S, D) activation. Returns
-    (y, aux_loss, z_loss) with y sharded like x."""
+    (y, aux_loss, z_loss) with y sharded like x.
+
+    ``layer_idx`` feeds the auto-mode plan lookup; ``pregathered`` marks the
+    weights' fsdp factor as already gathered (pipeline-shared cache path)."""
     b, s, d = x.shape
 
     island = ep_moe_island if cfg.mode == "ep" else hexa_moe_island
+    if island is hexa_moe_island:
+        layer_mode = None
+        if cfg.mode == "auto":
+            layer_mode = _auto_layer_mode(p, ms, cfg, mesh, b * s, layer_idx)
+        island = functools.partial(
+            island, layer_mode=layer_mode, pregathered=pregathered
+        )
 
     if mesh is None:
         # Single-process path (unit tests): plain local computation.
@@ -244,50 +332,43 @@ def moe_layer(
         z = lax.pmean(z, mesh.axis_names)
         return y.reshape(bl, sl, d), aux, z
 
-    p_specs = _param_specs(p, ms, cfg, mesh)
+    p_specs = _param_specs(p, ms, cfg, mesh, pregathered=pregathered)
     rng_arg = None if noise_rng is None else noise_rng[None]
     rng_spec = None if noise_rng is None else P()
-    y, aux, z = jax.shard_map(
+    y, aux, z = _shard_map(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(x_spec, p_specs, rng_spec),
         out_specs=(x_spec, P(), P()),
-        check_vma=False,
     )(x, p, rng_arg)
     return y, aux, z
 
 
-def _param_specs(p: MoEParams, ms: MoEStatic, cfg: ParallelConfig, mesh: Mesh):
-    """Physical specs for MoEParams matching parallel.sharding's resolution."""
+def _param_specs(p: MoEParams, ms: MoEStatic, cfg: ParallelConfig, mesh: Mesh,
+                 *, pregathered: bool = False):
+    """Physical specs for MoEParams matching parallel.sharding's resolution.
+
+    ``pregathered``: weight leaves arrive with their fsdp factor already
+    gathered (parallel.cache.gather_ffn_params), so drop "fsdp" from their
+    logical specs before resolving. Logical specs come from the same
+    MOE_PARAM_LOGICAL / EP_PARAM_LOGICAL tables the init/gather paths use,
+    so the three can never drift apart."""
+    from repro.parallel.cache import _drop_fsdp
     from repro.parallel.sharding import divisible_spec, resolve_spec
 
-    def spec_of(v, logical):
+    table = EP_PARAM_LOGICAL if cfg.mode == "ep" else MOE_PARAM_LOGICAL
+
+    def spec_of(name):
+        v = getattr(p, name)
         if v is None:
             return None
+        logical = table[name]
+        if pregathered and name != "router":
+            logical = _drop_fsdp(logical)
         phys = resolve_spec(logical, cfg, mesh)
         return divisible_spec(v.shape, phys, mesh)
 
-    if cfg.mode == "ep":
-        return MoEParams(
-            router=spec_of(p.router, (None, None)),
-            w_gate=spec_of(p.w_gate, ("tp", None, None)),
-            w_up=spec_of(p.w_up, ("tp", None, None)),
-            w_down=spec_of(p.w_down, ("tp", None, None)),
-            w1=spec_of(p.w1, ("tp", None, None)),
-            b1=spec_of(p.b1, ("tp", None)),
-            w2=spec_of(p.w2, ("tp", None, None)),
-            b2=spec_of(p.b2, ("tp", None)),
-        )
-    return MoEParams(
-        router=spec_of(p.router, (None, None)),
-        w_gate=spec_of(p.w_gate, (None, "fsdp", "tp")),
-        w_up=spec_of(p.w_up, (None, "fsdp", "tp")),
-        w_down=spec_of(p.w_down, (None, "tp", "fsdp")),
-        w1=spec_of(p.w1, (None, "fsdp", "tp")),
-        b1=spec_of(p.b1, (None, "tp")),
-        w2=spec_of(p.w2, (None, "tp", "fsdp")),
-        b2=spec_of(p.b2, (None, "fsdp")),
-    )
+    return MoEParams(**{name: spec_of(name) for name in MoEParams._fields})
 
 
 MOE_PARAM_LOGICAL = {

@@ -12,12 +12,14 @@ Logical axis names used by every model definition:
 The paper's two configurations are corners of this family (DESIGN.md §3):
 model-centric disables "fsdp" (params replicated over data, TP compute);
 data-centric folds "tp" into the gather (params fully gathered at use, no
-TP compute). ``ParallelConfig.mode`` selects the mapping.
+TP compute). ``ParallelConfig.mode`` selects the mapping; mode="auto" keeps
+the hybrid layout and lets each MoE layer pick its dispatch at trace time
+from the parallel.autotune roofline (paper §4.5 / Fig. 10).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Sequence
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +69,9 @@ class ParallelConfig:
       "hybrid"        — fsdp -> (pod, data), tp -> model  (default at scale)
       "model_centric" — fsdp -> (),          tp -> model  (paper §4.3 TP)
       "data_centric"  — fsdp -> ALL axes,    tp -> ()     (paper §4.3 gather)
+      "auto"          — hybrid physical layout; each MoE layer picks its
+                        data-/model-centric collective schedule at trace time
+                        from the roofline (parallel.autotune, paper Fig. 10)
       "ep"            — expert parallelism baseline (all-to-all)
     collective_schedule:
       "ag_ar" — paper-faithful: tokens replicated in TP, outputs all-reduced.
@@ -76,6 +81,21 @@ class ParallelConfig:
                        saved for backward (remat re-gathers per layer).
       "janus"        — retain gathered params for backward (memory baseline).
       "none"         — no remat at all.
+    Auto-mode knobs (ignored for other modes):
+      forced_layer_mode — pin every MoE layer's dispatch ("data_centric" /
+                          "model_centric"); bypasses the chooser entirely.
+      layer_mode_plan   — per-period-position plan from
+                          autotune.plan_layer_modes (None entries defer to
+                          the chooser).
+      device_latencies  — heterogeneous proxy latencies (core.hetero t_i);
+                          shrink the chooser's effective TP group size.
+    Pipeline-shared cache realisation (models.lm unrolled layer loop):
+      cache_layers — gathered-period residency bound for the prefetching
+                     cache (one entry = one period's MoE layers; 2 = double
+                     buffer); 0 disables it. Requires scan_layers=False.
+                     Inference-side: the remat'd train step skips it (the
+                     remat policy is training's cache) so gathered trees
+                     never become checkpoint residuals.
     """
     mode: str = "hybrid"
     collective_schedule: str = "ag_rs"
@@ -85,6 +105,10 @@ class ParallelConfig:
     impl: Optional[str] = None    # kernel impl override
     capacity_factor: float = 1.25 # EP baseline only
     scan_layers: bool = True
+    forced_layer_mode: Optional[str] = None
+    layer_mode_plan: Optional[Tuple[Optional[str], ...]] = None
+    device_latencies: Optional[Tuple[float, ...]] = None
+    cache_layers: int = 0
 
     def axes(self, mesh: Mesh) -> dict:
         names = list(mesh.axis_names)
@@ -98,7 +122,11 @@ class ParallelConfig:
             # gathered at use (pipeline-shared cache bounds residency).
             all_axes = dp + ((tp,) if tp else ())
             return {"fsdp": all_axes, "tp": None, "dp": all_axes, "sp": None}
-        if self.mode in ("hybrid", "ep"):
+        if self.mode in ("hybrid", "ep", "auto"):
+            # "auto" uses the hybrid physical layout — the superset both
+            # per-layer behaviours execute from: model-centric dispatch moves
+            # tokens over "tp", data-centric dispatch gathers the weights'
+            # tp factor inside the island instead (DESIGN.md §3).
             return {"fsdp": dp, "tp": tp, "dp": dp, "sp": tp}
         raise ValueError(self.mode)
 

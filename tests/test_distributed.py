@@ -13,7 +13,10 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def run_sub(code: str, timeout: int = 900) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # Force the CPU backend: with JAX_PLATFORMS unset, jax probes the TPU
+    # plugin first, and off-TPU that means minutes of GCP-metadata retries
+    # before the CPU fallback. Fake devices come from XLA_FLAGS regardless.
+    env["JAX_PLATFORMS"] = "cpu"
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     res = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, env=env, timeout=timeout)
@@ -32,8 +35,8 @@ from repro.parallel.moe_parallel import MoEParams, MoEStatic, moe_layer
 from repro.parallel.sharding import ParallelConfig
 from repro.core import espec
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 B, S, D, F, E, K = 8, 16, 32, 64, 4, 2
 ks = jax.random.split(jax.random.PRNGKey(0), 6)
 x = jax.random.normal(ks[0], (B, S, D), jnp.float32)
@@ -145,9 +148,10 @@ import json
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.optim.compression import compressed_psum
+from repro.launch.mesh import make_mesh
+from repro.parallel.moe_parallel import _shard_map
 
-mesh = jax.make_mesh((8,), ("pod",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("pod",))
 g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
 
 def body(g_loc):
@@ -155,9 +159,9 @@ def body(g_loc):
     return out[None], res[None]
 
 with mesh:
-    out, res = jax.jit(jax.shard_map(
-        body, mesh=mesh, in_specs=(P("pod", None),),
-        out_specs=(P("pod", None), P("pod", None)), check_vma=False,
+    out, res = jax.jit(_shard_map(
+        body, mesh, in_specs=(P("pod", None),),
+        out_specs=(P("pod", None), P("pod", None)),
     ))(g)
 exact = jnp.sum(g, axis=0)
 rel = float(jnp.linalg.norm(out[0] - exact) / jnp.linalg.norm(exact))
@@ -200,8 +204,8 @@ ok = all(
     bool(np.allclose(np.asarray(a), np.asarray(b)))
     for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb))
 )
-devs = {str(x.sharding.mesh.shape) for x in jax.tree.leaves(pb)}
+devs = {json.dumps(dict(x.sharding.mesh.shape)) for x in jax.tree.leaves(pb)}
 print("RESULT" + json.dumps({"ok": ok, "meshes": sorted(devs)}))
 """)
     assert out["ok"]
-    assert "OrderedDict({'data': 2, 'model': 2})" in out["meshes"][0]
+    assert json.loads(out["meshes"][0]) == {"data": 2, "model": 2}

@@ -1,6 +1,7 @@
 """Heterogeneous-aware allocation (paper Eq. 1/2, Table 3 logic)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hetero import (
