@@ -1,24 +1,27 @@
 """Kernel microbenchmarks: expert-specific op implementations on CPU.
 
-us_per_call for esmm / esfk across impls. 'pallas' runs in interpret mode
-here (correctness path; its TPU perf story is the dry-run roofline —
-interpret timing is NOT representative). 'blocked' is the fair CPU
-execution path; 'dense_ep' computes every expert densely (the redundancy
-the paper removes) as the flop baseline.
+us_per_call for esmm / esfk across impls, plus the fused expert-FFN
+(``esffn``, DESIGN.md §5) against the unfused gather/esmm/act/esmm/combine
+composition at the ``espec.moe_glu`` / ``moe_mlp`` level. 'pallas' runs in
+interpret mode here (correctness path; its TPU perf story is the dry-run
+roofline — interpret timing is NOT representative). 'blocked' is the fair
+CPU execution path; 'dense_ep' computes every expert densely (the
+redundancy the paper removes) as the flop baseline.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, time_pair
+from repro.core import espec
 from repro.core.reindex import build_reindex, gather_sorted
 from repro.kernels import ops
 
 
 def run(quick: bool = True):
     n, d, f, e, k, blk = (1024, 256, 512, 8, 2, 64)
-    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
     ei = jax.random.randint(ks[0], (n, k), 0, e)
     g = jax.random.uniform(ks[1], (n, k))
     ri = build_reindex(ei, g, e, blk)
@@ -27,15 +30,12 @@ def run(quick: bool = True):
     w = jax.random.normal(ks[3], (e, d, f)) * 0.1
 
     impls = ["blocked", "ragged"] + ([] if quick else ["pallas"])
-    base = None
     for impl in impls:
         fn = jax.jit(
             lambda xs, w: ops.esmm(xs, w, None, ri.block_expert,
                                    ri.padded_counts, impl=impl)
         )
         us = time_fn(fn, xs, w, iters=5, warmup=2)
-        if base is None:
-            base = us
         emit(f"kernel/esmm/{impl}", us, f"rows={ri.num_rows};D={d};F={f}")
 
     # dense every-expert baseline (zero-redundancy counterpoint)
@@ -53,6 +53,33 @@ def run(quick: bool = True):
         )
         us = time_fn(fn, xs, dy, iters=5, warmup=2)
         emit(f"kernel/esfk/{impl}", us, "dW+db fused")
+
+    # fused forward FFN (esffn megakernel shape) vs the unfused composition,
+    # measured end-to-end at the espec.moe_* level on the blocked CPU path.
+    wg = jax.random.normal(ks[4], (e, d, f)) * 0.1
+    wu = jax.random.normal(ks[5], (e, d, f)) * 0.1
+    wd = jax.random.normal(ks[6], (e, f, d)) * 0.1
+    b1 = jax.random.normal(ks[7], (e, f)) * 0.1
+    b2 = jnp.zeros((e, d))
+    bodies = {
+        "moe_glu": (
+            lambda fused: jax.jit(lambda x, a, b, c: espec.moe_glu(
+                x, ri, a, b, c, act="silu", impl="blocked", fused=fused)),
+            (x, wg, wu, wd),
+        ),
+        "moe_mlp": (
+            lambda fused: jax.jit(lambda x, a, b, c, dd: espec.moe_mlp(
+                x, ri, a, b, c, dd, act="gelu", impl="blocked", fused=fused)),
+            (x, wg, b1, wd, b2),
+        ),
+    }
+    for name, (mk, args) in bodies.items():
+        # Interleaved A/B so machine-load drift cannot skew the ratio.
+        us_u, us_f, speedup = time_pair(mk(False), mk(True), *args, rounds=16)
+        emit(f"kernel/{name}/blocked_unfused", us_u,
+             f"rows={ri.num_rows};D={d};F={f}")
+        emit(f"kernel/{name}/blocked_fused", us_f,
+             f"speedup_vs_unfused={speedup:.2f}x")
 
 
 if __name__ == "__main__":

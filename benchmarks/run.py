@@ -1,13 +1,17 @@
 """Benchmark entry point — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV per the harness contract.
+Prints ``name,us_per_call,derived`` CSV per the harness contract and writes
+the same results machine-readably to ``BENCH_kernels.json`` (``--json``),
+so the per-PR perf trajectory accumulates alongside the stdout table.
 ``--full`` widens sweeps to the paper's full grids (slow on 1 CPU core).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+import time
 import traceback
 
 # Runnable both as `python -m benchmarks.run` and `python benchmarks/run.py`,
@@ -27,12 +31,17 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: kernel,hetero,centric,"
                          "memory,latency,ablation")
+    ap.add_argument("--json", default=os.path.join(_ROOT, "BENCH_kernels.json"),
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args()
     quick = not args.full
+
+    import jax
 
     from benchmarks import (
         ablation,
         centric_crossover,
+        common as bench_common,
         hetero_alloc,
         kernel_bench,
         latency_table,
@@ -48,6 +57,7 @@ def main() -> None:
         "ablation": ablation.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
+    bench_common.reset_records()
     print("name,us_per_call,derived")
     failed = []
     for name in wanted:
@@ -56,6 +66,42 @@ def main() -> None:
         except Exception:  # noqa: BLE001 — report and continue
             failed.append(name)
             traceback.print_exc()
+    if args.json:
+        results = {
+            r["name"]: {
+                "us_per_call": round(r["us_per_call"], 1),
+                "derived": r["derived"],
+            }
+            for r in bench_common.RECORDS
+        }
+        if (args.only or failed) and os.path.exists(args.json):
+            # Subset or partially-failed run: refresh only the re-measured
+            # rows, keep the rest of the accumulated trajectory.
+            try:
+                with open(args.json) as fh:
+                    old = json.load(fh).get("results", {})
+                results = {**old, **results}
+            except (OSError, ValueError):
+                pass
+        payload = {
+            "meta": {
+                "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                "grid": "full" if args.full else "quick",
+                "suites": wanted,
+                "failed_suites": failed,
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+            },
+            "results": results,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(
+            f"wrote {args.json} ({len(results)} entries, "
+            f"{len(bench_common.RECORDS)} fresh)",
+            file=sys.stderr,
+        )
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

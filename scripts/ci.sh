@@ -14,7 +14,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 
-# Benchmark smoke: every paper-table module must at least run its quick grid.
-python benchmarks/run.py --quick
+# Benchmark smoke: every paper-table module must at least run its quick grid
+# (JAX_PLATFORMS=cpu via the Makefile) and emit BENCH_kernels.json, so the
+# harness and the machine-readable perf trajectory can't bit-rot.
+make bench
 
 make docs-check

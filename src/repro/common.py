@@ -10,6 +10,16 @@ import jax.numpy as jnp
 import numpy as np
 
 
+#: Activation table shared by the espec layer and the fused-FFN kernels
+#: (kernels must not import core.espec — it imports kernels.ops).
+ACTIVATIONS: dict = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 

@@ -8,32 +8,36 @@ with zero computation redundancy: no capacity factor, no token drop, at most
 BLK-1 pad rows per expert. Autodiff flows through the custom-vjp'd ``esmm``
 (dX via ESMM, dW/db via the fused ESFK), i.e. exactly the paper's Table 5.
 
+With ``fused`` on (default for the TPU ``pallas`` impl) the gather/ESMM/act/
+ESMM/gate stages collapse into ONE fused-FFN op (``kernels.ops.esffn_*``,
+the Pallas megakernel of DESIGN.md §5): token rows are gathered straight
+from the unsorted activations, the (Np, F) hidden never touches HBM, and
+only the final scatter-add combine remains outside.
+
 Two expert body types are supported:
   * ``moe_mlp`` — the paper's 2-MLP expert (Swin-MoE, classic GShard FFN).
   * ``moe_glu`` — gate/up/down GLU experts (Mixtral / Qwen3 / Jamba).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 
+from repro.common import ACTIVATIONS
 from repro.core.reindex import (
     ReIndex,
     build_reindex,
     combine_scatter,
     gather_sorted,
+    scatter_rows,
 )
 from repro.core.routing import RouterOutput, route
 from repro.kernels import ops
 
-ACTIVATIONS: dict[str, Callable] = {
-    "gelu": jax.nn.gelu,
-    "silu": jax.nn.silu,
-    "relu": jax.nn.relu,
-    "tanh": jnp.tanh,
-}
+__all__ = [
+    "ACTIVATIONS", "MoEOutput", "hexa_moe_ffn", "moe_glu", "moe_mlp",
+]
 
 
 def moe_mlp(
@@ -46,8 +50,18 @@ def moe_mlp(
     *,
     act: str = "gelu",
     impl: Optional[str] = None,
+    fused: Optional[bool] = None,
 ) -> jax.Array:
     """Paper-form 2-MLP expert FFN over a flat token batch x: (N, D)."""
+    impl = impl or ops.get_default_impl()
+    if fused is None:
+        fused = ops.default_fused_ffn(impl)
+    if fused:
+        ys = ops.esffn_mlp(
+            x, ri.row_token, ri.row_gate, ri.block_expert, ri.padded_counts,
+            w1, b1, w2, b2, act=act, impl=impl,
+        )
+        return scatter_rows(ys, ri.row_token, x.shape[0])
     f = ACTIVATIONS[act]
     xs = gather_sorted(x, ri)
     h = ops.esmm(xs, w1, b1, ri.block_expert, ri.padded_counts, impl=impl)
@@ -65,8 +79,18 @@ def moe_glu(
     *,
     act: str = "silu",
     impl: Optional[str] = None,
+    fused: Optional[bool] = None,
 ) -> jax.Array:
     """GLU expert FFN: y = (act(x Wg) * (x Wu)) Wd, routed per token."""
+    impl = impl or ops.get_default_impl()
+    if fused is None:
+        fused = ops.default_fused_ffn(impl)
+    if fused:
+        ys = ops.esffn_glu(
+            x, ri.row_token, ri.row_gate, ri.block_expert, ri.padded_counts,
+            w_gate, w_up, w_down, act=act, impl=impl,
+        )
+        return scatter_rows(ys, ri.row_token, x.shape[0])
     f = ACTIVATIONS[act]
     xs = gather_sorted(x, ri)
     g = ops.esmm(xs, w_gate, None, ri.block_expert, ri.padded_counts, impl=impl)
@@ -96,11 +120,14 @@ def hexa_moe_ffn(
     softmax_after_topk: bool = False,
     noise_rng: Optional[jax.Array] = None,
     impl: Optional[str] = None,
+    fused: Optional[bool] = None,
 ) -> MoEOutput:
     """Complete Hexa-MoE FFN: routing + expert-specific computation.
 
     x: (N, D) flat tokens. params holds 'router' (D, E) plus either
     {'w1','b1','w2','b2'} (mlp) or {'w_gate','w_up','w_down'} (glu).
+    ``fused``: collapse the FFN stages into the single fused op (None =
+    impl default: on for pallas).
     """
     r = route(
         x,
@@ -120,6 +147,7 @@ def hexa_moe_ffn(
             params["w_down"],
             act=act,
             impl=impl,
+            fused=fused,
         )
     else:
         y = moe_mlp(
@@ -131,5 +159,6 @@ def hexa_moe_ffn(
             params.get("b2"),
             act=act,
             impl=impl,
+            fused=fused,
         )
     return MoEOutput(y=y, aux_loss=r.aux_loss, z_loss=r.z_loss, router=r)

@@ -126,14 +126,21 @@ def build_reindex(
     )
 
 
-def gather_sorted(x: jax.Array, ri: ReIndex) -> jax.Array:
+def gather_rows(x: jax.Array, row_token: jax.Array) -> jax.Array:
     """Materialise the expert-sorted layout: (Np, D) from (N, D) tokens.
 
-    Sentinel rows gather an appended all-zero row, so padded blocks compute
-    on zeros and never contaminate gradients.
+    Sentinel rows (token id == N) gather an appended all-zero row, so padded
+    blocks compute on zeros and never contaminate gradients. Single source
+    of the sentinel-row convention: the unfused path (``gather_sorted``)
+    and the fused op's recompute (``kernels.ops``) both route through here.
     """
     xp = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
-    return xp[ri.row_token]
+    return xp[row_token]
+
+
+def gather_sorted(x: jax.Array, ri: ReIndex) -> jax.Array:
+    """``gather_rows`` driven by a full ReIndex descriptor."""
+    return gather_rows(x, ri.row_token)
 
 
 def combine_scatter(ys: jax.Array, ri: ReIndex, num_tokens: int) -> jax.Array:
@@ -144,5 +151,15 @@ def combine_scatter(ys: jax.Array, ri: ReIndex, num_tokens: int) -> jax.Array:
     per-choice output copies.
     """
     vals = ys * ri.row_gate[:, None].astype(ys.dtype)
+    return scatter_rows(vals, ri.row_token, num_tokens)
+
+
+def scatter_rows(ys: jax.Array, row_token: jax.Array, num_tokens: int) -> jax.Array:
+    """Scatter-add ALREADY gate-weighted sorted rows back to token order.
+
+    The combine step for the fused FFN (``kernels.ops.esffn_*``), whose
+    kernel applies the gate before writing; sentinel rows (== num_tokens)
+    land out of range and are dropped.
+    """
     out = jnp.zeros((num_tokens, ys.shape[1]), ys.dtype)
-    return out.at[ri.row_token].add(vals, mode="drop")
+    return out.at[row_token].add(ys, mode="drop")

@@ -1,0 +1,331 @@
+"""ESFFN — fused expert-FFN megakernel (Pallas TPU). DESIGN.md §5.
+
+ONE ``pallas_call`` runs the whole expert FFN over the expert-sorted layout:
+
+  gather -> up/gate ESMM -> activation -> down ESMM -> gate-weighted output
+
+Per BLK_M block the kernel
+
+  1. DMA-gathers its token rows straight out of the *unsorted* ``(N, D)``
+     activations via the scalar-prefetched ``row_token`` map — the
+     ``(Np, D)`` ``gather_sorted`` copy is never materialised in HBM,
+  2. computes the up/gate projections against the scalar-prefetched expert
+     weight tiles, sharing the single VMEM-resident x tile between gate and
+     up in the GLU case,
+  3. applies the activation on the VPU,
+  4. accumulates the down projection in a float32 VMEM accumulator across
+     hidden-dim tiles, and
+  5. writes the gate-weighted sorted output (combine-ready: the caller's
+     scatter-add needs no further gate multiply).
+
+The ``(Np, F)`` hidden activations exist only tile-wise in VMEM, so the
+kernel's HBM traffic is the token rows, one expert weight tile per block,
+and the output — the forward analogue of the ESFK backward fusion
+(DESIGN.md §2), and the dominant inter-stage traffic the unfused
+gather/esmm/act/esmm/combine composition round-trips through HBM.
+
+Padding rows (``row_token == N``) clamp their gather to row ``N-1``; the
+garbage they compute is annihilated by their zero combine gate, which is
+applied in-kernel before the write.
+
+Backward is flash-style recompute, wired in ``kernels.ops``: only xs-level
+residuals are saved and the hidden is rebuilt tile-wise from the existing
+ESMM/ESFK ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.common import ACTIVATIONS, pallas_interpret_default, tpu_compiler_params
+
+_CONTRACT_K = (((1,), (0,)), ((), ()))  # row-major matmul: (m,k)x(k,n)
+
+
+def esffn_cost(
+    np_rows: int,
+    d: int,
+    f: int,
+    num_blocks: int,
+    itemsize: int,
+    *,
+    glu: bool,
+    has_b1: bool = False,
+    has_b2: bool = False,
+) -> pl.CostEstimate:
+    """Cost model of the fused FFN pass.
+
+    ``bytes_accessed`` counts the gathered token rows, one expert weight
+    tile per M-block, the gate vector and the sorted output — and, by
+    construction, EXCLUDES the (Np, F) hidden round-trip the unfused
+    composition pays (2 HBM writes + 2..3 reads of g/u/h between stages)
+    plus the (Np, D) sorted-copy round-trip of ``gather_sorted``.
+    """
+    n_mm = 3 if glu else 2
+    flops = n_mm * 2 * np_rows * d * f
+    w_bytes = num_blocks * n_mm * d * f * itemsize
+    b_bytes = num_blocks * ((f if has_b1 else 0) + (d if has_b2 else 0)) * itemsize
+    bytes_accessed = (
+        np_rows * d * itemsize      # token rows gathered in
+        + w_bytes + b_bytes         # one expert tile per m-block
+        + np_rows * 4               # row_gate
+        + np_rows * d * itemsize    # gate-weighted sorted output
+    )
+    return pl.CostEstimate(
+        flops=flops, bytes_accessed=int(bytes_accessed),
+        transcendentals=np_rows * f,
+    )
+
+
+def _gather_block(x_any, rt_ref, x_s, sem, m, bm, n_tokens):
+    """DMA rows ``row_token[m*bm : (m+1)*bm]`` of the unsorted x into VMEM.
+
+    Sentinel rows (token id == n_tokens) clamp to the last real row: their
+    values are annihilated by the zero combine gate at write-out, so any
+    finite row serves. All row copies are started before any is awaited so
+    Mosaic can keep the full gather in flight.
+    """
+    base = m * bm
+
+    def start(i, _):
+        tok = jnp.minimum(rt_ref[base + i], n_tokens - 1)
+        pltpu.make_async_copy(x_any.at[tok], x_s.at[i], sem).start()
+        return _
+
+    jax.lax.fori_loop(0, bm, start, None)
+
+    def wait(i, _):
+        # Waits are by byte count: any same-shaped descriptor drains one row.
+        pltpu.make_async_copy(x_any.at[0], x_s.at[0], sem).wait()
+        return _
+
+    jax.lax.fori_loop(0, bm, wait, None)
+
+
+def _esffn_glu_kernel(
+    block_expert,  # scalar prefetch (num_blocks,)
+    row_token,     # scalar prefetch (Np,)
+    x_any,         # (N, D) unsorted tokens, ANY/HBM
+    wg_ref,        # (1, D, BLK_F)
+    wu_ref,        # (1, D, BLK_F)
+    wd_ref,        # (1, BLK_F, D)
+    gate_ref,      # (BLK_M, 1)
+    o_ref,         # (BLK_M, D)
+    x_s,           # VMEM (BLK_M, D) x.dtype
+    acc,           # VMEM (BLK_M, D) f32
+    sem,           # DMA semaphore
+    *,
+    act_fn,
+    bm: int,
+    n_tokens: int,
+):
+    m = pl.program_id(0)
+    fb = pl.program_id(1)
+    nf = pl.num_programs(1)
+
+    @pl.when(fb == 0)
+    def _load():
+        _gather_block(x_any, row_token, x_s, sem, m, bm, n_tokens)
+        acc[...] = jnp.zeros_like(acc)
+
+    x = x_s[...]
+    # One read of the x tile feeds BOTH projections (the GLU sharing).
+    g = jax.lax.dot_general(
+        x, wg_ref[0], _CONTRACT_K, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    u = jax.lax.dot_general(
+        x, wu_ref[0], _CONTRACT_K, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    h = act_fn(g) * u  # (BLK_M, BLK_F), VMEM only — never written to HBM
+    acc[...] += jax.lax.dot_general(
+        h, wd_ref[0], _CONTRACT_K, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(fb == nf - 1)
+    def _flush():
+        o_ref[...] = (
+            acc[...] * gate_ref[...].astype(jnp.float32)
+        ).astype(o_ref.dtype)
+
+
+def _esffn_mlp_kernel(
+    block_expert,
+    row_token,
+    x_any,
+    w1_ref,        # (1, D, BLK_F)
+    *rest,         # [b1 (1, BLK_F)], w2 (1, BLK_F, D), [b2 (1, D)],
+                   # gate, o, x_s, acc, sem
+    act_fn,
+    bm: int,
+    n_tokens: int,
+    has_b1: bool,
+    has_b2: bool,
+):
+    rest = list(rest)
+    b1_ref = rest.pop(0) if has_b1 else None
+    w2_ref = rest.pop(0)
+    b2_ref = rest.pop(0) if has_b2 else None
+    gate_ref, o_ref, x_s, acc, sem = rest
+
+    m = pl.program_id(0)
+    fb = pl.program_id(1)
+    nf = pl.num_programs(1)
+
+    @pl.when(fb == 0)
+    def _load():
+        _gather_block(x_any, row_token, x_s, sem, m, bm, n_tokens)
+        if has_b2:
+            # b2 is added once per row, not once per hidden tile.
+            acc[...] = jnp.broadcast_to(
+                b2_ref[0].astype(jnp.float32), acc.shape
+            )
+        else:
+            acc[...] = jnp.zeros_like(acc)
+
+    x = x_s[...]
+    z = jax.lax.dot_general(
+        x, w1_ref[0], _CONTRACT_K, preferred_element_type=jnp.float32
+    )
+    if has_b1:
+        z = z + b1_ref[0].astype(jnp.float32)
+    h = act_fn(z.astype(x.dtype))
+    acc[...] += jax.lax.dot_general(
+        h, w2_ref[0], _CONTRACT_K, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(fb == nf - 1)
+    def _flush():
+        o_ref[...] = (
+            acc[...] * gate_ref[...].astype(jnp.float32)
+        ).astype(o_ref.dtype)
+
+
+def _call(kernel, x, row_token, row_gate, block_expert, tensor_args,
+          tensor_specs, f_dim, bf, cost, interpret):
+    n, d = x.shape
+    np_rows = row_token.shape[0]
+    nm = block_expert.shape[0]
+    assert np_rows % nm == 0, (np_rows, nm)
+    bm = np_rows // nm
+    bf = min(bf, f_dim)
+    assert f_dim % bf == 0, (f_dim, bf)
+    grid = (nm, f_dim // bf)
+
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)] + tensor_specs + [
+        pl.BlockSpec((bm, 1), lambda m, fb, be, rt: (m, 0)),
+    ]
+    return pl.pallas_call(
+        functools.partial(kernel, bm=bm, n_tokens=n),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, d), lambda m, fb, be, rt: (m, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bm, d), x.dtype),
+                pltpu.VMEM((bm, d), jnp.float32),
+                pltpu.SemaphoreType.DMA,
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((np_rows, d), x.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        cost_estimate=cost,
+        interpret=interpret,
+    )(block_expert, row_token, x, *tensor_args,
+      row_gate.reshape(np_rows, 1).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bf", "interpret"))
+def esffn_glu_pallas(
+    x: jax.Array,
+    row_token: jax.Array,
+    row_gate: jax.Array,
+    block_expert: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    act: str = "silu",
+    bf: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused GLU expert FFN: (N, D) unsorted tokens -> (Np, D) gate-weighted
+    sorted output, in one Pallas pass.
+
+    x: (N, D); row_token/row_gate: (Np,) from ``core.reindex``; block_expert:
+    (Np // blk,); w_gate/w_up: (E, D, F); w_down: (E, F, D).
+    """
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    n, d = x.shape
+    e, dw, f = w_gate.shape
+    assert dw == d and w_up.shape == (e, d, f) and w_down.shape == (e, f, d)
+    nm = block_expert.shape[0]
+    bf_r = min(bf, f)
+    kernel = functools.partial(_esffn_glu_kernel, act_fn=ACTIVATIONS[act])
+    specs = [
+        pl.BlockSpec((1, d, bf_r), lambda m, fb, be, rt: (be[m], 0, fb)),
+        pl.BlockSpec((1, d, bf_r), lambda m, fb, be, rt: (be[m], 0, fb)),
+        pl.BlockSpec((1, bf_r, d), lambda m, fb, be, rt: (be[m], fb, 0)),
+    ]
+    cost = esffn_cost(
+        row_token.shape[0], d, f, nm, w_gate.dtype.itemsize, glu=True
+    )
+    return _call(kernel, x, row_token, row_gate, block_expert,
+                 [w_gate, w_up, w_down], specs, f, bf, cost, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bf", "interpret"))
+def esffn_mlp_pallas(
+    x: jax.Array,
+    row_token: jax.Array,
+    row_gate: jax.Array,
+    block_expert: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array | None,
+    w2: jax.Array,
+    b2: jax.Array | None,
+    *,
+    act: str = "gelu",
+    bf: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused 2-MLP expert FFN (optionally biased); see ``esffn_glu_pallas``.
+
+    w1: (E, D, F); b1: (E, F) or None; w2: (E, F, D); b2: (E, D) or None.
+    """
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    n, d = x.shape
+    e, dw, f = w1.shape
+    assert dw == d and w2.shape == (e, f, d)
+    nm = block_expert.shape[0]
+    bf_r = min(bf, f)
+    kernel = functools.partial(
+        _esffn_mlp_kernel, act_fn=ACTIVATIONS[act],
+        has_b1=b1 is not None, has_b2=b2 is not None,
+    )
+    args = [w1]
+    specs = [pl.BlockSpec((1, d, bf_r), lambda m, fb, be, rt: (be[m], 0, fb))]
+    if b1 is not None:
+        assert b1.shape == (e, f)
+        args.append(b1)
+        specs.append(pl.BlockSpec((1, bf_r), lambda m, fb, be, rt: (be[m], fb)))
+    args.append(w2)
+    specs.append(pl.BlockSpec((1, bf_r, d), lambda m, fb, be, rt: (be[m], fb, 0)))
+    if b2 is not None:
+        assert b2.shape == (e, d)
+        args.append(b2)
+        specs.append(pl.BlockSpec((1, d), lambda m, fb, be, rt: (be[m], 0)))
+    cost = esffn_cost(
+        row_token.shape[0], d, f, nm, w1.dtype.itemsize, glu=False,
+        has_b1=b1 is not None, has_b2=b2 is not None,
+    )
+    return _call(kernel, x, row_token, row_gate, block_expert,
+                 args, specs, f, bf, cost, interpret)

@@ -13,6 +13,13 @@ over the expert-sorted layout (see ``core.reindex``):
 The backward pass is wired by ``custom_vjp`` exactly as the paper's Table 5:
 dX via ESMM with transposed weights, (dW, db) via the fused ESFK (or the
 unfused ESTMM + ESS pair when ``fused=False``, paper Fig. 12 ablation).
+
+The forward-side fusion (DESIGN.md §5) lives here too: ``esffn_glu`` /
+``esffn_mlp`` run the whole expert FFN — gather, up/gate, activation, down,
+gate weighting — as ONE op (the Pallas megakernel ``kernels.esffn`` on TPU,
+a single fused XLA region for ``blocked``), with a flash-style custom_vjp
+that saves only xs-level residuals and recomputes the hidden tile-wise in
+the backward from the ESMM/ESFK ops above.
 """
 from __future__ import annotations
 
@@ -23,9 +30,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.common import on_tpu
+from repro.common import ACTIVATIONS, on_tpu
 from repro.kernels import ref as _ref
 from repro.kernels.esmm import esmm_pallas
+from repro.kernels.esffn import esffn_glu_pallas, esffn_mlp_pallas
 from repro.kernels.esfk import esfk_pallas
 from repro.kernels.ess import ess_pallas
 from repro.kernels.estmm import estmm_pallas
@@ -45,6 +53,16 @@ def get_default_impl() -> str:
     if _DEFAULT_IMPL is not None:
         return _DEFAULT_IMPL
     return "pallas" if on_tpu() else "blocked"
+
+
+def default_fused_ffn(impl: Optional[str] = None) -> bool:
+    """Whether the fused forward FFN (DESIGN.md §5) is on by default.
+
+    On for the TPU ``pallas`` path, where the megakernel removes real HBM
+    round-trips; the XLA impls keep the unfused composition unless the
+    caller (``ParallelConfig.fused_ffn`` / espec's ``fused=``) opts in.
+    """
+    return (impl or get_default_impl()) == "pallas"
 
 
 # ---------------------------------------------------------------------------
@@ -309,3 +327,281 @@ def estmm(x1, x2, block_expert, padded_counts, *, impl=None):
 def esfk(x1, x2, block_expert, padded_counts, *, impl=None, fused=True):
     impl = impl or get_default_impl()
     return _esfk_any(impl, fused, x1, x2, block_expert, padded_counts, True)
+
+
+# ---------------------------------------------------------------------------
+# fused expert FFN (DESIGN.md §5): gather -> up/gate -> act -> down -> gate
+#
+# One differentiable op per expert-body type. Forward impls:
+#   pallas  — kernels.esffn megakernel (the (Np, F) hidden never hits HBM).
+#   blocked — one fused XLA region: rows gathered straight from the unsorted
+#             x, expert weight tiles formed by exact one-hot contraction.
+#   ragged/ref — staged composition inside the op (semantics reference).
+# Backward (all impls) is flash-style: residuals are xs-level only (x +
+# row maps + weights); the hidden is recomputed and grads flow through the
+# same ESMM/ESFK kernels as the unfused path (paper Table 5 wiring).
+# ---------------------------------------------------------------------------
+
+def _gather_rows(x, row_token):
+    """(Np, D) sorted rows from unsorted x; sentinel rows (== N) are zero."""
+    from repro.core.reindex import gather_rows
+
+    return gather_rows(x, row_token)
+
+
+def _blocked_wtiles(onehot, w):
+    """Per-block expert tiles w[block_expert] as a one-hot contraction.
+
+    Exact (each one-hot row has a single 1; adding exact zeros changes
+    nothing), but XLA lowers it as a multithreaded matmul instead of the
+    memory-bound gather — measurably faster on CPU, and only available to
+    the fused op because it owns every stage of the pipeline.
+    """
+    return jnp.einsum("ge,e...->g...", onehot, w,
+                      preferred_element_type=w.dtype)
+
+
+def _blocked_esffn_glu(x, row_token, row_gate, block_expert, wg, wu, wd,
+                       act_fn):
+    np_rows = row_token.shape[0]
+    nblk = block_expert.shape[0]
+    blk = np_rows // nblk
+    xb = _gather_rows(x, row_token).reshape(nblk, blk, -1)
+    onehot = jax.nn.one_hot(block_expert, wg.shape[0], dtype=wg.dtype)
+    g = jnp.einsum("gbd,gdf->gbf", xb, _blocked_wtiles(onehot, wg),
+                   preferred_element_type=x.dtype)
+    u = jnp.einsum("gbd,gdf->gbf", xb, _blocked_wtiles(onehot, wu),
+                   preferred_element_type=x.dtype)
+    h = act_fn(g) * u
+    y = jnp.einsum("gbf,gfd->gbd", h, _blocked_wtiles(onehot, wd),
+                   preferred_element_type=x.dtype)
+    y = y * row_gate.reshape(nblk, blk, 1).astype(y.dtype)
+    return y.reshape(np_rows, -1)
+
+
+def _blocked_esffn_mlp(x, row_token, row_gate, block_expert, w1, b1, w2, b2,
+                       act_fn):
+    np_rows = row_token.shape[0]
+    nblk = block_expert.shape[0]
+    blk = np_rows // nblk
+    xb = _gather_rows(x, row_token).reshape(nblk, blk, -1)
+    onehot = jax.nn.one_hot(block_expert, w1.shape[0], dtype=w1.dtype)
+    z = jnp.einsum("gbd,gdf->gbf", xb, _blocked_wtiles(onehot, w1),
+                   preferred_element_type=x.dtype)
+    if b1 is not None:
+        z = z + _blocked_wtiles(onehot, b1)[:, None].astype(z.dtype)
+    h = act_fn(z)
+    y = jnp.einsum("gbf,gfd->gbd", h, _blocked_wtiles(onehot, w2),
+                   preferred_element_type=x.dtype)
+    if b2 is not None:
+        y = y + _blocked_wtiles(onehot, b2)[:, None].astype(y.dtype)
+    y = y * row_gate.reshape(nblk, blk, 1).astype(y.dtype)
+    return y.reshape(np_rows, -1)
+
+
+def _staged_esffn(impl, act_fn, x, row_token, row_gate, block_expert,
+                  padded_counts, glu, ws):
+    """Per-stage composition inside the fused op (ragged / ref impls)."""
+    xs = _gather_rows(x, row_token)
+    if glu:
+        wg, wu, wd = ws
+        g = _esmm_any(impl, False, xs, wg, None, block_expert, padded_counts)
+        u = _esmm_any(impl, False, xs, wu, None, block_expert, padded_counts)
+        h = act_fn(g) * u
+        ys = _esmm_any(impl, False, h, wd, None, block_expert, padded_counts)
+    else:
+        w1, b1, w2, b2 = ws
+        z = _esmm_any(impl, False, xs, w1, b1, block_expert, padded_counts)
+        h = act_fn(z)
+        ys = _esmm_any(impl, False, h, w2, b2, block_expert, padded_counts)
+    return ys * row_gate[:, None].astype(ys.dtype)
+
+
+def _esffn_fwd_any(impl, act, glu, x, row_token, row_gate, block_expert,
+                   padded_counts, ws):
+    act_fn = ACTIVATIONS[act]
+    if impl == "pallas":
+        if glu:
+            return esffn_glu_pallas(
+                x, row_token, row_gate, block_expert, *ws, act=act
+            )
+        return esffn_mlp_pallas(
+            x, row_token, row_gate, block_expert, *ws, act=act
+        )
+    if impl == "blocked":
+        if glu:
+            return _blocked_esffn_glu(
+                x, row_token, row_gate, block_expert, *ws, act_fn=act_fn
+            )
+        return _blocked_esffn_mlp(
+            x, row_token, row_gate, block_expert, *ws, act_fn=act_fn
+        )
+    if impl in ("ragged", "ref"):
+        return _staged_esffn(
+            impl, act_fn, x, row_token, row_gate, block_expert,
+            padded_counts, glu, ws,
+        )
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def _scatter_dx(x, row_token, dxs):
+    """dX: scatter the sorted-row grads back to token order (pads dropped)."""
+    return jnp.zeros_like(x).at[row_token].add(
+        dxs.astype(x.dtype), mode="drop"
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _esffn_glu(impl, act, x, row_token, row_gate, block_expert,
+               padded_counts, wg, wu, wd):
+    return _esffn_fwd_any(
+        impl, act, True, x, row_token, row_gate, block_expert,
+        padded_counts, (wg, wu, wd),
+    )
+
+
+def _esffn_glu_fwd(impl, act, x, row_token, row_gate, block_expert,
+                   padded_counts, wg, wu, wd):
+    y = _esffn_fwd_any(
+        impl, act, True, x, row_token, row_gate, block_expert,
+        padded_counts, (wg, wu, wd),
+    )
+    # xs-level residuals only: no (Np, F) hidden is saved (flash-style).
+    return y, (x, row_token, row_gate, block_expert, padded_counts,
+               wg, wu, wd)
+
+
+def _esffn_glu_bwd(impl, act, res, dys_w):
+    x, row_token, row_gate, block_expert, padded_counts, wg, wu, wd = res
+    act_fn = ACTIVATIONS[act]
+    fused = _FUSED_BACKWARD
+    # Tile-wise recompute of the hidden from the xs-level residuals.
+    xs = _gather_rows(x, row_token)
+    g = _esmm_any(impl, False, xs, wg, None, block_expert, padded_counts)
+    u = _esmm_any(impl, False, xs, wu, None, block_expert, padded_counts)
+    h, h_vjp = jax.vjp(lambda g_, u_: act_fn(g_) * u_, g, u)
+    # t = dys_w @ Wd[e]^T serves both dh (scaled by gate) and d_gate
+    # (contracted against h): ys itself is never rebuilt.
+    t = _esmm_any(impl, True, dys_w, wd, None, block_expert, padded_counts)
+    d_gate = jnp.sum(
+        t.astype(jnp.float32) * h.astype(jnp.float32), axis=-1
+    )
+    gate = row_gate[:, None].astype(dys_w.dtype)
+    dys = dys_w * gate
+    dg, du = h_vjp((t * gate).astype(h.dtype))
+    dwd, _ = _esfk_any(impl, fused, h, dys, block_expert, padded_counts, False)
+    dwg, _ = _esfk_any(impl, fused, xs, dg, block_expert, padded_counts, False)
+    dwu, _ = _esfk_any(impl, fused, xs, du, block_expert, padded_counts, False)
+    dxs = (
+        _esmm_any(impl, True, dg, wg, None, block_expert, padded_counts)
+        + _esmm_any(impl, True, du, wu, None, block_expert, padded_counts)
+    )
+    return (_scatter_dx(x, row_token, dxs), None,
+            d_gate.astype(row_gate.dtype), None, None,
+            dwg.astype(wg.dtype), dwu.astype(wu.dtype), dwd.astype(wd.dtype))
+
+
+_esffn_glu.defvjp(_esffn_glu_fwd, _esffn_glu_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _esffn_mlp(impl, act, x, row_token, row_gate, block_expert,
+               padded_counts, w1, b1, w2, b2):
+    return _esffn_fwd_any(
+        impl, act, False, x, row_token, row_gate, block_expert,
+        padded_counts, (w1, b1, w2, b2),
+    )
+
+
+def _esffn_mlp_fwd(impl, act, x, row_token, row_gate, block_expert,
+                   padded_counts, w1, b1, w2, b2):
+    y = _esffn_fwd_any(
+        impl, act, False, x, row_token, row_gate, block_expert,
+        padded_counts, (w1, b1, w2, b2),
+    )
+    return y, (x, row_token, row_gate, block_expert, padded_counts,
+               w1, b1, w2, b2)
+
+
+def _esffn_mlp_bwd(impl, act, res, dys_w):
+    x, row_token, row_gate, block_expert, padded_counts, w1, b1, w2, b2 = res
+    act_fn = ACTIVATIONS[act]
+    fused = _FUSED_BACKWARD
+    xs = _gather_rows(x, row_token)
+    z = _esmm_any(impl, False, xs, w1, b1, block_expert, padded_counts)
+    h, act_vjp = jax.vjp(act_fn, z)
+    t = _esmm_any(impl, True, dys_w, w2, None, block_expert, padded_counts)
+    # d_gate[r] = dys_w[r]·ys[r] with ys = h@W2 + b2 — split so ys is never
+    # rebuilt: the h@W2 term contracts t against h, the b2 term is direct.
+    d_gate = jnp.sum(
+        t.astype(jnp.float32) * h.astype(jnp.float32), axis=-1
+    )
+    if b2 is not None:
+        blk = xs.shape[0] // block_expert.shape[0]
+        b2_rows = b2[jnp.repeat(block_expert, blk)]
+        d_gate = d_gate + jnp.sum(
+            dys_w.astype(jnp.float32) * b2_rows.astype(jnp.float32), axis=-1
+        )
+    gate = row_gate[:, None].astype(dys_w.dtype)
+    dys = dys_w * gate
+    (dz,) = act_vjp((t * gate).astype(h.dtype))
+    dw2, db2 = _esfk_any(
+        impl, fused, h, dys, block_expert, padded_counts, b2 is not None
+    )
+    dw1, db1 = _esfk_any(
+        impl, fused, xs, dz, block_expert, padded_counts, b1 is not None
+    )
+    dxs = _esmm_any(impl, True, dz, w1, None, block_expert, padded_counts)
+    return (_scatter_dx(x, row_token, dxs), None,
+            d_gate.astype(row_gate.dtype), None, None,
+            dw1.astype(w1.dtype),
+            db1.astype(b1.dtype) if b1 is not None else None,
+            dw2.astype(w2.dtype),
+            db2.astype(b2.dtype) if b2 is not None else None)
+
+
+_esffn_mlp.defvjp(_esffn_mlp_fwd, _esffn_mlp_bwd)
+
+
+def esffn_glu(
+    x: jax.Array,
+    row_token: jax.Array,
+    row_gate: jax.Array,
+    block_expert: jax.Array,
+    padded_counts: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    act: str = "silu",
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Differentiable fused GLU expert FFN over the sorted layout.
+
+    x: (N, D) UNSORTED tokens; row maps from ``core.reindex.build_reindex``.
+    Returns the gate-weighted sorted output (Np, D) — combine it with
+    ``core.reindex.scatter_rows``.
+    """
+    impl = impl or get_default_impl()
+    return _esffn_glu(impl, act, x, row_token, row_gate, block_expert,
+                      padded_counts, w_gate, w_up, w_down)
+
+
+def esffn_mlp(
+    x: jax.Array,
+    row_token: jax.Array,
+    row_gate: jax.Array,
+    block_expert: jax.Array,
+    padded_counts: jax.Array,
+    w1: jax.Array,
+    b1: Optional[jax.Array],
+    w2: jax.Array,
+    b2: Optional[jax.Array],
+    *,
+    act: str = "gelu",
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Differentiable fused 2-MLP expert FFN; see ``esffn_glu``."""
+    impl = impl or get_default_impl()
+    return _esffn_mlp(impl, act, x, row_token, row_gate, block_expert,
+                      padded_counts, w1, b1, w2, b2)

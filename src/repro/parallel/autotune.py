@@ -65,6 +65,8 @@ def layer_latency(
     k: int,
     n_dev: float = 16,
     hw: HardwareProfile = V5E,
+    *,
+    fused_ffn: bool = True,
 ) -> float:
     """One MoE FFN layer (fwd), bf16, on an ``n_dev`` TP/DP group.
 
@@ -74,18 +76,35 @@ def layer_latency(
                    cache re-fill per layer); tokens stationary.
     ``n_dev`` may be fractional: heterogeneous groups report an *effective*
     device count (see ``effective_devices``).
+    ``fused_ffn``: with the fused expert FFN (kernels.esffn, DESIGN.md §5,
+    the TPU default) inter-stage activations stay in VMEM. Unfused, the
+    HBM term additionally pays the (Np, D) sorted-copy and (Np, F) hidden
+    round-trips between the 3-4 separate kernels — which inflates the
+    token-proportional side of the roofline and moves the data-/model-
+    centric crossover.
     """
     active_rows = tokens * k
     flops = 2 * active_rows * d * f * 2  # two MLPs
     w_bytes = e * 2 * d * f * 2          # full expert params, bf16
     tok_bytes = tokens * d * 2
+    # Unfused inter-stage HBM round-trips (1 write + 1 read each), bf16:
+    # the expert-sorted (Np, D) copy and the (Np, F) hidden activations.
+    srt_bytes = 2 * active_rows * d * 2
+    hid_bytes = 2 * active_rows * f * 2
     if mode == "model_centric":
         compute = flops / n_dev / hw.peak_flops   # rows x F/n per device
         mem = (w_bytes / n_dev + tok_bytes) / hw.hbm_bw
+        if not fused_ffn:
+            # every device holds the whole group's gathered tokens; the
+            # hidden is TP-sharded over F.
+            mem += (srt_bytes + hid_bytes / n_dev) / hw.hbm_bw
         coll = (tok_bytes + tok_bytes) / hw.link_bw  # AG tokens + RS outputs
     elif mode == "data_centric":
         compute = flops / n_dev / hw.peak_flops   # tokens/n per device
         mem = (w_bytes + tok_bytes / n_dev) / hw.hbm_bw
+        if not fused_ffn:
+            # tokens (and therefore both round-trips) are split over devices.
+            mem += (srt_bytes + hid_bytes) / n_dev / hw.hbm_bw
         coll = w_bytes * (n_dev - 1) / n_dev / hw.link_bw  # AG weights
     else:
         raise ValueError(mode)
@@ -117,6 +136,7 @@ def choose_mode(
     *,
     n_dev: float = 16,
     hw: HardwareProfile = V5E,
+    fused_ffn: bool = True,
 ) -> str:
     """argmin-latency mode for one MoE layer's token workload (ties resolve
     in CHOOSABLE_MODES order: model-centric first)."""
@@ -125,7 +145,8 @@ def choose_mode(
         # report data_centric (weights-stationary == weights-local).
         return "data_centric"
     costs = {
-        m: layer_latency(m, tokens, d, f, e, k, n_dev, hw)
+        m: layer_latency(m, tokens, d, f, e, k, n_dev, hw,
+                         fused_ffn=fused_ffn)
         for m in CHOOSABLE_MODES
     }
     return min(costs, key=costs.get)
@@ -139,6 +160,7 @@ def crossover_tokens(
     *,
     n_dev: float = 16,
     hw: HardwareProfile = V5E,
+    fused_ffn: bool = True,
     lo_exp: int = 4,
     hi_exp: int = 18,
 ) -> Optional[int]:
@@ -149,7 +171,9 @@ def crossover_tokens(
     """
     prev = None
     for tokens in (2 ** i for i in range(lo_exp, hi_exp)):
-        winner = choose_mode(tokens, d, f, e, k, n_dev=n_dev, hw=hw)
+        winner = choose_mode(
+            tokens, d, f, e, k, n_dev=n_dev, hw=hw, fused_ffn=fused_ffn
+        )
         if prev is not None and prev != winner:
             return tokens
         prev = winner
@@ -185,7 +209,9 @@ def resolve_layer_mode(
     by ``layer_idx`` modulo plan length) > the roofline chooser. The chooser
     folds heterogeneous device measurements (``cfg.device_latencies``, the
     proxy latencies of ``core.hetero.DeviceProfile``) into an effective TP
-    group size.
+    group size, and models the fused-FFN HBM cost unless the config forces
+    the unfused composition (``cfg.fused_ffn is False``) — the roofline
+    describes the TPU execution, where fused is the default.
     """
     if cfg.forced_layer_mode is not None:
         return cfg.forced_layer_mode
@@ -204,7 +230,10 @@ def resolve_layer_mode(
             n_dev = effective_devices(lat)
         else:
             n_dev = n_dev * effective_devices(lat) / len(lat)
-    return choose_mode(tokens, d, f, e, k, n_dev=n_dev)
+    fused = getattr(cfg, "fused_ffn", None)
+    return choose_mode(
+        tokens, d, f, e, k, n_dev=n_dev, fused_ffn=fused is not False
+    )
 
 
 def plan_layer_modes(model_cfg, cfg, mesh, tokens: int) -> Tuple[Optional[str], ...]:

@@ -156,7 +156,9 @@ def hexa_moe_island(
         wg = name(_ag(_ag(p.w_gate, fsdp, 1), tp_w, 2), "gathered_w")
         wu = name(_ag(_ag(p.w_up, fsdp, 1), tp_w, 2), "gathered_w")
         wd = name(_ag(_ag(p.w_down, fsdp, 2), tp_w, 1), "gathered_w")
-        y = espec.moe_glu(x, ri, wg, wu, wd, act=ms.act, impl=cfg.impl)
+        y = espec.moe_glu(
+            x, ri, wg, wu, wd, act=ms.act, impl=cfg.impl, fused=cfg.fused_ffn
+        )
     else:
         w1 = name(_ag(_ag(p.w1, fsdp, 1), tp_w, 2), "gathered_w")
         w2 = name(_ag(_ag(p.w2, fsdp, 2), tp_w, 1), "gathered_w")
@@ -165,7 +167,10 @@ def hexa_moe_island(
         b2 = _ag(p.b2, fsdp, 1)
         if not dc:
             b2 = _mask_rank0(b2, tp)
-        y = espec.moe_mlp(x, ri, w1, b1, w2, b2, act=ms.act, impl=cfg.impl)
+        y = espec.moe_mlp(
+            x, ri, w1, b1, w2, b2, act=ms.act, impl=cfg.impl,
+            fused=cfg.fused_ffn,
+        )
 
     if tp is not None and not dc:
         # Partial products over the TP-sharded contraction dim.

@@ -81,6 +81,10 @@ class ParallelConfig:
                        saved for backward (remat re-gathers per layer).
       "janus"        — retain gathered params for backward (memory baseline).
       "none"         — no remat at all.
+    fused_ffn:
+      None (default) — fused forward expert FFN (kernels.ops.esffn_*,
+      DESIGN.md §5) follows the impl default: ON for the TPU "pallas"
+      path, OFF for the XLA impls. True/False force it either way.
     Auto-mode knobs (ignored for other modes):
       forced_layer_mode — pin every MoE layer's dispatch ("data_centric" /
                           "model_centric"); bypasses the chooser entirely.
@@ -103,6 +107,7 @@ class ParallelConfig:
     remat: str = "block"          # none | block
     blk: int = 128                # expert-sorted layout block size
     impl: Optional[str] = None    # kernel impl override
+    fused_ffn: Optional[bool] = None  # fused forward FFN (None = impl default)
     capacity_factor: float = 1.25 # EP baseline only
     scan_layers: bool = True
     forced_layer_mode: Optional[str] = None
