@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench docs-check ci
+.PHONY: test bench bench-check docs-check ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -9,13 +9,19 @@ test:
 bench:
 	JAX_PLATFORMS=cpu $(PY) benchmarks/run.py --quick
 
-# Every `DESIGN.md §N` citation in src/ must resolve to a `## §N` heading.
+# Every `DESIGN.md §N` citation in src/ must resolve to a `## §N` heading,
+# and every public API in parallel/ + runtime/ must carry a docstring.
 docs-check:
-	@fail=0; \
-	for n in $$(grep -rhoE 'DESIGN\.md §[0-9]+' src | grep -oE '[0-9]+' | sort -u); do \
-		grep -qE "^## §$$n\b" DESIGN.md || { echo "dangling citation: DESIGN.md §$$n"; fail=1; }; \
-	done; \
-	[ $$fail -eq 0 ] && echo "docs-check: all DESIGN.md citations resolve" || exit 1
+	$(PY) scripts/docs_check.py
+
+# BENCH_*.json must match the README-documented schema, and the executed
+# heterogeneous comparison rows must be present.
+bench-check:
+	$(PY) scripts/validate_bench.py BENCH_kernels.json BENCH_hetero.json \
+		--require hetero_exec/data_centric/uniform \
+		--require hetero_exec/data_centric/proportional \
+		--require hetero_exec/model_centric/uniform \
+		--require hetero_exec/model_centric/proportional
 
 ci:
 	bash scripts/ci.sh

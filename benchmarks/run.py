@@ -1,9 +1,14 @@
 """Benchmark entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV per the harness contract and writes
-the same results machine-readably to ``BENCH_kernels.json`` (``--json``),
-so the per-PR perf trajectory accumulates alongside the stdout table.
+the same results machine-readably to per-suite JSON files (``--json`` names
+the default file; suites listed in ``SUITE_JSON`` get their own, e.g. the
+hetero suite -> ``BENCH_hetero.json``), so the per-PR perf trajectory
+accumulates alongside the stdout table. Partial runs (``--only``, or a
+failed suite) merge-preserve previously accumulated rows in EVERY file.
 ``--full`` widens sweeps to the paper's full grids (slow on 1 CPU core).
+The schema (shared by all BENCH_*.json) is documented in README.md and
+enforced by ``scripts/validate_bench.py`` in CI.
 """
 from __future__ import annotations
 
@@ -60,51 +65,66 @@ def main() -> None:
     bench_common.reset_records()
     print("name,us_per_call,derived")
     failed = []
+    suite_rows = {}  # suite -> its slice of RECORDS
     for name in wanted:
+        start = len(bench_common.RECORDS)
         try:
             suites[name](quick=quick)
         except Exception:  # noqa: BLE001 — report and continue
             failed.append(name)
             traceback.print_exc()
+        suite_rows[name] = bench_common.RECORDS[start:]
     if args.json:
-        results = {
-            r["name"]: {
-                "us_per_call": round(r["us_per_call"], 1),
-                "derived": r["derived"],
-            }
-            for r in bench_common.RECORDS
+        json_dir = os.path.dirname(os.path.abspath(args.json))
+        files = {}  # path -> (fresh results, suites that fed it)
+        for name in wanted:
+            path = (os.path.join(json_dir, SUITE_JSON[name])
+                    if name in SUITE_JSON else args.json)
+            res, fed = files.setdefault(path, ({}, []))
+            fed.append(name)
+            for r in suite_rows[name]:
+                res[r["name"]] = {
+                    "us_per_call": round(r["us_per_call"], 1),
+                    "derived": r["derived"],
+                }
+        meta_base = {
+            "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "grid": "full" if args.full else "quick",
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
         }
-        if (args.only or failed) and os.path.exists(args.json):
-            # Subset or partially-failed run: refresh only the re-measured
-            # rows, keep the rest of the accumulated trajectory.
-            try:
-                with open(args.json) as fh:
-                    old = json.load(fh).get("results", {})
-                results = {**old, **results}
-            except (OSError, ValueError):
-                pass
-        payload = {
-            "meta": {
-                "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
-                "grid": "full" if args.full else "quick",
-                "suites": wanted,
-                "failed_suites": failed,
-                "jax": jax.__version__,
-                "backend": jax.default_backend(),
-            },
-            "results": results,
-        }
-        with open(args.json, "w") as fh:
-            json.dump(payload, fh, indent=1, sort_keys=True)
-            fh.write("\n")
-        print(
-            f"wrote {args.json} ({len(results)} entries, "
-            f"{len(bench_common.RECORDS)} fresh)",
-            file=sys.stderr,
-        )
+        for path, (results, fed) in files.items():
+            merge = bool(args.only or any(s in failed for s in fed))
+            _write_json(path, results, fed,
+                        [s for s in failed if s in fed], meta_base, merge)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)
+
+
+#: Suites whose rows accumulate in their own file (everything else goes to
+#: the --json default, BENCH_kernels.json).
+SUITE_JSON = {"hetero": "BENCH_hetero.json"}
+
+
+def _write_json(path, results, suites, failed, meta_base, merge):
+    """Write one BENCH_*.json, merge-preserving accumulated rows when the
+    run was partial (--only subset or a failed suite)."""
+    if merge and os.path.exists(path):
+        try:
+            with open(path) as fh:
+                old = json.load(fh).get("results", {})
+            results = {**old, **results}
+        except (OSError, ValueError):
+            pass
+    payload = {
+        "meta": {**meta_base, "suites": suites, "failed_suites": failed},
+        "results": results,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {path} ({len(results)} entries)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
-"""Heterogeneous-aware allocation walkthrough (paper §4.4, Fig. 11):
-measure capacities with the proxy task, plan Eq.1/Eq.2 splits, sweep the
-division and print the latency curve — the minimum lands on the planned
-proportion. Also demonstrates the runtime straggler loop re-planning.
+"""Heterogeneous-aware allocation walkthrough (paper §4.4, Fig. 11;
+DESIGN.md §6): measure capacities with the proxy task, plan Eq.1/Eq.2
+splits, then RUN them — per-device programs execute the uneven shards for
+real (``parallel.hetero_exec``) and the measured, skew-scaled step latency
+shows the proportional split beating uniform. Ends with the runtime
+straggler loop re-planning shares online.
 
   PYTHONPATH=src python examples/hetero_allocation.py
 """
@@ -9,32 +11,60 @@ import sys
 
 sys.path.insert(0, "src")
 
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core.hetero import (  # noqa: E402
-    DeviceProfile, plan_data_centric, plan_model_centric,
-    step_latency_model,
+    DeviceProfile, make_hetero_plan, plan_data_centric, plan_model_centric,
+    uniform_counterpart,
 )
+from repro.parallel.hetero_exec import HeteroExecutor  # noqa: E402
 from repro.runtime.straggler import StragglerConfig, StragglerMonitor  # noqa: E402
 
 profiles = [DeviceProfile("TITAN-RTX@100W", 4.58),
             DeviceProfile("2080Ti@300W", 3.06)]
+lat = [p.proxy_latency_s for p in profiles]
 total = 120
 
 print("== Eq.1 data-centric batch split ==")
-plan = plan_data_centric(profiles, total)
+plan_b = plan_data_centric(profiles, total)
 print(f"capacities {[f'{p.capacity:.3f}' for p in profiles]} "
-      f"-> shares {plan}")
-
-print("\ndivision sweep (latency model):")
-for share0 in range(20, 101, 10):
-    t = step_latency_model(profiles, [share0, total - share0], total)
-    marker = " <== planned" if abs(share0 - plan[0]) < 5 else ""
-    print(f"  D0={share0:3d}/{total}  latency {t:.3f}s{marker}")
+      f"-> shares {plan_b}")
 
 print("\n== Eq.2 model-centric hidden split (MXU-aligned) ==")
 h = plan_model_centric(profiles, 4096, quantum=128)
 print(f"hidden 4096 -> {h} (multiples of 128)")
+
+print("\n== executed uneven splits (measured, not modelled) ==")
+# Eq. 1 wants many tokens; Eq. 2 wants a wide FFN (per-device routing is
+# replicated under the model split, so only the FFN term shrinks with h_i).
+SHAPES = {"data_centric": (1024, 512, 64), "model_centric": (512, 2048, 256)}
+E, K, D = 8, 2, 64
+for mode in ("data_centric", "model_centric"):
+    N, F, hq = SHAPES[mode]
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    params = {"router": jax.random.normal(ks[0], (D, E)) * 0.1,
+              "w_gate": jax.random.normal(ks[1], (E, D, F)) * 0.1,
+              "w_up": jax.random.normal(ks[2], (E, D, F)) * 0.1,
+              "w_down": jax.random.normal(ks[3], (E, F, D)) * 0.1}
+    x = jax.random.normal(ks[4], (N, D), jnp.float32)
+    prop = make_hetero_plan(lat, global_batch=N, hidden_size=F,
+                            token_quantum=8, hidden_quantum=hq)
+    uni = uniform_counterpart(prop)
+    print(f"-- {mode} --")
+    for name, plan in (("uniform", uni), ("proportional", prop)):
+        ex = HeteroExecutor(params, num_experts=E, top_k=K, act="silu",
+                            glu=True, plan=plan, mode=mode, blk=128)
+        st = ex.timed_step(x, rounds=6)
+        shares = (plan.token_counts if mode == "data_centric"
+                  else plan.hidden_splits)
+        per_dev = ", ".join(
+            f"{p.name}: {t * 1e3:.2f}ms (x{s:.2f} skew -> {t * s * 1e3:.2f}ms)"
+            for p, t, s in zip(profiles, st.device_times_s, ex.skews))
+        # the synchronous step ends when the slowest device finishes
+        print(f"  {name:12s} shares={shares}  [{per_dev}]  "
+              f"step={st.step_latency_s * 1e3:.2f}ms")
 
 print("\n== runtime straggler loop ==")
 mon = StragglerMonitor(4, 64, StragglerConfig(window=4,

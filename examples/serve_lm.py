@@ -1,17 +1,34 @@
 """Batched serving example: continuous-batching-lite server on a tiny
-Mixtral-style model (MoE decode path with sliding-window KV cache).
+Mixtral-style model (MoE decode path with sliding-window KV cache), run
+twice — uniform, then under a heterogeneous Eq. 1 slot plan (paper §4.4,
+DESIGN.md §6) with measured (not modelled) decode-step latency reported by
+the driver.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
+import os
 import sys
 
 sys.path.insert(0, "src")
+# 4 fake CPU devices for the (2,2) heterogeneous mesh (set before jax loads)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
 
 from repro.launch import serve  # noqa: E402
 
 if __name__ == "__main__":
-    serve.main([
+    base = [
         "--arch", "mixtral-8x7b", "--smoke",
         "--slots", "4", "--max-seq", "64",
         "--requests", "6", "--max-new", "12",
+    ]
+    print("== uniform serving ==")
+    serve.main(base)
+    print("\n== heterogeneous serving (Eq. 1 slot shares over 2 data ranks,"
+          " Eq. 2 hidden tiles over 2 TP ranks) ==")
+    serve.main(base + [
+        "--mesh", "2,2",
+        "--hetero-latencies", "1.0,2.0",
+        "--hetero-tp-latencies", "1.0,1.5",
     ])

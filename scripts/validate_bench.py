@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Validate BENCH_*.json files against the documented schema (README.md
+"Benchmark JSON schema"): a top-level ``meta`` object (generated, grid,
+suites, failed_suites, jax, backend) and a ``results`` mapping of
+``name -> {us_per_call: number, derived: string}``.
+
+Usage:
+  python scripts/validate_bench.py BENCH_kernels.json BENCH_hetero.json \
+      [--require PREFIX ...]
+
+``--require PREFIX`` additionally demands at least one result row whose
+name starts with PREFIX (CI uses it to pin the hetero uniform/proportional
+rows so the executed Fig. 11 comparison can't silently vanish).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import sys
+
+META_KEYS = ("generated", "grid", "suites", "failed_suites", "jax", "backend")
+
+
+def validate(path: str) -> tuple[dict, list]:
+    errors = []
+    try:
+        with open(path) as fh:
+            payload = json.load(fh)
+    except (OSError, ValueError) as exc:
+        return {}, [f"{path}: unreadable ({exc})"]
+    meta = payload.get("meta")
+    if not isinstance(meta, dict):
+        errors.append(f"{path}: missing 'meta' object")
+    else:
+        for key in META_KEYS:
+            if key not in meta:
+                errors.append(f"{path}: meta missing '{key}'")
+        if meta.get("failed_suites"):
+            errors.append(f"{path}: failed suites {meta['failed_suites']}")
+    results = payload.get("results")
+    if not isinstance(results, dict) or not results:
+        errors.append(f"{path}: missing/empty 'results' mapping")
+        return payload, errors
+    for name, row in results.items():
+        if not isinstance(row, dict):
+            errors.append(f"{path}: result '{name}' is not an object")
+            continue
+        if not isinstance(row.get("us_per_call"), numbers.Number):
+            errors.append(f"{path}: '{name}'.us_per_call is not a number")
+        if not isinstance(row.get("derived"), str):
+            errors.append(f"{path}: '{name}'.derived is not a string")
+    return payload, errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--require", action="append", default=[],
+                    help="result-name prefix that must be present "
+                         "(in at least one file)")
+    args = ap.parse_args(argv)
+    errors = []
+    names: list[str] = []
+    for path in args.files:
+        payload, errs = validate(path)
+        errors += errs
+        names += list(payload.get("results", {}) or {})
+    for prefix in args.require:
+        if not any(n.startswith(prefix) for n in names):
+            errors.append(f"required result prefix missing: {prefix!r}")
+    if errors:
+        for e in errors:
+            print(f"validate_bench: {e}", file=sys.stderr)
+        return 1
+    print(f"validate_bench: {len(args.files)} file(s), "
+          f"{len(names)} rows, schema OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ def route(
     softmax_after_topk: bool = False,
     noise_rng: Optional[jax.Array] = None,
     noise_eps: float = 1e-2,
+    valid_mask: Optional[jax.Array] = None,
 ) -> RouterOutput:
     """Compute top-k routing for a flat token batch.
 
@@ -40,6 +41,11 @@ def route(
       softmax_after_topk: softmax over the selected top-k logits only
         (Mixtral-style) instead of selecting from the full softmax.
       noise_rng: optional PRNG key for multiplicative jitter (training).
+      valid_mask: optional (N,) bool — heterogeneous-plan tail masking
+        (DESIGN.md §6): invalid rows get gate 0 (⇒ exactly-zero combine
+        output and exactly-zero weight gradients through them) and are
+        excluded from the aux/z losses. ``None`` keeps the original op
+        sequence bit-for-bit.
     """
     n, _ = x.shape
     e = router_w.shape[-1]
@@ -64,12 +70,21 @@ def route(
     # Switch-Transformer style load-balance loss: E * sum_e f_e * P_e where
     # f_e is the fraction of token-slots routed to e, P_e the mean prob.
     one_hot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (N, k, E)
-    f_e = jnp.mean(jnp.sum(one_hot, axis=1), axis=0) / k        # (E,)
-    p_e = jnp.mean(probs, axis=0)                                # (E,)
-    aux_loss = e * jnp.sum(f_e * p_e)
-
-    # Router z-loss stabilises logits at scale (ST-MoE).
-    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    if valid_mask is None:
+        f_e = jnp.mean(jnp.sum(one_hot, axis=1), axis=0) / k    # (E,)
+        p_e = jnp.mean(probs, axis=0)                            # (E,)
+        aux_loss = e * jnp.sum(f_e * p_e)
+        z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    else:
+        vm = valid_mask.astype(jnp.float32)                      # (N,)
+        gates = gates * vm[:, None].astype(gates.dtype)
+        denom = jnp.maximum(jnp.sum(vm), 1.0)
+        f_e = jnp.sum(jnp.sum(one_hot, axis=1) * vm[:, None], 0) / denom / k
+        p_e = jnp.sum(probs * vm[:, None], axis=0) / denom
+        aux_loss = e * jnp.sum(f_e * p_e)
+        z_loss = (
+            jnp.sum(jax.nn.logsumexp(logits, axis=-1) ** 2 * vm) / denom
+        )
 
     return RouterOutput(
         expert_idx=expert_idx.astype(jnp.int32),

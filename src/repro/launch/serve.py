@@ -1,6 +1,12 @@
 """Serving driver: prefill + batched decode with a static-shape request
 queue (continuous-batching lite: finished slots are refilled between decode
 macro-steps so the jitted step shape never changes).
+
+Heterogeneous serving (paper §4.4, DESIGN.md §6): ``--hetero-latencies``
+builds an Eq. 1 plan over the decode slot dim — each data-group member
+serves its proportional share of slots, the padded tail slots are masked in
+the MoE islands and never scheduled; ``--hetero-tp-latencies`` adds the
+Eq. 2 uneven hidden tiles.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfglib
+from repro.core import hetero as hetero_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_mesh
 from repro.models import lm
@@ -34,7 +41,8 @@ class BatchedServer:
     cache is one pytree with a batch dim == num_slots."""
 
     def __init__(self, cfg, pcfg, mesh, *, num_slots: int, max_seq: int,
-                 params, seed: int = 0):
+                 params, seed: int = 0,
+                 valid_slots: Optional[list] = None):
         self.cfg, self.pcfg, self.mesh = cfg, pcfg, mesh
         self.num_slots = num_slots
         self.max_seq = max_seq
@@ -47,7 +55,12 @@ class BatchedServer:
         self.active: dict[int, Request] = {}
         self.queue: deque[Request] = deque()
         self.slot_tokens = np.zeros((num_slots, 1), np.int32)
-        self.free = list(range(num_slots))
+        # Heterogeneous plan (DESIGN.md §6): only each device's Eq. 1 share
+        # of slots is schedulable; padded tail slots stay permanently free
+        # and are masked inside the MoE islands.
+        self.free = (list(valid_slots) if valid_slots is not None
+                     else list(range(num_slots)))
+        self.decode_times_s: list = []
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -64,10 +77,13 @@ class BatchedServer:
         self.active[slot] = req
 
     def _decode_step(self):
+        t0 = time.perf_counter()
         logits, self.cache = self.serve_step(
             self.params, {"tokens": jnp.asarray(self.slot_tokens)}, self.cache
         )
-        return np.asarray(jnp.argmax(logits[..., -1, :], axis=-1)).reshape(-1)
+        out = np.asarray(jnp.argmax(logits[..., -1, :], axis=-1)).reshape(-1)
+        self.decode_times_s.append(time.perf_counter() - t0)
+        return out
 
     def run(self, max_steps: int = 1000) -> list[Request]:
         done = []
@@ -109,6 +125,13 @@ def main(argv=None):
                     help="pipeline-shared prefetch cache residency bound "
                          "(gathered MoE periods) for the decode forward; "
                          ">0 unrolls the layer loop")
+    ap.add_argument("--hetero-latencies", default=None,
+                    help="comma-separated t_i per batch-group member: serve "
+                         "an Eq. 1 uneven slot split (DESIGN.md §6). "
+                         "Requires --mesh")
+    ap.add_argument("--hetero-tp-latencies", default=None,
+                    help="comma-separated t_i per TP-group member: Eq. 2 "
+                         "uneven hidden tiles")
     args = ap.parse_args(argv)
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
@@ -117,19 +140,48 @@ def main(argv=None):
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
         mesh = make_mesh(dims, ("pod", "data", "model")[-len(dims):])
+
+    plan = None
+    num_slots, valid_slots = args.slots, None
+    if args.hetero_latencies:
+        if mesh is None:
+            ap.error("--hetero-latencies requires --mesh")
+        tok_lat = tuple(float(t) for t in args.hetero_latencies.split(","))
+        tp_lat = (tuple(float(t) for t in args.hetero_tp_latencies.split(","))
+                  if args.hetero_tp_latencies else None)
+        plan = hetero_lib.make_hetero_plan(
+            tok_lat,
+            global_batch=args.slots,
+            hidden_size=(cfg.moe.d_ff
+                         if tp_lat is not None and cfg.moe is not None
+                         else None),
+            tp_latencies=tp_lat,
+        )
+        # Padded slot layout: device i's chunk holds capacity slots, only
+        # its Eq. 1 share schedulable (tail slots masked in the islands).
+        cap = plan.batch_capacity
+        num_slots = len(plan.token_counts) * cap
+        valid_slots = [i * cap + j for i, c in enumerate(plan.token_counts)
+                       for j in range(c)]
+        print(f"[serve] hetero plan: slot shares {plan.token_counts} "
+              f"({num_slots} padded slots), hidden {plan.hidden_splits}")
+
     pcfg = ParallelConfig(
         mode=args.mode, blk=16,
         cache_layers=args.cache_layers,
         scan_layers=args.cache_layers <= 0,
+        hetero_plan=plan,
     )
 
-    params, specs = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    params, specs = split_tree(
+        lm.init_params(jax.random.PRNGKey(0), cfg, plan=plan))
     if mesh is not None:
         params = jax.tree.map(
             jax.device_put, params, tree_shardings(params, specs, pcfg, mesh)
         )
-    server = BatchedServer(cfg, pcfg, mesh, num_slots=args.slots,
-                           max_seq=args.max_seq, params=params)
+    server = BatchedServer(cfg, pcfg, mesh, num_slots=num_slots,
+                           max_seq=args.max_seq, params=params,
+                           valid_slots=valid_slots)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         server.submit(Request(
@@ -143,6 +195,11 @@ def main(argv=None):
     total_tokens = sum(len(r.out) for r in done)
     print(f"[serve] {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / max(dt, 1e-9):.1f} tok/s)")
+    if server.decode_times_s:
+        ts = np.asarray(server.decode_times_s[1:] or server.decode_times_s)
+        print(f"[serve] measured decode step: median "
+              f"{np.median(ts) * 1e3:.1f}ms p90 "
+              f"{np.percentile(ts, 90) * 1e3:.1f}ms over {len(ts)} steps")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     return done

@@ -169,7 +169,7 @@ def make_serve_step(cfg: ModelConfig, pcfg: ParallelConfig,
 
 def sharded_params(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Mesh):
     """(abstract_params_with_shardings, shardings_tree, logical_specs)."""
-    values, specs = lm.abstract_params(cfg)
+    values, specs = lm.abstract_params(cfg, plan=pcfg.hetero_plan)
     sh = tree_shardings(values, specs, pcfg, mesh)
     abstract = jax.tree.map(
         lambda v, s: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=s),

@@ -8,6 +8,15 @@ CPU-scale example (examples/ use this):
 
 On a real slice the same driver runs the full config across the production
 mesh (--mesh data,model) — everything else is identical.
+
+Heterogeneous execution (paper §4.4, DESIGN.md §6): ``--hetero-latencies``
+builds an Eq. 1/2 ``HeteroPlan`` that the MoE islands execute (uneven
+per-device token shares, padded + masked; uneven TP hidden tiles via
+``--hetero-tp-latencies``). ``--hetero-replan`` closes the straggler loop:
+observed step times re-plan the token shares online, each new plan being a
+bounded re-trace through ``parallel.cache.PlanCache``. ``--simulate-skew``
+synthesises the per-device telemetry on a single host so the loop can be
+demonstrated (and tested) off-cluster.
 """
 from __future__ import annotations
 
@@ -24,18 +33,22 @@ import numpy as np
 from repro import configs as cfglib
 from repro.checkpoint import manager as ckpt
 from repro.configs.base import ShapeConfig
+from repro.core import hetero as hetero_lib
 from repro.data.pipeline import DataConfig, Prefetcher, TokenSource
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_mesh
 from repro.models import lm
+from repro.parallel.cache import PlanCache
 from repro.optim import adamw
 from repro.parallel.sharding import ParallelConfig, split_tree, tree_shardings
 from repro.runtime import ft as ft_lib
-from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
 
 
 def build_state(cfg, pcfg, mesh, opt_cfg, seed):
-    params_p = lm.init_params(jax.random.PRNGKey(seed), cfg)
+    params_p = lm.init_params(
+        jax.random.PRNGKey(seed), cfg, plan=pcfg.hetero_plan
+    )
     params, specs = split_tree(params_p)
     if mesh is not None:
         sh = tree_shardings(params, specs, pcfg, mesh)
@@ -73,6 +86,23 @@ def main(argv=None):
                     help="comma-separated per-device proxy latencies t_i "
                          "(core.hetero); makes the auto chooser "
                          "heterogeneity-aware")
+    ap.add_argument("--hetero-latencies", default=None,
+                    help="comma-separated t_i per BATCH-group member: build "
+                         "and EXECUTE an Eq. 1 uneven token split "
+                         "(core.hetero.HeteroPlan; DESIGN.md §6). Requires "
+                         "--mesh")
+    ap.add_argument("--hetero-tp-latencies", default=None,
+                    help="comma-separated t_i per TP-group member: adds the "
+                         "Eq. 2 uneven hidden split (padded MXU tiles) to "
+                         "the plan")
+    ap.add_argument("--hetero-replan", action="store_true",
+                    help="close the straggler loop: observed step times "
+                         "re-plan the Eq. 1 shares online; each distinct "
+                         "plan is one bounded re-trace (PlanCache)")
+    ap.add_argument("--simulate-skew", default=None,
+                    help="comma-separated per-worker slowdown factors used "
+                         "to synthesise per-device telemetry on a single "
+                         "host (demo/test of the replan loop)")
     ap.add_argument("--impl", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--warmup", type=int, default=20)
@@ -116,6 +146,36 @@ def main(argv=None):
         impl=args.impl,
         blk=min(128, max(16, args.seq_len // 4)),
     )
+
+    def parse_lat(s, flag):
+        try:
+            vals = tuple(float(t) for t in s.split(","))
+        except ValueError:
+            ap.error(f"{flag} must be comma-separated numbers")
+        if any(t <= 0 for t in vals):
+            ap.error(f"{flag} must all be positive (seconds)")
+        return vals
+
+    hetero_plan = None
+    if args.hetero_latencies:
+        if mesh is None:
+            ap.error("--hetero-latencies requires --mesh")
+        tok_lat = parse_lat(args.hetero_latencies, "--hetero-latencies")
+        tp_lat = (parse_lat(args.hetero_tp_latencies, "--hetero-tp-latencies")
+                  if args.hetero_tp_latencies else None)
+        hetero_plan = hetero_lib.make_hetero_plan(
+            tok_lat,
+            global_batch=args.global_batch,
+            hidden_size=(cfg.moe.d_ff
+                         if tp_lat is not None and cfg.moe is not None
+                         else None),
+            tp_latencies=tp_lat,
+            capacity_headroom=1.5 if args.hetero_replan else 1.0,
+        )
+        pcfg = dataclasses.replace(pcfg, hetero_plan=hetero_plan)
+        print(f"[hetero] plan: token_counts={hetero_plan.token_counts} "
+              f"(capacity {hetero_plan.batch_capacity}/device) "
+              f"hidden_splits={hetero_plan.hidden_splits}")
     opt_cfg = adamw.OptimizerConfig(
         peak_lr=args.lr, warmup_steps=args.warmup,
         decay_steps=max(args.steps, 2 * args.warmup),
@@ -128,9 +188,28 @@ def main(argv=None):
     source = TokenSource(data_cfg)
 
     params, opt_state = build_state(cfg, pcfg, mesh, opt_cfg, args.seed)
-    shape3 = (args.global_batch, args.seq_len, cfg.d_model)
-    train_step = steps_lib.make_train_step(cfg, pcfg, mesh, opt_cfg, shape3)
-    jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+    # Uneven plans pad the SPMD batch: n_devices * capacity rows, of which
+    # each device's Eq. 1 share is real (DESIGN.md §6). Shapes are FIXED
+    # across replans — only the (plan-keyed) trace changes.
+    eff_batch = args.global_batch
+    if hetero_plan is not None and hetero_plan.token_counts is not None:
+        eff_batch = (len(hetero_plan.token_counts)
+                     * hetero_plan.batch_capacity)
+    shape3 = (eff_batch, args.seq_len, cfg.d_model)
+    plan_cache = PlanCache(4)
+
+    def jit_step_for(plan):
+        def build():
+            pc = dataclasses.replace(pcfg, hetero_plan=plan)
+            return jax.jit(
+                steps_lib.make_train_step(cfg, pc, mesh, opt_cfg, shape3),
+                donate_argnums=(0, 1),
+            )
+        key = None if plan is None else plan.key()
+        return plan_cache.fetch(key, build)
+
+    cur_plan = [hetero_plan]
+    jit_step_box = [jit_step_for(hetero_plan)]
 
     start_step = 0
     state = {"params": params, "opt": opt_state}
@@ -141,7 +220,20 @@ def main(argv=None):
             start_step = int(meta["step"])
             print(f"[train] resumed from step {start_step}")
 
-    monitor = StragglerMonitor(num_workers=1, global_batch=args.global_batch)
+    n_workers = 1
+    if hetero_plan is not None and hetero_plan.token_counts is not None:
+        n_workers = len(hetero_plan.token_counts)
+    monitor = StragglerMonitor(
+        num_workers=n_workers, global_batch=args.global_batch,
+        cfg=StragglerConfig(window=8, min_steps_between_replans=8),
+        plan=hetero_plan,
+    )
+    sim_skew = None
+    if args.simulate_skew:
+        sim_skew = np.asarray(
+            parse_lat(args.simulate_skew, "--simulate-skew"))
+        if len(sim_skew) != n_workers:
+            ap.error(f"--simulate-skew needs {n_workers} factors")
     metrics_log = []
     t_last = [time.time()]
 
@@ -170,12 +262,39 @@ def main(argv=None):
                 "labels": batch["labels"],
                 "loss_mask": batch["loss_mask"],
             }
-        params, opt, m = jit_step(state["params"], state["opt"], batch)
+        plan = cur_plan[0]
+        if plan is not None and plan.token_counts is not None:
+            # Re-pack the host batch into the plan's padded layout (each
+            # device's Eq. 1 share followed by masked tail rows).
+            batch = {
+                k: jnp.asarray(v) for k, v in hetero_lib.pack_batch(
+                    {k: np.asarray(v) for k, v in batch.items()}, plan
+                ).items()
+            }
+        params, opt, m = jit_step_box[0](state["params"], state["opt"], batch)
         m = {k: float(v) for k, v in m.items()}
         now = time.time()
         m["step_time_s"] = now - t_last[0]
         t_last[0] = now
-        monitor.report([m["step_time_s"]])
+        # Per-worker telemetry: real deployments feed host timings here; a
+        # single-host demo synthesises them from the wall time, the plan
+        # shares, and the simulated skew (time_i ∝ share_i * skew_i).
+        times = [m["step_time_s"]] * n_workers
+        if sim_skew is not None:
+            shares = np.asarray(
+                plan.token_counts if plan is not None
+                and plan.token_counts is not None else [1] * n_workers,
+                np.float64,
+            )
+            w = np.maximum(shares, 1e-9) * sim_skew
+            times = list(m["step_time_s"] * w / w.mean())
+        new_shares = monitor.report(times)
+        if new_shares is not None and args.hetero_replan and plan is not None:
+            cur_plan[0] = monitor.current_plan()
+            jit_step_box[0] = jit_step_for(cur_plan[0])
+            st = plan_cache.stats()
+            print(f"[hetero] replan -> shares {new_shares} "
+                  f"(traces: {st['misses']}, reused: {st['hits']})")
         return {"params": params, "opt": opt}, m
 
     def on_metrics(step, m):

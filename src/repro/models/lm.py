@@ -48,7 +48,9 @@ def _ffn_kind(cfg: ModelConfig, idx: int) -> Optional[str]:
     return None
 
 
-def init_block(key, cfg: ModelConfig, idx: int, dtype) -> dict:
+def init_block(key, cfg: ModelConfig, idx: int, dtype, plan=None) -> dict:
+    """One block's parameters; ``plan`` (core.hetero.HeteroPlan) pads MoE
+    FFN hidden dims for heterogeneous TP tiles (DESIGN.md §6)."""
     kind = cfg.layer_kind(idx)
     ks = jax.random.split(key, 6)
     p: dict = {"ln1": tfm.init_norm(cfg)}
@@ -69,7 +71,7 @@ def init_block(key, cfg: ModelConfig, idx: int, dtype) -> dict:
     if fk is not None:
         p["ln2"] = tfm.init_norm(cfg)
         if fk == "moe":
-            p["ffn"] = tfm.init_moe_ffn(ks[2], cfg, dtype)
+            p["ffn"] = tfm.init_moe_ffn(ks[2], cfg, dtype, plan=plan)
         elif fk == "dense":
             p["ffn"] = tfm.init_dense_ffn(ks[2], cfg, dtype)
         else:  # slstm_ffn: small GLU
@@ -80,8 +82,11 @@ def init_block(key, cfg: ModelConfig, idx: int, dtype) -> dict:
     return p
 
 
-def init_params(key, cfg: ModelConfig) -> dict:
-    """Full parameter tree (Param leaves). eval_shape-safe."""
+def init_params(key, cfg: ModelConfig, plan=None) -> dict:
+    """Full parameter tree (Param leaves). eval_shape-safe.
+
+    ``plan`` (core.hetero.HeteroPlan, DESIGN.md §6): Eq. 2 hidden splits pad
+    every MoE FFN to per-TP-rank tiles; an even split changes nothing."""
     dtype = jnp.dtype(cfg.dtype)
     keys = jax.random.split(key, cfg.num_layers + 4)
     period = cfg.period
@@ -90,7 +95,7 @@ def init_params(key, cfg: ModelConfig) -> dict:
     layers = []
     for pos in range(period):
         per_period = [
-            init_block(keys[pp * period + pos], cfg, pos, dtype)
+            init_block(keys[pp * period + pos], cfg, pos, dtype, plan=plan)
             for pp in range(n_periods)
         ]
         stacked = jax.tree.map(
@@ -128,10 +133,10 @@ def init_params(key, cfg: ModelConfig) -> dict:
     return p
 
 
-def abstract_params(cfg: ModelConfig) -> tuple[Any, Any]:
+def abstract_params(cfg: ModelConfig, plan=None) -> tuple[Any, Any]:
     """(ShapeDtypeStruct tree, logical spec tree) without allocating."""
     shapes = jax.eval_shape(
-        lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
+        lambda k: init_params(k, cfg, plan=plan), jax.random.PRNGKey(0)
     )
     # eval_shape maps over Param leaves; reconstruct specs from a concrete
     # tiny init of the STRUCTURE only: specs are static, rebuild via init on

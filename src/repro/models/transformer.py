@@ -140,21 +140,55 @@ def apply_dense_ffn(p: dict, x: jax.Array, ctx: Ctx) -> jax.Array:
 # MoE FFN (espec path through the distributed island)
 # ---------------------------------------------------------------------------
 
-def init_moe_ffn(key, cfg: ModelConfig, dtype) -> dict:
+def init_moe_ffn(key, cfg: ModelConfig, dtype, plan=None) -> dict:
+    """Expert FFN parameters, optionally laid out for a heterogeneous plan.
+
+    With a ``core.hetero.HeteroPlan`` carrying Eq. 2 ``hidden_splits``, the
+    FFN hidden dim is padded to per-TP-rank MXU-aligned tiles
+    (``plan.padded_hidden_size()``); the padded columns are initialised to
+    exact zeros, contribute exactly zero to the forward, receive exactly
+    zero gradient, and therefore stay zero under training (DESIGN.md §6
+    padding invariant). An even, quantum-aligned split needs no padding and
+    leaves the init bitwise identical to the plan-less path."""
     from repro.parallel.moe_parallel import MOE_PARAM_LOGICAL as L
 
     m = cfg.moe
     d, f, e = cfg.d_model, m.d_ff, m.num_experts
+    col = None  # (F',) validity mask over padded hidden columns
+    if plan is not None and getattr(plan, "hidden_splits", None) is not None:
+        from repro.core.hetero import hidden_mask
+
+        if sum(plan.hidden_splits) != f:
+            raise ValueError(
+                f"hetero_plan.hidden_splits sum to {sum(plan.hidden_splits)}"
+                f" but d_ff is {f}"
+            )
+        if plan.hidden_padded():
+            f = plan.padded_hidden_size()
+            col = jnp.asarray(hidden_mask(plan))
+
+    def masked(v, axis):
+        if col is None:
+            return v
+        shape = [1] * v.ndim
+        shape[axis] = f
+        return v * col.reshape(shape).astype(v.dtype)
+
     ks = jax.random.split(key, 5)
     p = {"router": Param(normal_init(ks[0], (d, e), jnp.float32), L["router"])}
     if cfg.glu:
-        p["w_gate"] = Param(normal_init(ks[1], (e, d, f), dtype), L["w_gate"])
-        p["w_up"] = Param(normal_init(ks[2], (e, d, f), dtype), L["w_up"])
-        p["w_down"] = Param(normal_init(ks[3], (e, f, d), dtype), L["w_down"])
+        p["w_gate"] = Param(
+            masked(normal_init(ks[1], (e, d, f), dtype), 2), L["w_gate"])
+        p["w_up"] = Param(
+            masked(normal_init(ks[2], (e, d, f), dtype), 2), L["w_up"])
+        p["w_down"] = Param(
+            masked(normal_init(ks[3], (e, f, d), dtype), 1), L["w_down"])
     else:
-        p["w1"] = Param(normal_init(ks[1], (e, d, f), dtype), L["w1"])
-        p["b1"] = Param(jnp.zeros((e, f), jnp.float32), L["b1"])
-        p["w2"] = Param(normal_init(ks[2], (e, f, d), dtype), L["w2"])
+        p["w1"] = Param(
+            masked(normal_init(ks[1], (e, d, f), dtype), 2), L["w1"])
+        p["b1"] = Param(masked(jnp.zeros((e, f), jnp.float32), 1), L["b1"])
+        p["w2"] = Param(
+            masked(normal_init(ks[2], (e, f, d), dtype), 1), L["w2"])
         p["b2"] = Param(jnp.zeros((e, d), jnp.float32), L["b2"])
     return p
 

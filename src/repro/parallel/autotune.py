@@ -111,6 +111,75 @@ def layer_latency(
     return max(compute, mem, coll)
 
 
+def layer_latency_uneven(
+    mode: str,
+    tokens: int,
+    d: int,
+    f: int,
+    e: int,
+    k: int,
+    latencies: Sequence[float],
+    *,
+    token_shares: Optional[Sequence[int]] = None,
+    hidden_shares: Optional[Sequence[int]] = None,
+    hw: HardwareProfile = V5E,
+    fused_ffn: bool = True,
+) -> float:
+    """Uneven-split roofline: max over devices of each device's latency
+    under its Eq. 1/2 share (paper §4.4 executed; DESIGN.md §6).
+
+    Replaces the ``effective_devices`` scalar approximation when an actual
+    per-device allocation is known: device ``i`` runs at ``t_min/t_i`` of
+    the fastest chip's roofline (compute AND HBM scaled; link bandwidth is
+    topology, not silicon, and stays flat) and carries
+    ``token_shares[i]/Σ`` of the tokens (data-centric) or
+    ``hidden_shares[i]/Σ`` of the hidden columns (model-centric). With the
+    proportional split the per-device latencies equalise and the max
+    coincides with the effective-devices approximation; any other split is
+    strictly worse — which is the Fig. 11 claim this term lets the chooser
+    see.
+    """
+    t = np.asarray(latencies, dtype=np.float64)
+    if np.any(t <= 0):
+        raise ValueError("latencies must be positive")
+    n = len(t)
+    speed = np.min(t) / t  # relative per-device speed, fastest = 1
+    if token_shares is None:
+        token_shares = [tokens // n] * n
+    if hidden_shares is None:
+        hidden_shares = [f // n] * n
+    tok_frac = np.asarray(token_shares, np.float64) / max(sum(token_shares), 1)
+    hid_frac = np.asarray(hidden_shares, np.float64) / max(sum(hidden_shares), 1)
+
+    active_rows = tokens * k
+    flops = 2 * active_rows * d * f * 2
+    w_bytes = e * 2 * d * f * 2
+    tok_bytes = tokens * d * 2
+    srt_bytes = 2 * active_rows * d * 2
+    hid_bytes = 2 * active_rows * f * 2
+
+    worst = 0.0
+    for i in range(n):
+        peak = hw.peak_flops * speed[i]
+        hbm = hw.hbm_bw * speed[i]
+        if mode == "model_centric":
+            compute = flops * hid_frac[i] / peak
+            mem = (w_bytes * hid_frac[i] + tok_bytes) / hbm
+            if not fused_ffn:
+                mem += (srt_bytes + hid_bytes * hid_frac[i]) / hbm
+            coll = (tok_bytes + tok_bytes) / hw.link_bw
+        elif mode == "data_centric":
+            compute = flops * tok_frac[i] / peak
+            mem = (w_bytes + tok_bytes * tok_frac[i]) / hbm
+            if not fused_ffn:
+                mem += (srt_bytes + hid_bytes) * tok_frac[i] / hbm
+            coll = w_bytes * (n - 1) / n / hw.link_bw
+        else:
+            raise ValueError(mode)
+        worst = max(worst, max(compute, mem, coll))
+    return worst
+
+
 def effective_devices(proxy_latencies: Sequence[float]) -> float:
     """Heterogeneity-aware effective group size (paper §4.4 planner view).
 
@@ -206,12 +275,14 @@ def resolve_layer_mode(
     """Per-layer mode decision for ``ParallelConfig.mode == "auto"``.
 
     Precedence: ``cfg.forced_layer_mode`` > ``cfg.layer_mode_plan`` (indexed
-    by ``layer_idx`` modulo plan length) > the roofline chooser. The chooser
-    folds heterogeneous device measurements (``cfg.device_latencies``, the
-    proxy latencies of ``core.hetero.DeviceProfile``) into an effective TP
-    group size, and models the fused-FFN HBM cost unless the config forces
-    the unfused composition (``cfg.fused_ffn is False``) — the roofline
-    describes the TPU execution, where fused is the default.
+    by ``layer_idx`` modulo plan length) > the roofline chooser. With a
+    ``cfg.hetero_plan`` whose latencies cover the TP group, the chooser
+    evaluates the *uneven-split* roofline (``layer_latency_uneven``,
+    DESIGN.md §6) — the max over devices under their actual Eq. 1/2 shares —
+    instead of the ``effective_devices`` scalar approximation used for bare
+    ``cfg.device_latencies``. Fused-FFN HBM cost is modelled unless the
+    config forces the unfused composition (``cfg.fused_ffn is False``) — the
+    roofline describes the TPU execution, where fused is the default.
     """
     if cfg.forced_layer_mode is not None:
         return cfg.forced_layer_mode
@@ -220,6 +291,25 @@ def resolve_layer_mode(
         if planned is not None:
             return planned
     n_dev = float(_tp_group_size(cfg, mesh))
+    fused = getattr(cfg, "fused_ffn", None)
+    plan = getattr(cfg, "hetero_plan", None)
+    plan_lat = (None if plan is None
+                else (plan.tp_latencies or plan.proxy_latencies))
+    if plan_lat is not None and n_dev > 1 and len(plan_lat) == int(n_dev):
+        lat = list(plan_lat)
+        # Eq. 1 token weights; Eq. 2 hidden columns if the plan carries them.
+        inv = [1.0 / t for t in lat]
+        hs = (list(plan.hidden_splits)
+              if plan.hidden_splits is not None else inv)
+        costs = {
+            m: layer_latency_uneven(
+                m, tokens, d, f, e, k, lat,
+                token_shares=inv, hidden_shares=hs,
+                fused_ffn=fused is not False,
+            )
+            for m in CHOOSABLE_MODES
+        }
+        return min(costs, key=costs.get)
     if cfg.device_latencies:
         lat = list(cfg.device_latencies)
         # Exactly one latency per group member: use them directly. A shorter
@@ -230,7 +320,6 @@ def resolve_layer_mode(
             n_dev = effective_devices(lat)
         else:
             n_dev = n_dev * effective_devices(lat) / len(lat)
-    fused = getattr(cfg, "fused_ffn", None)
     return choose_mode(
         tokens, d, f, e, k, n_dev=n_dev, fused_ffn=fused is not False
     )

@@ -112,6 +112,24 @@ class PipelineSharedCache:
         }
 
 
+class PlanCache(PipelineSharedCache):
+    """Bounded FIFO cache of compiled step functions keyed by hetero-plan
+    tuples (``core.hetero.HeteroPlan.key()``) — the re-trace bound of the
+    straggler→replan loop (DESIGN.md §6).
+
+    Every distinct plan is a distinct trace (the Eq. 1 shares are baked in
+    as constants), so an unbounded replanner would accumulate compiled
+    executables without limit; this reuses the pipeline-shared cache's FIFO
+    residency + hit/miss accounting, with ``capacity_layers`` re-read as
+    "simultaneously-retained plans". A replan that oscillates between two
+    plans therefore re-traces exactly twice and then only hits. Values are
+    callables, not arrays, so byte accounting is disabled.
+    """
+
+    def resident_bytes(self) -> int:
+        return 0
+
+
 # ---------------------------------------------------------------------------
 # the gather the cache holds
 # ---------------------------------------------------------------------------

@@ -58,6 +58,8 @@ class MoEParams(NamedTuple):
 
 
 class MoEStatic(NamedTuple):
+    """Static (trace-time) MoE layer hyperparameters shared by every
+    island implementation (paper §4.2 routing + §4.3 execution)."""
     num_experts: int
     top_k: int
     act: str = "silu"
@@ -121,6 +123,7 @@ def hexa_moe_island(
     noise_rng: Optional[jax.Array] = None,
     layer_mode: Optional[str] = None,
     pregathered: bool = False,
+    token_valid: Optional[jax.Array] = None,
 ):
     """Body of the shard_map island: local tokens x (N_l, D) -> (y, aux, z).
 
@@ -131,6 +134,10 @@ def hexa_moe_island(
     output) local; "model_centric"/None keeps the TP compute split and moves
     tokens. ``pregathered``: the fsdp factor of the weights was already
     gathered outside the island (pipeline-shared cache), skip it here.
+    ``token_valid``: optional (N_l,) bool — heterogeneous-plan (Eq. 1) tail
+    mask (DESIGN.md §6): invalid rows route with gate 0, produce exactly-zero
+    output rows and exactly-zero weight gradients, and are excluded from the
+    aux losses. Travels through the same TP gather as the tokens.
     """
     axes = cfg.axes(mesh)
     fsdp, tp = axes["fsdp"], axes["tp"]
@@ -141,12 +148,15 @@ def hexa_moe_island(
 
     if gather_tokens:
         x = _ag(x, tp, 0)
+        if token_valid is not None:
+            token_valid = _ag(token_valid, tp, 0)
 
     r = route(
         x, p.router, ms.top_k,
         norm_topk=ms.norm_topk,
         softmax_after_topk=ms.softmax_after_topk,
         noise_rng=noise_rng,
+        valid_mask=token_valid,
     )
     ri = build_reindex(r.expert_idx, r.gates, ms.num_experts, cfg.blk)
 
@@ -198,10 +208,17 @@ def ep_moe_island(
     *,
     tokens_sharded_tp: bool,
     noise_rng: Optional[jax.Array] = None,
+    token_valid: Optional[jax.Array] = None,
 ):
     """Expert-parallel baseline: experts sharded over "model", tokens travel
     by all-to-all with a capacity buffer (padding + drops) — the classic
-    GShard/Tutel execution the paper replaces."""
+    GShard/Tutel execution the paper replaces.
+
+    ``token_valid``: heterogeneous-plan (Eq. 1, DESIGN.md §6) tail mask.
+    Masked rows get gate 0 so their combine output and weight gradients are
+    exactly zero; they may still occupy capacity slots (the EP baseline's
+    capacity buffer is exactly the redundancy the paper removes, so the
+    masked path is not optimised further here)."""
     tp = cfg.axes(mesh)["tp"]
     ep = mesh.shape[tp] if tp else 1
     e, k = ms.num_experts, ms.top_k
@@ -212,6 +229,7 @@ def ep_moe_island(
         norm_topk=ms.norm_topk,
         softmax_after_topk=ms.softmax_after_topk,
         noise_rng=noise_rng,
+        valid_mask=token_valid,
     )
     n, d = x.shape
     capacity = max(int((n * k / e) * cfg.capacity_factor), 1)
@@ -285,6 +303,41 @@ def _auto_layer_mode(
     )
 
 
+def _hetero_mask_counts(plan, x_spec: P, mesh: Optional[Mesh], b: int):
+    """Static resolution of the Eq. 1 token mask (DESIGN.md §6).
+
+    Returns ``(token_counts, batch_axes)`` when the plan's data split is
+    uneven at this sharding — the island then builds the per-device validity
+    mask — or ``None`` when no masking is needed: no plan, no mesh, or a
+    uniform split that exactly fills every shard (the short-circuit that
+    keeps the uniform path's HLO bitwise unchanged)."""
+    if plan is None or getattr(plan, "token_counts", None) is None:
+        return None
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return None
+    entry = x_spec[0]
+    baxes = (() if entry is None
+             else entry if isinstance(entry, tuple) else (entry,))
+    extent = 1
+    for a in baxes:
+        extent *= mesh.shape[a]
+    counts = tuple(int(c) for c in plan.token_counts)
+    if len(counts) != extent:
+        raise ValueError(
+            f"hetero_plan.token_counts has {len(counts)} entries but the "
+            f"batch dim is sharded over {extent} devices"
+        )
+    local_b = b // extent
+    if max(counts) > local_b:
+        raise ValueError(
+            f"hetero_plan assigns {max(counts)} batch rows to a device but "
+            f"the padded shard holds only {local_b} (global batch {b})"
+        )
+    if all(c == local_b for c in counts):
+        return None  # uniform plan: no masking, identical trace
+    return counts, baxes
+
+
 def moe_layer(
     x: jax.Array,                    # (B, S, D) global
     p: MoEParams,                    # sharded per resolve_spec
@@ -301,7 +354,12 @@ def moe_layer(
     (y, aux_loss, z_loss) with y sharded like x.
 
     ``layer_idx`` feeds the auto-mode plan lookup; ``pregathered`` marks the
-    weights' fsdp factor as already gathered (pipeline-shared cache path)."""
+    weights' fsdp factor as already gathered (pipeline-shared cache path).
+
+    ``cfg.hetero_plan`` (DESIGN.md §6): when the plan's Eq. 1 ``token_counts``
+    are uneven, each batch-group member masks its shard's tail batch rows
+    inside the island (the SPMD shapes stay uniform). A uniform plan
+    short-circuits entirely — same trace as no plan."""
     b, s, d = x.shape
 
     island = ep_moe_island if cfg.mode == "ep" else hexa_moe_island
@@ -312,6 +370,8 @@ def moe_layer(
         island = functools.partial(
             island, layer_mode=layer_mode, pregathered=pregathered
         )
+
+    mask_counts = _hetero_mask_counts(cfg.hetero_plan, x_spec, mesh, b)
 
     if mesh is None:
         # Single-process path (unit tests): plain local computation.
@@ -327,14 +387,37 @@ def moe_layer(
 
     def body(xl, pl, rngl):
         bl, sl, _ = xl.shape
+        tv = None
+        bv = None
+        if mask_counts is not None:
+            counts, baxes = mask_counts
+            # This device's position in the batch-sharding group, then its
+            # Eq. 1 share: row r of the flat (bl*sl) shard belongs to batch
+            # element r // sl; elements past the share are masked tail.
+            rank = jnp.zeros((), jnp.int32)
+            for a in baxes:
+                rank = rank * mesh.shape[a] + lax.axis_index(a)
+            bv = jnp.asarray(counts, jnp.int32)[rank]
+            tv = (jnp.arange(bl * sl, dtype=jnp.int32) // sl) < bv
         y, aux, z = island(
             xl.reshape(bl * sl, d), pl, ms, cfg, mesh,
             tokens_sharded_tp=tokens_tp,
             noise_rng=None if rngl is None else rngl[0],
+            token_valid=tv,
         )
-        # Mean aux over all devices (aux is per-local-batch).
-        aux = lax.pmean(aux, mesh.axis_names)
-        z = lax.pmean(z, mesh.axis_names)
+        if bv is None:
+            # Mean aux over all devices (aux is per-local-batch).
+            aux = lax.pmean(aux, mesh.axis_names)
+            z = lax.pmean(z, mesh.axis_names)
+        else:
+            # Uneven plan: each device's aux is a mean over ITS valid rows,
+            # so average them weighted by valid-token count — the result is
+            # the masked mean over all valid tokens, independent of how a
+            # replan shuffles the shares (DESIGN.md §6).
+            w = (bv * sl).astype(jnp.float32)
+            wsum = lax.psum(w, mesh.axis_names)
+            aux = lax.psum(aux * w, mesh.axis_names) / wsum
+            z = lax.psum(z * w, mesh.axis_names) / wsum
         return y.reshape(bl, sl, d), aux, z
 
     p_specs = _param_specs(p, ms, cfg, mesh, pregathered=pregathered)

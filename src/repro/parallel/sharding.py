@@ -51,6 +51,7 @@ jax.tree_util.register_pytree_node(
 
 
 def is_param(x) -> bool:
+    """True for Param leaves (the is_leaf predicate for Param trees)."""
     return isinstance(x, Param)
 
 
@@ -100,6 +101,20 @@ class ParallelConfig:
                      Inference-side: the remat'd train step skips it (the
                      remat policy is training's cache) so gathered trees
                      never become checkpoint residuals.
+    Heterogeneous execution (paper §4.4 Eq. 1/2, DESIGN.md §6):
+      hetero_plan — a ``core.hetero.HeteroPlan``. Its ``token_counts``
+                    (Eq. 1) make the MoE islands mask each data-group
+                    member's tail rows (the SPMD shard stays a uniform
+                    padded shape; rows past the device's share contribute
+                    zero output, zero gradient, and are excluded from the
+                    aux losses). Its ``hidden_splits`` (Eq. 2) pad the FFN
+                    hidden dim to per-TP-rank MXU-aligned tiles at init
+                    (``models.transformer.init_moe_ffn``) with exact zeros
+                    in the padded columns. A plan whose splits are uniform
+                    short-circuits both mechanisms — the compiled HLO is
+                    the uniform path's, bitwise. The plan is static: a
+                    replan (runtime.straggler) produces a new plan and a
+                    bounded re-trace (parallel.cache.PlanCache).
     """
     mode: str = "hybrid"
     collective_schedule: str = "ag_rs"
@@ -114,6 +129,7 @@ class ParallelConfig:
     layer_mode_plan: Optional[Tuple[Optional[str], ...]] = None
     device_latencies: Optional[Tuple[float, ...]] = None
     cache_layers: int = 0
+    hetero_plan: Optional[Any] = None  # core.hetero.HeteroPlan
 
     def axes(self, mesh: Mesh) -> dict:
         names = list(mesh.axis_names)
@@ -215,14 +231,17 @@ def constrain(x, spec: Sequence, cfg: ParallelConfig, mesh: Optional[Mesh]):
 # ---------------------------------------------------------------------------
 
 def normal_init(key, shape, dtype, scale: float = 0.02):
+    """Truncated-free scaled normal init (f32 draw, cast to dtype)."""
     return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
 
 
 def zeros_init(key, shape, dtype, scale: float = 0.0):
+    """All-zeros init (key/scale ignored; kept initializer-signature)."""
     del key, scale
     return jnp.zeros(shape, dtype)
 
 
 def ones_init(key, shape, dtype, scale: float = 0.0):
+    """All-ones init (key/scale ignored; kept initializer-signature)."""
     del key, scale
     return jnp.ones(shape, dtype)

@@ -50,6 +50,7 @@ def choose_mesh_shape(
 
 def make_mesh(shape: Sequence[int], names: Sequence[str],
               devices=None) -> Mesh:
+    """Mesh over the first prod(shape) devices (surviving-pool re-mesh)."""
     devices = devices if devices is not None else jax.devices()
     import numpy as np
 

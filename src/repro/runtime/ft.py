@@ -26,6 +26,8 @@ from repro.checkpoint import manager as ckpt
 
 @dataclasses.dataclass
 class FTConfig:
+    """Fault-tolerance policy: checkpoint cadence/retention and the
+    failure budget of the retry loop (``run_with_recovery``)."""
     ckpt_dir: str = "checkpoints"
     save_every: int = 100
     keep: int = 3

@@ -1,0 +1,563 @@
+"""Heterogeneous EXECUTION (paper §4.4 Eq. 1/2 run for real; DESIGN.md §6).
+
+Covers the invariants the design doc promises:
+  * largest-remainder planning preserves exact global token/hidden totals;
+  * a plan with equal latencies is bitwise-identical to the uniform path
+    (SPMD, 8 fake devices — forward, train step, and serve decode);
+  * a skewed plan's masked-tail rows produce zero output AND zero gradient,
+    and valid rows match the dense reference;
+  * zero-padded hidden tiles compute exactly the unpadded uneven split;
+  * the per-device execution engine (parallel.hetero_exec) matches the
+    single-program reference for both dispatches;
+  * the replan loop's re-traces are bounded by the plan-keyed cache;
+  * the autotune uneven-split latency term prefers proportional splits.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import espec
+from repro.core.hetero import (
+    HeteroPlan,
+    clamp_shares,
+    hidden_mask,
+    make_hetero_plan,
+    pack_batch,
+    proportional_split,
+    uniform_plan,
+)
+from repro.parallel import autotune
+from repro.parallel.cache import PlanCache
+from repro.parallel.hetero_exec import HeteroExecutor
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# planner invariants (pure)
+# ---------------------------------------------------------------------------
+
+def test_plan_preserves_exact_totals():
+    """Largest-remainder property: Eq. 1/2 shares sum to the exact global
+    batch / hidden size for arbitrary skews."""
+    from repro.core.hetero import fit_quantum
+
+    for lat in ([1.0, 2.0], [1.0, 1.7, 9.4], [3.3, 0.2, 1.0, 1.0, 8.0]):
+        plan = make_hetero_plan(lat, global_batch=96, hidden_size=1024,
+                                hidden_quantum=128)
+        assert sum(plan.token_counts) == 96
+        assert sum(plan.hidden_splits) == 1024
+        q = fit_quantum(1024, 128, len(lat))
+        assert all(h % q == 0 for h in plan.hidden_splits)
+
+
+def test_fitted_quanta_survive_replan_and_bound_padding():
+    """The plan must carry the FITTED quanta, not the requested ones:
+    (a) a replan re-splits on plan.token_quantum — an unfitted quantum
+    crashes proportional_split when it does not divide the batch;
+    (b) hidden_capacity rounds tiles to plan.hidden_quantum — an unfitted
+    one silently pads small d_ff far past the real hidden size."""
+    plan = make_hetero_plan([1.0, 2.0], global_batch=12, token_quantum=8)
+    assert plan.token_quantum == 4  # fitted: 8 does not divide 12
+    mon = StragglerMonitor(
+        2, 12, StragglerConfig(window=2, min_steps_between_replans=0),
+        plan=plan,
+    )
+    new = None
+    for _ in range(4):
+        new = mon.report([1.0, 3.0]) or new
+    assert new is not None and sum(new) == 12
+    assert mon.current_plan().token_counts == tuple(mon.shares)
+
+    p2 = make_hetero_plan([1.0, 1.5], hidden_size=96, hidden_quantum=128)
+    assert p2.hidden_quantum == 32 and sum(p2.hidden_splits) == 96
+    # padding bounded by < one fitted quantum per rank, not blown up to 256
+    assert p2.padded_hidden_size() <= 96 + 32
+
+
+def test_uniform_counterpart_respects_groups_and_quantum():
+    from repro.core.hetero import uniform_counterpart
+
+    # token group (2) and hidden/TP group (4) have different sizes
+    plan = make_hetero_plan([1.0, 2.0], global_batch=8, hidden_size=1024,
+                            tp_latencies=[1.0, 1.0, 2.0, 2.0],
+                            hidden_quantum=128)
+    uni = uniform_counterpart(plan)
+    assert uni.token_counts == (4, 4)
+    assert uni.hidden_splits == (256,) * 4
+    assert uni.token_capacity is None
+    # an equal hidden share that is not a quantum multiple is rejected —
+    # the baseline arm must execute the same MXU-aligned tile shapes
+    p2 = make_hetero_plan([1.0, 2.0], hidden_size=384, hidden_quantum=128)
+    assert p2.hidden_splits == (256, 128)
+    with pytest.raises(ValueError):
+        uniform_counterpart(p2)
+
+
+def test_clamp_shares_redistributes_preserving_total():
+    out = clamp_shares([10, 2, 0], capacity=6)
+    assert sum(out) == 12
+    assert max(out) <= 6
+    with pytest.raises(ValueError):
+        clamp_shares([10, 10], capacity=6)
+
+
+def test_with_token_counts_clamps_to_capacity():
+    plan = make_hetero_plan([1.0, 1.0], global_batch=8)
+    plan = dataclasses.replace(plan, token_capacity=6)
+    new = plan.with_token_counts([8, 0])
+    assert sum(new.token_counts) == 8 and max(new.token_counts) <= 6
+
+
+def test_pack_batch_layout_and_loss_mask():
+    plan = make_hetero_plan([1.0, 3.0], global_batch=8)
+    assert plan.token_counts == (6, 2)
+    batch = {"tokens": np.arange(8, dtype=np.int32),
+             "loss_mask": np.ones(8, np.float32)}
+    packed = pack_batch(batch, plan)
+    cap = plan.batch_capacity
+    assert packed["tokens"].shape[0] == 2 * cap
+    assert list(packed["tokens"][:6]) == [0, 1, 2, 3, 4, 5]
+    assert list(packed["tokens"][cap:cap + 2]) == [6, 7]
+    assert packed["loss_mask"].sum() == 8  # pad rows masked out of the loss
+
+
+def test_hidden_mask_layout():
+    plan = make_hetero_plan([1.0, 2.0], hidden_size=192, hidden_quantum=64)
+    assert plan.hidden_splits == (128, 64)
+    m = hidden_mask(plan)  # capacity 128 -> F' = 256
+    assert m.shape == (256,)
+    assert m[:128].all() and m[128:192].all() and not m[192:].any()
+
+
+# ---------------------------------------------------------------------------
+# masked-tail semantics (single process, island level)
+# ---------------------------------------------------------------------------
+
+def _tiny_layer(key, d=16, f=32, e=4):
+    ks = jax.random.split(key, 5)
+    return {"router": jax.random.normal(ks[0], (d, e)) * 0.1,
+            "w_gate": jax.random.normal(ks[1], (e, d, f)) * 0.1,
+            "w_up": jax.random.normal(ks[2], (e, d, f)) * 0.1,
+            "w_down": jax.random.normal(ks[3], (e, f, d)) * 0.1}
+
+
+def test_masked_tail_rows_zero_output_and_zero_grad():
+    from repro.parallel.moe_parallel import (
+        MoEParams, MoEStatic, _SINGLE_MESH, hexa_moe_island,
+    )
+    from repro.parallel.sharding import ParallelConfig
+
+    d, f, e, k, n, nv = 16, 32, 4, 2, 24, 17
+    params = _tiny_layer(jax.random.PRNGKey(0), d, f, e)
+    p = MoEParams(router=params["router"], w_gate=params["w_gate"],
+                  w_up=params["w_up"], w_down=params["w_down"])
+    ms = MoEStatic(num_experts=e, top_k=k, act="silu", glu=True)
+    cfg = ParallelConfig(blk=8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    tv = jnp.arange(n) < nv
+
+    def loss(x, p, masked):
+        y, aux, z = hexa_moe_island(
+            x, p, ms, cfg, _SINGLE_MESH, tokens_sharded_tp=False,
+            token_valid=tv if masked else None,
+        )
+        return jnp.sum(y ** 2) + aux + z, y
+
+    (l_m, y_m), g_m = jax.value_and_grad(loss, argnums=(0, 1),
+                                         has_aux=True)(x, p, True)
+    # tail outputs exactly zero
+    assert bool(jnp.all(y_m[nv:] == 0))
+    # tail rows contribute exactly zero gradient to x ...
+    assert bool(jnp.all(g_m[0][nv:] == 0))
+    # ... and the weight grads equal those of the dense valid-only program
+    (l_v, y_v), g_v = jax.value_and_grad(
+        lambda xv, pv: loss(xv, pv, False), argnums=(0, 1), has_aux=True
+    )(x[:nv], p)
+    np.testing.assert_allclose(np.asarray(y_m[:nv]), np.asarray(y_v),
+                               rtol=0, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(g_m[1]), jax.tree.leaves(g_v[1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_m[0][:nv]), np.asarray(g_v[0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padded_hidden_tiles_compute_exact_unpadded_result():
+    """DESIGN.md §6 padding invariant: embedding the Eq. 2 slices into
+    zero-padded per-rank tiles changes nothing about the output."""
+    d, f, e, k, n = 16, 96, 4, 2, 32
+    params = _tiny_layer(jax.random.PRNGKey(2), d, f, e)
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, d))
+    ref = espec.hexa_moe_ffn(x, params, num_experts=e, top_k=k,
+                             act="silu", glu=True, blk=8).y
+
+    plan = make_hetero_plan([1.0, 2.0], hidden_size=f, hidden_quantum=32)
+    assert plan.hidden_splits == (64, 32) and plan.hidden_padded()
+    fp = plan.padded_hidden_size()
+    cap = plan.hidden_capacity
+    # place each rank's h_i real columns at the head of its padded tile
+    pad = {"router": params["router"],
+           "w_gate": jnp.zeros((e, d, fp)), "w_up": jnp.zeros((e, d, fp)),
+           "w_down": jnp.zeros((e, fp, d))}
+    off = 0
+    for i, h in enumerate(plan.hidden_splits):
+        sl_dst = slice(i * cap, i * cap + h)
+        sl_src = slice(off, off + h)
+        pad["w_gate"] = pad["w_gate"].at[:, :, sl_dst].set(
+            params["w_gate"][:, :, sl_src])
+        pad["w_up"] = pad["w_up"].at[:, :, sl_dst].set(
+            params["w_up"][:, :, sl_src])
+        pad["w_down"] = pad["w_down"].at[:, sl_dst, :].set(
+            params["w_down"][:, sl_src, :])
+        off += h
+    got = espec.hexa_moe_ffn(x, pad, num_experts=e, top_k=k,
+                             act="silu", glu=True, blk=8).y
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_init_moe_ffn_uniform_plan_bitwise_and_padded_zero_columns():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config("mixtral-8x7b")
+    key = jax.random.PRNGKey(0)
+    base = tfm.init_moe_ffn(key, cfg, jnp.float32)
+    up = uniform_plan(2, hidden_size=cfg.moe.d_ff,
+                      hidden_quantum=cfg.moe.d_ff // 2)
+    same = tfm.init_moe_ffn(key, cfg, jnp.float32, plan=up)
+    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(same)):
+        assert bool(jnp.all(a == b))
+
+    skew = make_hetero_plan([1.0, 2.0], hidden_size=cfg.moe.d_ff,
+                            hidden_quantum=cfg.moe.d_ff // 4)
+    if skew.hidden_padded():
+        padded = tfm.init_moe_ffn(key, cfg, jnp.float32, plan=skew)
+        fp = skew.padded_hidden_size()
+        assert padded["w_gate"].value.shape[-1] == fp
+        m = hidden_mask(skew).astype(bool)
+        assert bool(jnp.all(padded["w_gate"].value[:, :, ~m] == 0))
+        assert bool(jnp.all(padded["w_down"].value[:, ~m, :] == 0))
+
+
+# ---------------------------------------------------------------------------
+# per-device execution engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["data_centric", "model_centric"])
+@pytest.mark.parametrize("glu", [True, False])
+def test_hetero_exec_matches_reference(mode, glu):
+    d, f, e, k, n = 16, 64, 4, 2, 40
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    params = {"router": jax.random.normal(ks[0], (d, e)) * 0.1}
+    if glu:
+        params.update(
+            w_gate=jax.random.normal(ks[1], (e, d, f)) * 0.1,
+            w_up=jax.random.normal(ks[2], (e, d, f)) * 0.1,
+            w_down=jax.random.normal(ks[3], (e, f, d)) * 0.1)
+    else:
+        params.update(
+            w1=jax.random.normal(ks[1], (e, d, f)) * 0.1,
+            b1=jnp.full((e, f), 0.1),
+            w2=jax.random.normal(ks[2], (e, f, d)) * 0.1,
+            b2=jnp.full((e, d), 0.05))
+    x = jax.random.normal(ks[5], (n, d), jnp.float32)
+    ref = espec.hexa_moe_ffn(x, params, num_experts=e, top_k=k,
+                             act="silu", glu=glu, blk=8).y
+    plan = make_hetero_plan([1.0, 3.0], global_batch=n, hidden_size=f,
+                            token_quantum=8, hidden_quantum=16)
+    ex = HeteroExecutor(params, num_experts=e, top_k=k, act="silu", glu=glu,
+                        plan=plan, mode=mode, blk=8)
+    y = ex(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    st = ex.timed_step(x, rounds=1)
+    assert st.step_latency_s > 0 and len(st.device_times_s) == 2
+    np.testing.assert_allclose(np.asarray(st.y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# replan loop: bounded plan-keyed retraces
+# ---------------------------------------------------------------------------
+
+def test_replan_retrace_reuses_plan_keyed_cache():
+    plan = make_hetero_plan([1.0, 1.0, 1.0, 1.0], global_batch=32,
+                            capacity_headroom=1.5)
+    mon = StragglerMonitor(
+        4, 32,
+        StragglerConfig(window=4, min_steps_between_replans=0),
+        plan=plan,
+    )
+    traces = []
+    cache = PlanCache(4)
+
+    def step_for(p):
+        return cache.fetch(p.key(), lambda: traces.append(p.key()) or
+                           (lambda: p.token_counts))
+
+    step = step_for(plan)
+    assert len(traces) == 1
+    # straggler appears -> replan -> ONE new trace
+    new = None
+    for _ in range(6):
+        out = mon.report([1.0, 1.0, 1.0, 2.4])
+        new = out or new
+    assert new is not None
+    plan2 = mon.current_plan()
+    assert plan2.token_counts != plan.token_counts
+    assert sum(plan2.token_counts) == 32
+    assert max(plan2.token_counts) <= plan.batch_capacity
+    step_for(plan2)
+    assert len(traces) == 2
+    # same plan again: cache hit, no retrace
+    step_for(plan2)
+    step_for(plan)
+    assert len(traces) == 2
+    assert cache.stats()["hits"] >= 2
+    del step
+
+
+# ---------------------------------------------------------------------------
+# autotune: uneven-split latency term
+# ---------------------------------------------------------------------------
+
+def test_uneven_latency_proportional_beats_uniform():
+    lat = [1.0, 1.0, 2.0, 1.0]
+    n = len(lat)
+    tokens, d, f, e, k = 8192, 1024, 4096, 8, 2
+    tok_prop = proportional_split(lat, tokens)
+    hid_prop = proportional_split(lat, f, quantum=128)
+    for mode in ("data_centric", "model_centric"):
+        uneven = autotune.layer_latency_uneven(
+            mode, tokens, d, f, e, k, lat,
+            token_shares=tok_prop, hidden_shares=hid_prop)
+        uniform = autotune.layer_latency_uneven(
+            mode, tokens, d, f, e, k, lat,
+            token_shares=[tokens // n] * n, hidden_shares=[f // n] * n)
+        assert uneven <= uniform * (1 + 1e-9), mode
+    # homogeneous group: uneven term == the classic roofline
+    flat = [1.0] * n
+    for mode in ("data_centric", "model_centric"):
+        a = autotune.layer_latency_uneven(mode, tokens, d, f, e, k, flat)
+        b = autotune.layer_latency(mode, tokens, d, f, e, k, n_dev=n)
+        np.testing.assert_allclose(a, b, rtol=1e-9)
+
+
+def test_resolve_layer_mode_uses_plan():
+    from repro.parallel.sharding import ParallelConfig
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 4}
+
+    plan = make_hetero_plan([1.0, 1.0, 1.0, 4.0], hidden_size=4096,
+                            hidden_quantum=128)
+    cfg = ParallelConfig(mode="auto", hetero_plan=plan)
+    mode = autotune.resolve_layer_mode(
+        32768, d=1024, f=4096, e=8, k=2, cfg=cfg, mesh=FakeMesh())
+    assert mode in autotune.CHOOSABLE_MODES
+    # tiny decode workload still resolves model-centric under a plan
+    mode_small = autotune.resolve_layer_mode(
+        8, d=1024, f=4096, e=8, k=2, cfg=cfg, mesh=FakeMesh())
+    assert mode_small == "model_centric"
+
+
+# ---------------------------------------------------------------------------
+# SPMD end-to-end (8 fake devices, subprocess)
+# ---------------------------------------------------------------------------
+
+def run_sub(code: str, timeout: int = 900) -> dict:
+    """Run ``code`` under 8 fake CPU devices; parse its RESULT json line."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT")]
+    assert line, res.stdout[-2000:]
+    return json.loads(line[-1][len("RESULT"):])
+
+
+def test_spmd_uniform_plan_bitwise_and_skewed_plan_exact():
+    out = run_sub(r"""
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.parallel.moe_parallel import MoEParams, MoEStatic, moe_layer
+from repro.parallel.sharding import ParallelConfig
+from repro.core import espec
+from repro.core.hetero import make_hetero_plan, uniform_plan
+from repro.launch.mesh import make_mesh
+import dataclasses
+
+mesh = make_mesh((4, 2), ("data", "model"))
+B, S, D, F, E, K = 8, 16, 32, 64, 4, 2
+ks = jax.random.split(jax.random.PRNGKey(0), 6)
+x = jax.random.normal(ks[0], (B, S, D), jnp.float32)
+p = MoEParams(router=jax.random.normal(ks[1], (D, E)) * 0.1,
+              w_gate=jax.random.normal(ks[2], (E, D, F)) * 0.1,
+              w_up=jax.random.normal(ks[3], (E, D, F)) * 0.1,
+              w_down=jax.random.normal(ks[4], (E, F, D)) * 0.1)
+ms = MoEStatic(num_experts=E, top_k=K, act="silu", glu=True)
+spec = P("data", "model", None)
+res = {}
+for mode in ("hybrid", "auto"):
+    cfg0 = ParallelConfig(mode=mode, blk=16)
+    cfgu = ParallelConfig(mode=mode, blk=16,
+                          hetero_plan=uniform_plan(4, global_batch=B))
+    with mesh:
+        y0, a0, z0 = jax.jit(lambda x, p: moe_layer(
+            x, p, ms, cfg0, mesh, x_spec=spec))(x, p)
+        y1, a1, z1 = jax.jit(lambda x, p: moe_layer(
+            x, p, ms, cfgu, mesh, x_spec=spec))(x, p)
+    res[f"bitwise/{mode}"] = bool(jnp.all(y0 == y1)) and float(a0) == float(a1)
+
+# skewed: 7 valid batch rows over 4 data ranks (2,2,2,1), tail masked
+plan = make_hetero_plan([1.0, 1.0, 1.0, 2.0], global_batch=7)
+plan = dataclasses.replace(plan, token_counts=(2, 2, 2, 1), token_capacity=2)
+ref = espec.hexa_moe_ffn(
+    x[:7].reshape(7 * S, D),
+    {"router": p.router, "w_gate": p.w_gate, "w_up": p.w_up,
+     "w_down": p.w_down},
+    num_experts=E, top_k=K, act="silu", glu=True, blk=16).y.reshape(7, S, D)
+for mode in ("hybrid", "auto", "data_centric", "model_centric", "ep"):
+    cfgs = ParallelConfig(mode=mode, blk=16, capacity_factor=8.0,
+                          hetero_plan=plan)
+    with mesh:
+        ys, _, _ = jax.jit(lambda x, p: moe_layer(
+            x, p, ms, cfgs, mesh, x_spec=spec))(x, p)
+    res[f"skew_err/{mode}"] = float(jnp.abs(ys[:7] - ref).max())
+    res[f"skew_tail0/{mode}"] = bool(jnp.all(ys[7] == 0))
+
+# masked rows: zero gradient through the island (weights see only valid rows)
+def loss(p, cfg):
+    y, aux, z = moe_layer(x, p, ms, cfg, mesh, x_spec=spec)
+    return jnp.sum(y ** 2) + aux
+
+with mesh:
+    gs = jax.jit(jax.grad(lambda p: loss(p, ParallelConfig(
+        mode="hybrid", blk=16, hetero_plan=plan))))(p)
+    gv = jax.jit(jax.grad(lambda p: loss(p, ParallelConfig(
+        mode="hybrid", blk=16))))(p)
+# grads must differ from the unmasked program (row 7 excluded) but be finite
+res["grad_finite"] = all(bool(jnp.isfinite(g).all())
+                         for g in jax.tree.leaves(gs))
+res["grad_masks_row"] = any(
+    float(jnp.abs(a - b).max()) > 1e-8
+    for a, b in zip(jax.tree.leaves(gs), jax.tree.leaves(gv)))
+print("RESULT" + json.dumps(res))
+""")
+    for mode in ("hybrid", "auto"):
+        assert out[f"bitwise/{mode}"], out
+    for key, val in out.items():
+        if key.startswith("skew_err/"):
+            assert val < 5e-5, (key, val)
+        if key.startswith("skew_tail0/"):
+            assert val, key
+    assert out["grad_finite"] and out["grad_masks_row"]
+
+
+def test_spmd_train_step_and_serve_decode_under_plan():
+    out = run_sub(r"""
+import json, dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import get_smoke_config
+from repro.core.hetero import make_hetero_plan, pack_batch, uniform_plan
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.optim import adamw
+from repro.parallel.sharding import ParallelConfig, split_tree, tree_shardings
+
+cfg = dataclasses.replace(get_smoke_config("mixtral-8x7b"), dtype="float32")
+B, S = 8, 32
+mesh = make_mesh((4, 2), ("data", "model"))
+rng = np.random.default_rng(0)
+toks = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+batch = {"tokens": toks, "labels": np.roll(toks, -1, 1).astype(np.int32),
+         "loss_mask": np.ones((B, S), np.float32)}
+opt_cfg = adamw.OptimizerConfig(master_fp32=False)
+
+def losses(pcfg, host_batch, eff_b, steps=2):
+    params, specs = split_tree(
+        lm.init_params(jax.random.PRNGKey(0), cfg, plan=pcfg.hetero_plan))
+    params = jax.tree.map(jax.device_put, params,
+                          tree_shardings(params, specs, pcfg, mesh))
+    opt = adamw.init_opt_state(params, opt_cfg)
+    step = jax.jit(steps_lib.make_train_step(cfg, pcfg, mesh, opt_cfg,
+                                             (eff_b, S, cfg.d_model)))
+    out = []
+    b = {k: jnp.asarray(v) for k, v in host_batch.items()}
+    for _ in range(steps):
+        params, opt, m = step(params, opt, b)
+        out.append(float(m["loss"]))
+    return out
+
+res = {}
+with mesh:
+    base = losses(ParallelConfig(mode="auto", blk=8), batch, B)
+    uni = losses(ParallelConfig(
+        mode="auto", blk=8, hetero_plan=uniform_plan(4, global_batch=B)),
+        batch, B)
+    res["train_bitwise_uniform"] = base == uni
+
+    # skewed: token shares (3,2,2,1) + uneven TP hidden tiles (quantum /4)
+    plan = make_hetero_plan([1.0, 1.0, 1.0, 2.0], global_batch=B,
+                            hidden_size=cfg.moe.d_ff,
+                            tp_latencies=[1.0, 1.5],
+                            hidden_quantum=max(cfg.moe.d_ff // 4, 8),
+                            capacity_headroom=1.5)
+    eff_b = len(plan.token_counts) * plan.batch_capacity
+    skew_losses = losses(ParallelConfig(mode="auto", blk=8, hetero_plan=plan),
+                         pack_batch(batch, plan), eff_b)
+    res["train_skew_finite"] = all(np.isfinite(skew_losses))
+    res["plan"] = [list(plan.token_counts), list(plan.hidden_splits)]
+
+    # serve decode: uniform plan bitwise; skewed plan runs
+    slots = 8
+    slot_toks = rng.integers(0, cfg.vocab_size, size=(16, 1)).astype(np.int32)
+    def decode_logits(pcfg, nslots):
+        params, specs = split_tree(
+            lm.init_params(jax.random.PRNGKey(0), cfg, plan=pcfg.hetero_plan))
+        params = jax.tree.map(jax.device_put, params,
+                              tree_shardings(params, specs, pcfg, mesh))
+        cache = lm.init_cache(cfg, nslots, 16)
+        step = jax.jit(steps_lib.make_serve_step(
+            cfg, pcfg, mesh, (nslots, 1, cfg.d_model)))
+        toks = jnp.asarray(slot_toks[:nslots])
+        logits, cache = step(params, {"tokens": toks}, cache)
+        return np.asarray(logits)
+
+    l0 = decode_logits(ParallelConfig(mode="auto", blk=8), slots)
+    l1 = decode_logits(ParallelConfig(
+        mode="auto", blk=8, hetero_plan=uniform_plan(4, global_batch=slots)),
+        slots)
+    res["decode_bitwise_uniform"] = bool((l0 == l1).all())
+    splan = make_hetero_plan([1.0, 1.0, 1.0, 2.0], global_batch=slots,
+                             hidden_size=cfg.moe.d_ff,
+                             tp_latencies=[1.0, 1.5],
+                             hidden_quantum=max(cfg.moe.d_ff // 4, 8))
+    eff_slots = len(splan.token_counts) * splan.batch_capacity
+    l2 = decode_logits(ParallelConfig(mode="auto", blk=8, hetero_plan=splan),
+                       eff_slots)
+    res["decode_skew_finite"] = bool(np.isfinite(l2).all())
+print("RESULT" + json.dumps(res))
+""")
+    assert out["train_bitwise_uniform"], out
+    assert out["train_skew_finite"], out
+    assert out["decode_bitwise_uniform"], out
+    assert out["decode_skew_finite"], out
