@@ -14,14 +14,19 @@ bench:
 docs-check:
 	$(PY) scripts/docs_check.py
 
-# BENCH_*.json must match the README-documented schema, and the executed
-# heterogeneous comparison rows must be present.
+# BENCH_*.json must match the README-documented schema, the executed
+# heterogeneous comparison rows must be present, and the serving
+# paged-vs-dense comparison must carry both sides of every claim.
 bench-check:
 	$(PY) scripts/validate_bench.py BENCH_kernels.json BENCH_hetero.json \
+		BENCH_serve.json \
 		--require hetero_exec/data_centric/uniform \
 		--require hetero_exec/data_centric/proportional \
 		--require hetero_exec/model_centric/uniform \
-		--require hetero_exec/model_centric/proportional
+		--require hetero_exec/model_centric/proportional \
+		--require serve/paged/tokens_per_s \
+		--require serve/dense/tokens_per_s \
+		--lt serve/paged/kv_cache_bytes:serve/dense/kv_cache_bytes
 
 ci:
 	bash scripts/ci.sh

@@ -35,7 +35,7 @@ def main() -> None:
                        help="quick grids (the default; explicit flag for CI)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: kernel,hetero,centric,"
-                         "memory,latency,ablation")
+                         "memory,latency,ablation,serve")
     ap.add_argument("--json", default=os.path.join(_ROOT, "BENCH_kernels.json"),
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args()
@@ -51,6 +51,7 @@ def main() -> None:
         kernel_bench,
         latency_table,
         memory_table,
+        serve_bench,
     )
 
     suites = {
@@ -60,6 +61,7 @@ def main() -> None:
         "memory": memory_table.run,
         "latency": latency_table.run,
         "ablation": ablation.run,
+        "serve": serve_bench.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     bench_common.reset_records()
@@ -104,7 +106,7 @@ def main() -> None:
 
 #: Suites whose rows accumulate in their own file (everything else goes to
 #: the --json default, BENCH_kernels.json).
-SUITE_JSON = {"hetero": "BENCH_hetero.json"}
+SUITE_JSON = {"hetero": "BENCH_hetero.json", "serve": "BENCH_serve.json"}
 
 
 def _write_json(path, results, suites, failed, meta_base, merge):

@@ -16,13 +16,16 @@ python -m pytest -x -q
 
 # Benchmark smoke: every paper-table module must at least run its quick grid
 # (JAX_PLATFORMS=cpu via the Makefile) and emit BENCH_kernels.json +
-# BENCH_hetero.json (the hetero suite runs the Eq. 1/2 uneven splits for
-# real and asserts proportional <= uniform under simulated skew), so the
-# harness and the machine-readable perf trajectory can't bit-rot.
+# BENCH_hetero.json + BENCH_serve.json (the hetero suite runs the Eq. 1/2
+# uneven splits for real and asserts proportional <= uniform under simulated
+# skew; the serve suite runs the mixed-length workload through the dense and
+# paged drivers and asserts paged uses less peak KV cache with no tokens/s
+# regression), so the harness and the machine-readable perf trajectory
+# can't bit-rot.
 make bench
 
-# Validate both JSON files against the README-documented schema and pin the
-# executed heterogeneous comparison rows.
+# Validate the JSON files against the README-documented schema and pin the
+# executed heterogeneous + paged-vs-dense serving comparison rows.
 make bench-check
 
 make docs-check

@@ -6,11 +6,16 @@ suites, failed_suites, jax, backend) and a ``results`` mapping of
 
 Usage:
   python scripts/validate_bench.py BENCH_kernels.json BENCH_hetero.json \
-      [--require PREFIX ...]
+      [--require PREFIX ...] [--lt NAME_A:NAME_B ...]
 
 ``--require PREFIX`` additionally demands at least one result row whose
 name starts with PREFIX (CI uses it to pin the hetero uniform/proportional
 rows so the executed Fig. 11 comparison can't silently vanish).
+
+``--lt NAME_A:NAME_B`` demands both rows exist and A's numeric value is
+strictly below B's (CI pins the serving claim "paged peak KV-cache bytes <
+dense rectangle bytes" from the emitted JSON itself, not just from the
+in-suite assert).
 """
 from __future__ import annotations
 
@@ -59,16 +64,31 @@ def main(argv=None) -> int:
     ap.add_argument("--require", action="append", default=[],
                     help="result-name prefix that must be present "
                          "(in at least one file)")
+    ap.add_argument("--lt", action="append", default=[],
+                    help="NAME_A:NAME_B — both rows must exist and A's "
+                         "numeric value must be strictly below B's")
     args = ap.parse_args(argv)
     errors = []
     names: list[str] = []
+    values: dict = {}
     for path in args.files:
         payload, errs = validate(path)
         errors += errs
-        names += list(payload.get("results", {}) or {})
+        for name, row in (payload.get("results", {}) or {}).items():
+            names.append(name)
+            if isinstance(row, dict) and isinstance(
+                    row.get("us_per_call"), numbers.Number):
+                values[name] = row["us_per_call"]
     for prefix in args.require:
         if not any(n.startswith(prefix) for n in names):
             errors.append(f"required result prefix missing: {prefix!r}")
+    for pair in args.lt:
+        a, _, b = pair.partition(":")
+        if a not in values or b not in values:
+            errors.append(f"--lt {pair}: missing row(s)")
+        elif not values[a] < values[b]:
+            errors.append(
+                f"--lt {pair}: {values[a]} is not below {values[b]}")
     if errors:
         for e in errors:
             print(f"validate_bench: {e}", file=sys.stderr)

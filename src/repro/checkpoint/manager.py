@@ -47,6 +47,14 @@ _VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
                 "float8_e5m2": np.uint8}
 
 
+def _fsync_write(path: str, write_fn) -> None:
+    """Write + flush one file to stable storage before the commit rename."""
+    with open(path, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
 def _write(directory, step, host_leaves, treedef, meta) -> str:
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -61,7 +69,8 @@ def _write(directory, step, host_leaves, treedef, meta) -> str:
         view = _VIEW_DTYPES.get(str(arr.dtype))
         if view is not None:
             arr = arr.view(view)
-        np.save(os.path.join(tmp, name), arr)
+        _fsync_write(os.path.join(tmp, name),
+                     lambda f, a=arr: np.save(f, a))
         names.append(name)
     manifest = {
         "step": step,
@@ -72,19 +81,34 @@ def _write(directory, step, host_leaves, treedef, meta) -> str:
         "meta": meta,
         "process_index": jax.process_index(),
     }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    _fsync_write(os.path.join(tmp, "manifest.json"),
+                 lambda f: f.write(json.dumps(manifest, indent=1).encode()))
     if os.path.exists(final):
         shutil.rmtree(final)
+    # The rename is the commit point: data was fsynced above, and the parent
+    # directory entry is fsynced after, so a crash can never order the
+    # rename ahead of the checkpoint's bytes ("latest" is always complete).
     os.replace(tmp, final)
+    dir_fd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(dir_fd)
+    finally:
+        os.close(dir_fd)
     return final
 
 
 class AsyncSaver:
-    """Snapshot-to-host synchronously, write in a background thread."""
+    """Snapshot-to-host synchronously, write in a background thread.
+
+    A failed background write re-raises at the next ``wait()`` (or the next
+    ``save()``, which waits first) instead of vanishing with the thread —
+    otherwise the trainer keeps running, ``gc_old`` prunes the older good
+    checkpoints, and a later warm restart restores something stale while
+    believing the newest save succeeded."""
 
     def __init__(self):
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self.last_path: Optional[str] = None
 
     def save(self, directory: str, step: int, tree: Any,
@@ -94,8 +118,11 @@ class AsyncSaver:
         host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
 
         def work():
-            self.last_path = _write(directory, step, host_leaves, treedef,
-                                    meta or {})
+            try:
+                self.last_path = _write(directory, step, host_leaves,
+                                        treedef, meta or {})
+            except BaseException as exc:  # noqa: BLE001 — handed to wait()
+                self._error = exc
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -104,6 +131,9 @@ class AsyncSaver:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            exc, self._error = self._error, None
+            raise exc
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -156,11 +186,20 @@ def restore(
 
 
 def gc_old(directory: str, keep: int = 3) -> None:
+    """Delete all but the newest ``keep`` committed checkpoints.
+
+    ``keep=0`` deletes everything (the old ``steps[:-keep]`` slice made it
+    silently keep everything instead). ``.tmp`` dirs are never touched:
+    one may belong to an in-flight ``AsyncSaver`` write, and ``_write``
+    clears its own stale tmp before re-using the name."""
+    if keep < 0:
+        raise ValueError(f"keep must be >= 0, got {keep}")
     if not os.path.isdir(directory):
         return
     steps = sorted(
         d for d in os.listdir(directory)
         if d.startswith("step_") and not d.endswith(".tmp")
     )
-    for d in steps[:-keep]:
+    cut = len(steps) - keep
+    for d in steps[:max(cut, 0)]:
         shutil.rmtree(os.path.join(directory, d))

@@ -1,16 +1,31 @@
-"""Serving driver: prefill + batched decode with a static-shape request
-queue (continuous-batching lite: finished slots are refilled between decode
-macro-steps so the jitted step shape never changes).
+"""Serving drivers: continuous batching over a dense KV cache (baseline)
+and over the paged KV cache (DESIGN.md §7).
 
-Heterogeneous serving (paper §4.4, DESIGN.md §6): ``--hetero-latencies``
-builds an Eq. 1 plan over the decode slot dim — each data-group member
-serves its proportional share of slots, the padded tail slots are masked in
-the MoE islands and never scheduled; ``--hetero-tp-latencies`` adds the
-Eq. 2 uneven hidden tiles.
+Both servers batch around the same shape-stable decode macro-step — every
+occupied slot advances one token per step (a prompt token while prefilling,
+the fed-back greedy token while decoding), inactive slots are masked — so
+finished slots refill between steps without retracing.
+
+``BatchedServer`` is the dense baseline: a ``(num_slots, max_seq)`` KV
+rectangle allocated up front, every prompt token paying a full-batch step.
+``PagedServer`` is the production engine: fixed-size pages in a shared pool
+(``parallel.cache.PagePool``), per-slot page tables, admission by free-page
+budget (worst-case pages reserved up front, so preemption-free FIFO decode
+never starves the pool mid-request), chunked batch-1 prefill
+(``launch.steps.make_paged_prefill_step``) interleaved with decode
+macro-steps — pages granted a chunk's worth at a time from the
+reservation — and on-demand page allocation at decode page boundaries.
+
+Heterogeneous serving (paper §4.4, DESIGN.md §6/§7): for the dense baseline
+``--hetero-latencies`` builds an Eq. 1 plan over the slot dim (tail slots
+masked); for the paged engine the same plan becomes per-device PAGE-POOL
+shares (``parallel.cache.page_shares``) — all slots stay schedulable, each
+device group's admissions are budgeted against its share of pages.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -21,10 +36,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfglib
+from repro.common import cdiv
 from repro.core import hetero as hetero_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_mesh
 from repro.models import lm
+from repro.parallel.cache import PagePool, page_shares
 from repro.parallel.sharding import ParallelConfig, split_tree, tree_shardings
 
 
@@ -36,81 +53,398 @@ class Request:
     out: list = field(default_factory=list)
 
 
+def _greedy(logits) -> np.ndarray:
+    return np.asarray(jnp.argmax(logits[..., -1, :], axis=-1)).reshape(-1)
+
+
+def greedy_reference(cfg, pcfg, mesh, params, prompt, max_new, *,
+                     max_seq: int, step=None) -> list[int]:
+    """One-request-at-a-time dense-cache reference stream: batch-1 prefill
+    (token by token) then greedy decode — the ground truth the parity
+    matrix pins both batched servers against."""
+    if step is None:
+        step = jax.jit(steps_lib.make_serve_step(
+            cfg, pcfg, mesh, (1, 1, cfg.d_model)))
+    cache = lm.init_cache(cfg, 1, max_seq)
+    logits = None
+    for tok in prompt:
+        logits, cache = step(
+            params, {"tokens": jnp.asarray([[tok]], jnp.int32)}, cache)
+    out = [int(_greedy(logits)[0])]
+    while len(out) < max_new:
+        logits, cache = step(
+            params, {"tokens": jnp.asarray([[out[-1]]], jnp.int32)}, cache)
+        out.append(int(_greedy(logits)[0]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dense baseline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Slot:
+    req: Request
+    pos: int = 0        # prompt tokens consumed
+
+
 class BatchedServer:
-    """Fixed-slot decode server. Slots hold independent sequences; the
-    cache is one pytree with a batch dim == num_slots."""
+    """Dense-cache continuous batching: the KV rectangle
+    ``(num_slots, max_seq)`` is allocated up front (the memory
+    over-allocation the paged engine exists to kill) and every prompt token
+    of every request costs one full-batch macro-step."""
 
     def __init__(self, cfg, pcfg, mesh, *, num_slots: int, max_seq: int,
-                 params, seed: int = 0,
-                 valid_slots: Optional[list] = None):
+                 params, valid_slots: Optional[list] = None):
         self.cfg, self.pcfg, self.mesh = cfg, pcfg, mesh
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.params = params
         self.cache = lm.init_cache(cfg, num_slots, max_seq)
-        shape3 = (num_slots, 1, cfg.d_model)
-        self.serve_step = jax.jit(
-            steps_lib.make_serve_step(cfg, pcfg, mesh, shape3)
-        )
-        self.active: dict[int, Request] = {}
+        self.serve_step = jax.jit(steps_lib.make_serve_step(
+            cfg, pcfg, mesh, (num_slots, 1, cfg.d_model)))
+        self.slots: list[Optional[_Slot]] = [None] * num_slots
         self.queue: deque[Request] = deque()
-        self.slot_tokens = np.zeros((num_slots, 1), np.int32)
-        # Heterogeneous plan (DESIGN.md §6): only each device's Eq. 1 share
-        # of slots is schedulable; padded tail slots stay permanently free
-        # and are masked inside the MoE islands.
-        self.free = (list(valid_slots) if valid_slots is not None
-                     else list(range(num_slots)))
+        # Heterogeneous plan over the slot dim (DESIGN.md §6): only each
+        # device's Eq. 1 share of slots is schedulable.
+        self.free = sorted(valid_slots if valid_slots is not None
+                           else range(num_slots), reverse=True)
         self.decode_times_s: list = []
+        self.admissions = 0
 
     def submit(self, req: Request):
+        if len(req.prompt) + req.max_new - 1 > self.max_seq:
+            raise ValueError(
+                f"request {req.rid} needs {len(req.prompt) + req.max_new - 1}"
+                f" cache rows > max_seq {self.max_seq}")
         self.queue.append(req)
 
-    def _prefill_one(self, slot: int, req: Request):
-        """Prefill a single slot by decoding its prompt token by token
-        (simple and shape-stable; a production server would use a bucketed
-        prefill step — launch.steps.make_prefill_step — per length)."""
-        # reset the slot: stale cache beyond len is masked by decode attn
-        self.cache["len"] = self.cache["len"].at[slot].set(0)
-        for tok in req.prompt:
-            self.slot_tokens[slot, 0] = tok
-            self._decode_step()
-        self.active[slot] = req
+    def _admit(self):
+        while self.free and self.queue:
+            slot = self.free.pop()
+            req = self.queue.popleft()
+            self.cache = lm.reset_slot(self.cfg, self.cache, slot)
+            self.slots[slot] = _Slot(req)
+            self.admissions += 1
 
-    def _decode_step(self):
+    def _macro_step(self) -> list[Request]:
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        active = np.zeros((self.num_slots,), bool)
+        for slot, st in enumerate(self.slots):
+            if st is None:
+                continue
+            active[slot] = True
+            tokens[slot, 0] = (st.req.prompt[st.pos]
+                               if st.pos < len(st.req.prompt)
+                               else st.req.out[-1])
         t0 = time.perf_counter()
         logits, self.cache = self.serve_step(
-            self.params, {"tokens": jnp.asarray(self.slot_tokens)}, self.cache
+            self.params,
+            {"tokens": jnp.asarray(tokens), "active": jnp.asarray(active)},
+            self.cache,
         )
-        out = np.asarray(jnp.argmax(logits[..., -1, :], axis=-1)).reshape(-1)
+        nxt = _greedy(logits)
         self.decode_times_s.append(time.perf_counter() - t0)
-        return out
-
-    def run(self, max_steps: int = 1000) -> list[Request]:
         done = []
-        steps = 0
-        while (self.queue or self.active) and steps < max_steps:
-            # fill free slots
-            while self.free and self.queue:
-                slot = self.free.pop()
-                req = self.queue.popleft()
-                self._prefill_one(slot, req)
-            nxt = self._decode_step()
-            steps += 1
-            for slot, req in list(self.active.items()):
-                req.out.append(int(nxt[slot]))
-                if len(req.out) >= req.max_new:
-                    done.append(req)
-                    del self.active[slot]
+        for slot, st in enumerate(self.slots):
+            if st is None:
+                continue
+            st.pos += 1
+            if st.pos >= len(st.req.prompt):
+                st.req.out.append(int(nxt[slot]))
+                if len(st.req.out) >= st.req.max_new:
+                    done.append(st.req)
+                    self.slots[slot] = None
                     self.free.append(slot)
         return done
 
+    def run(self, max_steps: int = 100000) -> list[Request]:
+        done = []
+        steps = 0
+        while (self.queue or any(self.slots)) and steps < max_steps:
+            self._admit()
+            done.extend(self._macro_step())
+            steps += 1
+        return done
+
+
+# ---------------------------------------------------------------------------
+# paged engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _PagedSlot:
+    req: Request
+    group: int
+    order: int           # admission sequence (FIFO prefill priority)
+    need: int            # worst-case pages reserved at admission
+    pages: list = field(default_factory=list)  # phys page per logical (0 =
+    pos: int = 0         # prompt tokens consumed       # reclaimed)
+    length: int = 0      # tokens written to the paged cache
+    reclaimed: int = 0   # leading logical pages released behind the window
+
+
+class PagedServer:
+    """Continuous batching over the paged KV cache (DESIGN.md §7).
+
+    Admission is by free-page budget: a request is admitted only when its
+    worst-case page count ``ceil((prompt + max_new - 1) / page_size)`` can
+    be reserved (per device group under a hetero plan), which makes the
+    preemption-free FIFO safe — every physical ``alloc`` draws from the
+    reservation and cannot fail. Prefill grants a chunk's worth of pages
+    before each ``prefill_chunk``-token batch-1 chunk (interleaved with
+    the decode macro-steps of the already-running slots); decode grants
+    one page per boundary crossing; on all-windowed stacks pages wholly
+    behind the window return to the pool mid-request.
+    """
+
+    def __init__(self, cfg, pcfg, mesh, *, num_slots: int, page_size: int,
+                 num_pages: int, max_pages_per_slot: int, params,
+                 prefill_chunk: int = 16, plan=None):
+        self.cfg, self.mesh = cfg, mesh
+        # The plan's Eq. 1 shares are honored as page budgets (below), not
+        # as masked tail rows — every slot is schedulable, so only the
+        # token_counts half is stripped from the step config. The Eq. 2
+        # half (tp_latencies / hidden_splits) stays: the auto-mode roofline
+        # keeps pricing layers with the uneven-tile term, matching the
+        # plan-padded weights the caller initialised.
+        self.pcfg = pcfg
+        if pcfg.hetero_plan is not None:
+            self.pcfg = dataclasses.replace(
+                pcfg,
+                hetero_plan=dataclasses.replace(
+                    pcfg.hetero_plan, token_counts=None, token_capacity=None),
+            )
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.max_pages_per_slot = max_pages_per_slot
+        self.prefill_chunk = prefill_chunk
+        self.params = params
+        self.cache = lm.init_paged_cache(cfg, num_slots, num_pages, page_size)
+
+        n_attn = sum(cfg.layer_kind(i) == "attn" for i in range(cfg.num_layers))
+        itemsize = jnp.dtype(cfg.dtype).itemsize
+        self.page_bytes = (
+            n_attn * 2 * page_size * cfg.num_kv_heads * cfg.hd * itemsize
+        )
+        shares = None
+        self.groups = [0] * num_slots
+        if plan is not None:
+            shares = page_shares(plan.token_counts, num_pages - 1)
+            n_g = len(shares)
+            if num_slots < n_g:
+                raise ValueError(
+                    f"{num_slots} slots cannot cover {n_g} device groups "
+                    f"(a group without slots could never admit)")
+            self.groups = [s * n_g // num_slots for s in range(num_slots)]
+        self.pool = PagePool(num_pages, page_bytes=self.page_bytes,
+                             shares=shares)
+
+        # Window page reclamation: when EVERY attention layer is windowed
+        # (e.g. mixtral's all-SWA stack), a page wholly behind the window
+        # is dead — no layer will ever read it — and goes back to the pool
+        # mid-request. Mixed local/global stacks keep everything (the
+        # global layers read the full history through the shared table).
+        attn_idx = [i for i in range(cfg.num_layers)
+                    if cfg.layer_kind(i) == "attn"]
+        self.reclaim_window = (
+            cfg.window
+            if cfg.window > 0 and attn_idx
+            and all(cfg.attn_kind(i) == "local" for i in attn_idx)
+            else None
+        )
+
+        self.table = np.zeros((num_slots, max_pages_per_slot), np.int32)
+        self.serve_step = jax.jit(steps_lib.make_paged_serve_step(
+            cfg, self.pcfg, mesh, (num_slots, 1, cfg.d_model), page_size))
+        self.prefill_step = jax.jit(steps_lib.make_paged_prefill_step(
+            cfg, self.pcfg, mesh, page_size))
+        self.slots: list[Optional[_PagedSlot]] = [None] * num_slots
+        self.queue: deque[Request] = deque()
+        self.free = sorted(range(num_slots), reverse=True)
+        self.decode_times_s: list = []
+        self.admissions = 0
+        self.admission_log: list[int] = []   # rids, in admission order
+        self._order = 0
+
+    def _need_pages(self, req: Request) -> int:
+        # cache rows written = prompt + fed-back outputs (the last
+        # generated token is never fed back).
+        return cdiv(len(req.prompt) + req.max_new - 1, self.page_size)
+
+    def submit(self, req: Request):
+        if len(req.prompt) < 1 or req.max_new < 1:
+            raise ValueError(f"request {req.rid}: empty prompt or max_new")
+        if self._need_pages(req) > self.max_pages_per_slot:
+            raise ValueError(
+                f"request {req.rid} needs {self._need_pages(req)} pages "
+                f"> max_pages_per_slot {self.max_pages_per_slot}")
+        if self._need_pages(req) > max(self.pool.shares):
+            raise ValueError(
+                f"request {req.rid} needs {self._need_pages(req)} pages "
+                f"> largest group share {max(self.pool.shares)} — it could "
+                f"never admit (FIFO would deadlock behind it)")
+        self.queue.append(req)
+
+    # -- scheduling ticks -----------------------------------------------------
+
+    def _admit(self):
+        """Strict FIFO: the queue head admits as soon as ANY free slot's
+        group can reserve its worst-case pages; nothing overtakes it
+        (head-of-line blocking is what makes FIFO starvation-free)."""
+        while self.queue and self.free:
+            req = self.queue[0]
+            need = self._need_pages(req)
+            slot = None
+            for s in reversed(self.free):        # lowest slot id first
+                if self.pool.try_reserve(need, self.groups[s]):
+                    slot = s
+                    break
+            if slot is None:
+                return
+            self.queue.popleft()
+            self.free.remove(slot)
+            self.cache = lm.reset_slot(self.cfg, self.cache, slot)
+            st = _PagedSlot(req, self.groups[slot], self._order, need)
+            self._order += 1
+            self.admissions += 1
+            self.admission_log.append(req.rid)
+            self.table[slot, :] = 0
+            self.slots[slot] = st
+
+    def _ensure_pages(self, slot: int, st: _PagedSlot, length: int):
+        """Back every position below ``length`` with a physical page,
+        drawing from the request's admission reservation: a chunk's worth
+        at once before a prefill tick (the bulk grant), one page at a
+        decode boundary. Granting at use (not all at admission) is what
+        lets window reclamation bound an SWA request's live pages below
+        its total page count."""
+        while (length - 1) // self.page_size >= len(st.pages):
+            st.pages.append(self.pool.alloc(st.group))
+            self.table[slot, len(st.pages) - 1] = st.pages[-1]
+
+    def _reclaim(self, slot: int, st: _PagedSlot):
+        """Release pages wholly behind the attention window: logical page
+        ``j`` is dead once ``(j+1) * page_size <= length - window`` (the
+        next read starts at ``length + 1 - window``, so this is
+        conservative). The table entry drops to the sink; attention masks
+        the positions regardless, so a reused page's new contents are
+        never observable."""
+        if self.reclaim_window is None:
+            return
+        dead = (st.length - self.reclaim_window) // self.page_size
+        while st.reclaimed < dead:
+            j = st.reclaimed
+            self.pool.release([st.pages[j]], st.group)
+            st.pages[j] = 0
+            self.table[slot, j] = 0
+            st.reclaimed += 1
+
+    def _finish(self, slot: int, st: _PagedSlot, done: list):
+        done.append(st.req)
+        self.pool.release([p for p in st.pages if p != 0], st.group,
+                          unused_reserved=st.need - len(st.pages))
+        self.table[slot, :] = 0
+        self.slots[slot] = None
+        self.free.append(slot)
+
+    def _prefill_tick(self, done: list) -> bool:
+        """One chunk of the FIFO-oldest prefilling request."""
+        cand = [(st.order, slot, st) for slot, st in enumerate(self.slots)
+                if st is not None and st.pos < len(st.req.prompt)]
+        if not cand:
+            return False
+        _, slot, st = min(cand)
+        n = min(self.prefill_chunk, len(st.req.prompt) - st.pos)
+        self._ensure_pages(slot, st, st.length + n)
+        toks = np.zeros((self.prefill_chunk,), np.int32)
+        toks[:n] = st.req.prompt[st.pos: st.pos + n]
+        # .copy(): self.table is a persistent host buffer the scheduler
+        # mutates (reclaim, grants) while steps are still in flight — CPU
+        # jax aliases numpy inputs zero-copy, so an async read of the live
+        # buffer could observe a FUTURE table state (a real, hash-seed-
+        # timing-dependent token corruption caught by the parity tests).
+        last, self.cache = self.prefill_step(
+            self.params, jnp.asarray(toks), jnp.int32(n), jnp.int32(slot),
+            jnp.asarray(self.table[slot].copy()), self.cache,
+        )
+        st.pos += n
+        st.length += n
+        self._reclaim(slot, st)
+        if st.pos == len(st.req.prompt):
+            st.req.out.append(int(np.argmax(np.asarray(last))))
+            if len(st.req.out) >= st.req.max_new:
+                self._finish(slot, st, done)
+        return True
+
+    def _decode_tick(self, done: list) -> bool:
+        """One decode macro-step over every slot past prefill."""
+        dec = [(slot, st) for slot, st in enumerate(self.slots)
+               if st is not None and st.pos >= len(st.req.prompt)]
+        if not dec:
+            return False
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        active = np.zeros((self.num_slots,), bool)
+        for slot, st in dec:
+            self._ensure_pages(slot, st, st.length + 1)
+            tokens[slot, 0] = st.req.out[-1]
+            active[slot] = True
+        t0 = time.perf_counter()
+        logits, self.cache = self.serve_step(
+            self.params,
+            {"tokens": jnp.asarray(tokens),
+             # .copy() — see _prefill_tick: the live table buffer must not
+             # be aliased by an asynchronously-executing step
+             "page_table": jnp.asarray(self.table.copy()),
+             "active": jnp.asarray(active)},
+            self.cache,
+        )
+        nxt = _greedy(logits)
+        self.decode_times_s.append(time.perf_counter() - t0)
+        for slot, st in dec:
+            st.length += 1
+            st.req.out.append(int(nxt[slot]))
+            self._reclaim(slot, st)
+            if len(st.req.out) >= st.req.max_new:
+                self._finish(slot, st, done)
+        return True
+
+    def run(self, max_steps: int = 100000) -> list[Request]:
+        done: list[Request] = []
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self._admit()
+            advanced = self._prefill_tick(done)
+            advanced |= self._decode_tick(done)
+            if not advanced and not self.queue:
+                break
+            steps += 1
+        return done
+
+    def stats(self) -> dict:
+        return {**self.pool.stats(), "admissions": self.admissions}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV pool (DESIGN.md §7) "
+                         "instead of the dense (slots, max_seq) rectangle")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=0,
+                    help="shared pool size incl. the sink page "
+                         "(0 -> slots * ceil(max_seq/page)/2 + 1: half the "
+                         "dense rectangle, the paged engine's whole point)")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--mesh", default=None)
@@ -126,9 +460,10 @@ def main(argv=None):
                          "(gathered MoE periods) for the decode forward; "
                          ">0 unrolls the layer loop")
     ap.add_argument("--hetero-latencies", default=None,
-                    help="comma-separated t_i per batch-group member: serve "
-                         "an Eq. 1 uneven slot split (DESIGN.md §6). "
-                         "Requires --mesh")
+                    help="comma-separated t_i per batch-group member: an "
+                         "Eq. 1 plan — uneven SLOT shares for the dense "
+                         "server, uneven PAGE-POOL shares for --paged "
+                         "(DESIGN.md §6/§7). Requires --mesh for dense")
     ap.add_argument("--hetero-tp-latencies", default=None,
                     help="comma-separated t_i per TP-group member: Eq. 2 "
                          "uneven hidden tiles")
@@ -144,8 +479,8 @@ def main(argv=None):
     plan = None
     num_slots, valid_slots = args.slots, None
     if args.hetero_latencies:
-        if mesh is None:
-            ap.error("--hetero-latencies requires --mesh")
+        if mesh is None and not args.paged:
+            ap.error("--hetero-latencies requires --mesh (dense server)")
         tok_lat = tuple(float(t) for t in args.hetero_latencies.split(","))
         tp_lat = (tuple(float(t) for t in args.hetero_tp_latencies.split(","))
                   if args.hetero_tp_latencies else None)
@@ -157,14 +492,18 @@ def main(argv=None):
                          else None),
             tp_latencies=tp_lat,
         )
-        # Padded slot layout: device i's chunk holds capacity slots, only
-        # its Eq. 1 share schedulable (tail slots masked in the islands).
-        cap = plan.batch_capacity
-        num_slots = len(plan.token_counts) * cap
-        valid_slots = [i * cap + j for i, c in enumerate(plan.token_counts)
-                       for j in range(c)]
-        print(f"[serve] hetero plan: slot shares {plan.token_counts} "
-              f"({num_slots} padded slots), hidden {plan.hidden_splits}")
+        if args.paged:
+            print(f"[serve] hetero plan: page-pool shares proportional to "
+                  f"{plan.token_counts} (all {num_slots} slots schedulable)")
+        else:
+            # Dense: padded slot layout, device i's Eq. 1 share schedulable.
+            cap = plan.batch_capacity
+            num_slots = len(plan.token_counts) * cap
+            valid_slots = [i * cap + j
+                           for i, c in enumerate(plan.token_counts)
+                           for j in range(c)]
+            print(f"[serve] hetero plan: slot shares {plan.token_counts} "
+                  f"({num_slots} padded slots), hidden {plan.hidden_splits}")
 
     pcfg = ParallelConfig(
         mode=args.mode, blk=16,
@@ -179,9 +518,19 @@ def main(argv=None):
         params = jax.tree.map(
             jax.device_put, params, tree_shardings(params, specs, pcfg, mesh)
         )
-    server = BatchedServer(cfg, pcfg, mesh, num_slots=num_slots,
-                           max_seq=args.max_seq, params=params,
-                           valid_slots=valid_slots)
+    if args.paged:
+        pages = args.pages or (
+            num_slots * cdiv(args.max_seq, args.page_size) // 2 + 1)
+        server = PagedServer(
+            cfg, pcfg, mesh, num_slots=num_slots,
+            page_size=args.page_size, num_pages=pages,
+            max_pages_per_slot=cdiv(args.max_seq, args.page_size),
+            params=params, prefill_chunk=args.prefill_chunk, plan=plan,
+        )
+    else:
+        server = BatchedServer(cfg, pcfg, mesh, num_slots=num_slots,
+                               max_seq=args.max_seq, params=params,
+                               valid_slots=valid_slots)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         server.submit(Request(
@@ -200,6 +549,12 @@ def main(argv=None):
         print(f"[serve] measured decode step: median "
               f"{np.median(ts) * 1e3:.1f}ms p90 "
               f"{np.percentile(ts, 90) * 1e3:.1f}ms over {len(ts)} steps")
+    if args.paged:
+        st = server.stats()
+        print(f"[serve] page pool: {st['peak_in_use_pages']} peak pages "
+              f"({st['peak_in_use_bytes'] / 1024:.1f} KiB KV resident) of "
+              f"{st['num_pages'] - 1} allocatable; "
+              f"{st['total_allocs']} allocs, leak-free={st['free_pages'] == st['num_pages'] - 1}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     return done

@@ -161,10 +161,146 @@ def make_serve_step(cfg: ModelConfig, pcfg: ParallelConfig,
         logits, new_cache, _, _ = lm.forward(
             params, inputs, cfg, pcfg, mesh, mode="decode",
             cache=cache, x_spec=x_spec,
+            active=inputs.get("active"),
         )
         return logits, new_cache
 
     return serve_step
+
+
+def make_paged_serve_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                          mesh: Optional[Mesh], batch_shape3,
+                          page_size: int):
+    """Continuous-batching decode macro-step over the paged KV cache
+    (DESIGN.md §7). ``inputs`` carries the scheduler's per-step view:
+    tokens (B, 1), page_table (B, maxp) int32, active (B,) bool."""
+    x_spec = activation_spec(batch_shape3, pcfg, mesh)
+
+    def serve_step(params, inputs, cache):
+        logits, new_cache, _, _ = lm.forward(
+            params, {"tokens": inputs["tokens"]}, cfg, pcfg, mesh,
+            mode="decode", cache=cache, x_spec=x_spec,
+            paged={"table": inputs["page_table"], "page_size": page_size},
+            active=inputs["active"],
+        )
+        return logits, new_cache
+
+    return serve_step
+
+
+def make_paged_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                            mesh: Optional[Mesh], page_size: int):
+    """Chunked prefill into the paged cache (DESIGN.md §7): one request's
+    next ``chunk`` prompt tokens advance between decode macro-steps.
+    Returns the logits at the last valid token — after the final chunk
+    these are the request's first-generated-token logits, exactly what a
+    batch-1 dense prefill would have produced.
+
+    Two implementations behind one signature
+    ``(params, tokens (chunk,), n_valid (), slot (), table_row (maxp,),
+    cache) -> (last_logits (V,), cache)``; short final chunks pad and mask:
+
+      * all-attention stacks: ONE batch-1 forward over the whole chunk
+        (``mode="prefill"`` + ``paged`` — the chunk-extension attention in
+        ``models.transformer``), the production chunked-prefill shape;
+      * stacks with recurrent mixers (mamba/xlstm): a ``lax.scan`` of
+        single-token decode forwards — those states only advance
+        token-wise mid-stream, so the chunk is a scheduling unit, not a
+        compute one.
+    """
+    if all(cfg.layer_kind(p) == "attn" for p in range(cfg.period)):
+        return _make_paged_prefill_chunk(cfg, pcfg, mesh, page_size)
+    return _make_paged_prefill_scan(cfg, pcfg, mesh, page_size)
+
+
+def _make_paged_prefill_chunk(cfg: ModelConfig, pcfg: ParallelConfig,
+                              mesh: Optional[Mesh], page_size: int):
+    x_spec = activation_spec((1, 1, cfg.d_model), pcfg, mesh)
+
+    def prefill_step(params, tokens, n_valid, slot, table_row, cache):
+        chunk = tokens.shape[0]
+        # every layer is attention, so the whole layer cache is the shared
+        # (batch-free) page pools — only the length is per-slot
+        sub = {
+            "layers": cache["layers"],
+            "len": jax.lax.dynamic_slice(cache["len"], (slot,), (1,)),
+        }
+        active = (jnp.arange(chunk) < n_valid)[None]       # (1, chunk)
+        hidden, sub, _, _ = lm.forward(
+            params, {"tokens": tokens[None]}, cfg, pcfg, mesh,
+            mode="prefill", cache=sub, x_spec=x_spec,
+            paged={"table": table_row[None], "page_size": page_size},
+            active=active, return_hidden=True,
+        )
+        last_h = jax.lax.dynamic_slice_in_dim(hidden, n_valid - 1, 1, axis=1)
+        logits = lm._logits_out(params, last_h, cfg)
+        new_len = jax.lax.dynamic_update_slice(
+            cache["len"], sub["len"], (slot,))
+        return (logits.reshape(-1).astype(jnp.float32),
+                {"layers": sub["layers"], "len": new_len})
+
+    return prefill_step
+
+
+def _make_paged_prefill_scan(cfg: ModelConfig, pcfg: ParallelConfig,
+                             mesh: Optional[Mesh], page_size: int):
+    x_spec = activation_spec((1, 1, cfg.d_model), pcfg, mesh)
+    period = cfg.period
+    is_attn = [cfg.layer_kind(p) == "attn" for p in range(period)]
+
+    def prefill_step(params, tokens, n_valid, slot, table_row, cache):
+        def take_slot(tree):
+            return jax.tree.map(
+                lambda v: jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=1),
+                tree,
+            )
+
+        sub_layers = [
+            cache["layers"][p] if is_attn[p]
+            else take_slot(cache["layers"][p])
+            for p in range(period)
+        ]
+        sub = {
+            "layers": sub_layers,
+            "len": jax.lax.dynamic_slice(cache["len"], (slot,), (1,)),
+        }
+
+        def body(carry, xs):
+            sc, last = carry
+            tok, t = xs
+            act = (t < n_valid)[None]
+            logits, sc, _, _ = lm.forward(
+                params, {"tokens": tok.reshape(1, 1)}, cfg, pcfg, mesh,
+                mode="decode", cache=sc, x_spec=x_spec,
+                paged={"table": table_row[None], "page_size": page_size},
+                active=act,
+            )
+            last = jnp.where(act[0], logits.reshape(-1), last)
+            return (sc, last), None
+
+        chunk = tokens.shape[0]
+        last0 = jnp.zeros((cfg.vocab_size,), jnp.float32)
+        (sub, last), _ = jax.lax.scan(
+            body, (sub, last0), (tokens, jnp.arange(chunk))
+        )
+
+        new_layers = []
+        for p in range(period):
+            if is_attn[p]:
+                new_layers.append(sub["layers"][p])
+            else:
+                new_layers.append(jax.tree.map(
+                    lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                        full, part, slot, axis=1
+                    ),
+                    cache["layers"][p], sub["layers"][p],
+                ))
+        new_len = jax.lax.dynamic_update_slice(
+            cache["len"], sub["len"], (slot,)
+        )
+        return last, {"layers": new_layers, "len": new_len}
+
+    return prefill_step
 
 
 def sharded_params(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Mesh):

@@ -220,6 +220,119 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# paged serving cache (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def paged_cache_spec(
+    cfg: ModelConfig,
+    num_slots: int,
+    num_pages: int,
+    page_size: int,
+) -> dict:
+    """Abstract paged decode cache for serving (DESIGN.md §7).
+
+    Attention layers trade the dense per-slot ``(num_slots, max_seq)``
+    rectangle for a SHARED pool of ``num_pages`` fixed-size pages per
+    period position: ``(n_periods, num_pages, page_size, Hkv, hd)``.
+    Which slot owns which page lives host-side in the scheduler's page
+    table, passed to the decode step as an input each macro-step —
+    physical page 0 is reserved as the write sink for inactive slots and
+    is never allocated. Windowed layers store full positions too (the
+    window is masked at read; a rolling buffer would break page identity).
+
+    Recurrent mixers (mamba/xlstm) keep their per-slot constant-size state
+    exactly as in ``cache_spec`` — there is nothing to page.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    period = cfg.period
+    n_periods = cfg.num_layers // period
+    pool = jax.ShapeDtypeStruct(
+        (n_periods, num_pages, page_size, cfg.num_kv_heads, cfg.hd), dtype
+    )
+    layers = []
+    for pos in range(period):
+        kind = cfg.layer_kind(pos)
+        if kind == "attn":
+            layers.append({"k": pool, "v": pool})
+            continue
+        if kind == "mamba":
+            spec = mamba.cache_spec_mamba(cfg, num_slots, dtype)
+        elif kind == "mlstm":
+            spec = xlstm.cache_spec_mlstm(cfg, num_slots, dtype)
+        else:  # slstm
+            spec = xlstm.cache_spec_slstm(cfg, num_slots)
+        layers.append(
+            jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (n_periods,) + s.shape, s.dtype
+                ),
+                spec,
+            )
+        )
+    return {
+        "layers": layers,
+        "len": jax.ShapeDtypeStruct((num_slots,), jnp.int32),
+    }
+
+
+def paged_cache_logical_specs(cfg: ModelConfig, cache: dict) -> dict:
+    """Logical partition specs for the paged cache tree: the shared page
+    pool shards its PAGE dim over "dp" so the pool's bytes spread across
+    data ranks; per-slot recurrent state and lengths shard the slot dim.
+
+    Note the allocator (``parallel.cache.PagePool``) treats physical pages
+    as fungible — a hetero group's share is a COUNT, not a contiguous page
+    range, so on a real mesh a slot's pages land on arbitrary ranks and
+    the page-wise gather crosses devices. Rank-local (range-partitioned)
+    allocation is the natural next step for multi-host serving."""
+    layers = []
+    for pos in range(cfg.period):
+        kind = cfg.layer_kind(pos)
+        if kind == "attn":
+            spec = {"k": (None, "dp", None, None, None),
+                    "v": (None, "dp", None, None, None)}
+        elif kind == "mamba":
+            spec = {"conv": (None, "dp", None, "tp"),
+                    "ssm": (None, "dp", "tp", None)}
+        elif kind == "mlstm":
+            spec = {"c": (None, "dp", None, None, None),
+                    "n": (None, "dp", None, None),
+                    "m": (None, "dp", None),
+                    "conv": (None, "dp", None, "tp")}
+        else:  # slstm
+            spec = {k: (None, "dp", None, None) for k in ("c", "n", "h", "m")}
+        layers.append(spec)
+    return {"layers": layers, "len": ("dp",)}
+
+
+def init_paged_cache(
+    cfg: ModelConfig,
+    num_slots: int,
+    num_pages: int,
+    page_size: int,
+) -> dict:
+    spec = paged_cache_spec(cfg, num_slots, num_pages, page_size)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def reset_slot(cfg: ModelConfig, cache: dict, slot: int) -> dict:
+    """Zero one slot's length and recurrent state so a new request can
+    reuse it (continuous-batching slot refill). K/V needs no scrub: the
+    dense buffer and freshly-granted pages are both masked by ``len``."""
+    layers = []
+    for pos in range(cfg.period):
+        tree = cache["layers"][pos]
+        if cfg.layer_kind(pos) == "attn":
+            layers.append(tree)
+        else:
+            layers.append(jax.tree.map(
+                lambda v: v.at[:, slot].set(jnp.zeros_like(v[:, slot])),
+                tree,
+            ))
+    return {"layers": layers, "len": cache["len"].at[slot].set(0)}
+
+
+# ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
 
@@ -234,6 +347,19 @@ def apply_block(p, x, ctx: Ctx, pos: int, cache, ffn_gathered=None):
         out, new_cache = xlstm.apply_mlstm(p["mixer"], h, ctx, cache)
     else:
         out, new_cache = xlstm.apply_slstm(p["mixer"], h, ctx, cache)
+    if (ctx.decode_active is not None and ctx.mode == "decode"
+            and kind != "attn"
+            and cache is not None and new_cache is not None):
+        # Continuous-batching macro-step: inactive slots freeze their
+        # recurrent state (attention handles itself via the sink page /
+        # masked rolling-buffer write).
+        act = ctx.decode_active
+        new_cache = jax.tree.map(
+            lambda n, o: jnp.where(
+                act.reshape((-1,) + (1,) * (n.ndim - 1)), n, o
+            ),
+            new_cache, cache,
+        )
     x = x + out
     if "xattn" in p:
         x = x + tfm.apply_cross_attention(
@@ -421,10 +547,23 @@ def forward(
     x_spec: P = P(None, None, None),
     rng: Optional[jax.Array] = None,
     return_hidden: bool = False,
+    paged: Optional[dict] = None,
+    active: Optional[jax.Array] = None,
 ):
     """Returns (logits, new_cache, aux_loss, z_loss). With
     ``return_hidden`` the first element is the final normed hidden states
-    instead (callers compute chunked logits/loss themselves)."""
+    instead (callers compute chunked logits/loss themselves).
+
+    ``paged`` (decode only, DESIGN.md §7): ``{"table": (B, maxp) int32,
+    "page_size": int}`` switches the KV write/read to the shared page pool
+    of ``init_paged_cache``.
+
+    ``active`` (decode only): (B,) bool continuous-batching mask. Inactive
+    slots write nothing (paged: redirected to the sink page; dense: the
+    rolling-buffer row is restored), freeze their recurrent state, and do
+    not advance their length — the shape-stable macro-step both serving
+    drivers batch around.
+    """
     dtype = jnp.dtype(cfg.dtype)
     x = _embed_in(params, inputs, cfg, dtype)
     b, s, _ = x.shape
@@ -432,9 +571,17 @@ def forward(
     if mode == "decode":
         cache_len = cache["len"]
         positions = cache_len[:, None]
+    elif mode == "prefill" and paged is not None:
+        # chunk-extension prefill: this chunk continues from the tokens
+        # already resident in the slot's pages
+        cache_len = cache["len"]
+        positions = cache_len[:, None] + jnp.arange(s)[None]
     else:
         cache_len = None
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if (paged is not None or active is not None) and mode not in (
+            "decode", "prefill"):
+        raise ValueError("paged cache / active mask are serving-side only")
 
     ctx = Ctx(
         cfg=cfg,
@@ -446,6 +593,8 @@ def forward(
         x_spec=x_spec,
         rng=rng,
         cond=inputs.get("cond"),
+        paged=paged,
+        decode_active=active,
     )
     x = constrain(x, (("dp",), "sp", None), pcfg, mesh)
     cache_layers = None if cache is None else cache["layers"]
@@ -463,10 +612,16 @@ def forward(
 
     new_cache = None
     if cache is not None:
-        new_len = (
-            cache["len"] + s if mode == "decode"
-            else jnp.full((b,), s, jnp.int32)
-        )
+        if mode == "decode" and active is not None:
+            new_len = cache["len"] + active.astype(jnp.int32)
+        elif mode == "decode":
+            new_len = cache["len"] + s
+        elif mode == "prefill" and paged is not None:
+            adv = (jnp.full((b,), s, jnp.int32) if active is None
+                   else active.astype(jnp.int32).sum(axis=1))
+            new_len = cache["len"] + adv
+        else:
+            new_len = jnp.full((b,), s, jnp.int32)
         new_cache = {"layers": new_cache_layers, "len": new_len}
     n_moe = max(sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers)), 1)
     return logits, new_cache, aux / n_moe, z / n_moe

@@ -40,6 +40,10 @@ class Ctx:
     rng: Optional[jax.Array] = None
     cond: Optional[jax.Array] = None  # cross-attention memory (B, T, Dc)
     layer_idx: Optional[int] = None   # period position (auto-mode plan key)
+    paged: Optional[dict] = None      # paged-KV decode (DESIGN.md §7):
+    #   {"table": (B, maxp) i32, "page_size": int}
+    decode_active: Optional[jax.Array] = None  # (B,) continuous-batching
+    #   mask: inactive slots write nothing, freeze state, don't advance
 
     @property
     def dtype(self):
@@ -304,22 +308,117 @@ def apply_attention(
         k = attn_lib.rope(k, ctx.positions, cfg.rope_theta)
 
     new_cache = cache
-    if ctx.mode == "decode":
+    if ctx.mode == "prefill" and ctx.paged is not None:
+        # Paged chunk-extension prefill (DESIGN.md §7): the chunk's s rows
+        # are scattered into the slot's granted pages (invalid tail rows of
+        # a short final chunk go to the sink), and the chunk attends
+        # causally over the gathered logical view — prior chunks of the
+        # same prompt plus the intra-chunk triangle. ctx.positions already
+        # carries the absolute offsets (cache_len + arange), so RoPE and
+        # the window mask line up with decode exactly.
+        from repro.kernels.paged_attention import NEG_INF
+
+        page = int(ctx.paged["page_size"])
+        table = ctx.paged["table"]                 # (B, maxp)
+        active = ctx.decode_active                 # (B, S) valid positions
+        if active is None:
+            active = jnp.ones((b, s), bool)
+        pos_abs = ctx.cache_len[:, None] + jnp.arange(s)[None]   # (B, S)
+        rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s))
+        phys = jnp.where(
+            active, table[rows, (pos_abs // page).astype(jnp.int32)], 0
+        ).astype(jnp.int32)
+        off = (pos_abs % page).astype(jnp.int32)
+        k_pool = cache["k"].at[phys.reshape(-1), off.reshape(-1)].set(
+            k.reshape(b * s, hkv, hd).astype(cache["k"].dtype))
+        v_pool = cache["v"].at[phys.reshape(-1), off.reshape(-1)].set(
+            v.reshape(b * s, hkv, hd).astype(cache["v"].dtype))
+        new_cache = {"k": k_pool, "v": v_pool}
+
+        maxp = table.shape[1]
+        s_all = maxp * page
+        kv_view = k_pool[table].reshape(b, s_all, hkv, hd)
+        vv_view = v_pool[table].reshape(b, s_all, hkv, hd)
+        g = hq // hkv
+        qg = q.reshape(b, s, hkv, g, hd)
+        logits = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", qg, kv_view,
+            preferred_element_type=jnp.float32,
+        ) * (hd ** -0.5)
+        if cfg.logit_softcap:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        kpos = jnp.arange(s_all)[None, None]               # (1, 1, S_all)
+        allowed = kpos <= pos_abs[:, :, None]              # causal, absolute
+        if window is not None:
+            allowed &= kpos > pos_abs[:, :, None] - window
+        logits = jnp.where(allowed[:, :, None, None, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum(
+            "bqhgk,bkhd->bqhgd", probs.astype(vv_view.dtype), vv_view,
+            preferred_element_type=jnp.float32,
+        ).reshape(b, s, hq, hd).astype(q.dtype)
+    elif ctx.mode == "decode" and ctx.paged is not None:
+        # Paged-KV decode (DESIGN.md §7): the new token's K/V row goes to
+        # page ``table[slot, len // page]`` at offset ``len % page``;
+        # inactive slots are redirected to the reserved sink page 0 and do
+        # not advance. The read gathers K/V page-wise through the table
+        # (kernels.paged_attention), window masked by absolute position —
+        # paged storage never rolls, unlike the dense windowed buffer.
+        from repro.kernels.paged_attention import paged_attention
+
+        assert cache is not None and s == 1
+        page = int(ctx.paged["page_size"])
+        table = ctx.paged["table"]
+        active = ctx.decode_active
+        if active is None:
+            active = jnp.ones((b,), bool)
+        length = ctx.cache_len                     # (B,) before this token
+        logical = (length // page).astype(jnp.int32)
+        off = (length % page).astype(jnp.int32)
+        phys = jnp.where(
+            active, table[jnp.arange(b), logical], 0
+        ).astype(jnp.int32)
+        k_pool = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+        v_pool = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": k_pool, "v": v_pool}
+        lengths = length + active.astype(jnp.int32)
+        out = paged_attention(
+            q, k_pool, v_pool, table, lengths,
+            window=window,
+            softcap=cfg.logit_softcap,
+            impl=ctx.pcfg.impl,
+        )
+    elif ctx.mode == "decode":
         assert cache is not None and s == 1
         s_cache = cache["k"].shape[1]
         slot = (ctx.cache_len % s_cache).astype(jnp.int32)  # rolling (window)
+        adv = (jnp.ones((b,), jnp.int32) if ctx.decode_active is None
+               else ctx.decode_active.astype(jnp.int32))
 
         def write(buf, new):
+            if ctx.decode_active is not None:
+                # Continuous batching: an inactive slot must not clobber its
+                # rolling-buffer row (for a full window buffer, position
+                # len % s_cache still holds the OLDEST readable token) —
+                # write back the existing row instead.
+                old = jax.vmap(
+                    lambda bb, ss: jax.lax.dynamic_slice(
+                        bb, (ss, 0, 0), (1,) + bb.shape[1:]
+                    )
+                )(buf, slot)
+                new = jnp.where(
+                    ctx.decode_active[:, None, None, None], new, old
+                )
             return jax.vmap(
                 lambda bb, nn, ss: jax.lax.dynamic_update_slice(
                     bb, nn, (ss, 0, 0)
                 )
             )(buf, new, slot)
 
-        k_cache = write(cache["k"], k)
-        v_cache = write(cache["v"], v)
+        k_cache = write(cache["k"], k.astype(cache["k"].dtype))
+        v_cache = write(cache["v"], v.astype(cache["v"].dtype))
         new_cache = {"k": k_cache, "v": v_cache}
-        valid = jnp.minimum(ctx.cache_len + 1, s_cache)
+        valid = jnp.minimum(ctx.cache_len + adv, s_cache)
         out = attn_lib.decode_attention(
             q, k_cache, v_cache, valid, softcap=cfg.logit_softcap
         )

@@ -250,6 +250,71 @@ def crossover_tokens(
 
 
 # ---------------------------------------------------------------------------
+# serving decode-attention pricing (paged vs dense KV, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def decode_attn_bytes(
+    kind: str,
+    *,
+    num_slots: int,
+    max_seq: int,
+    hq: int,
+    hkv: int,
+    hd: int,
+    lengths: Optional[Sequence[int]] = None,
+    page: int = 16,
+    itemsize: int = 2,
+) -> int:
+    """HBM bytes of ONE decode-attention macro-step under each cache layout.
+
+    "dense": the kernel reads the whole up-front ``(num_slots, max_seq)``
+    K/V rectangle every step — the workload-independent term the paged
+    engine exists to kill.
+    "paged": only the pages holding live tokens move
+    (``kernels.paged_attention.paged_attn_cost``); an idle slot costs its
+    query row, a short sequence its own pages. There is NO
+    ``num_slots * max_seq`` term, which ``tests/test_paged_attention.py``
+    pins.
+    """
+    from repro.kernels.paged_attention import paged_attn_cost
+
+    if kind == "dense":
+        q_bytes = 2 * num_slots * hq * hd * itemsize        # q in + out
+        kv_bytes = 2 * num_slots * max_seq * hkv * hd * itemsize
+        return int(q_bytes + kv_bytes)
+    if kind == "paged":
+        lens = ([max_seq] * num_slots if lengths is None
+                else [min(int(l), max_seq) for l in lengths])
+        return int(paged_attn_cost(lens, page, hq, hkv, hd, itemsize)
+                   ["bytes_accessed"])
+    raise ValueError(kind)
+
+
+def serve_decode_attn_latency(
+    kind: str,
+    *,
+    num_slots: int,
+    max_seq: int,
+    hq: int,
+    hkv: int,
+    hd: int,
+    lengths: Optional[Sequence[int]] = None,
+    page: int = 16,
+    itemsize: int = 2,
+    hw: HardwareProfile = V5E,
+) -> float:
+    """Roofline latency of one decode-attention macro-step: decode
+    attention does O(1) FLOPs per byte, so the HBM term is the whole bill.
+    This is the cost-model entry that lets the serving driver (and
+    ``benchmarks/serve_bench.py``) price the paged kernel against the
+    dense layout for an actual mix of sequence lengths."""
+    return decode_attn_bytes(
+        kind, num_slots=num_slots, max_seq=max_seq, hq=hq, hkv=hkv, hd=hd,
+        lengths=lengths, page=page, itemsize=itemsize,
+    ) / hw.hbm_bw
+
+
+# ---------------------------------------------------------------------------
 # runtime hooks (called from moe_parallel / lm with static shapes)
 # ---------------------------------------------------------------------------
 

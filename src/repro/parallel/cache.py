@@ -28,7 +28,7 @@ then skips the island-internal fsdp gather and adjusts its in_specs.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Hashable
+from typing import Any, Callable, Dict, Hashable, Optional, Sequence
 
 from repro.common import tree_bytes  # noqa: F401  (re-exported: cache API)
 
@@ -166,6 +166,162 @@ def gather_ffn_params(ffn: dict, cfg, mesh) -> dict:
             continue
         out[name] = constrain(v, _drop_fsdp(logical), cfg, mesh)
     return out
+
+
+# ---------------------------------------------------------------------------
+# serving page pool (paged KV cache residency, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+class PagePool:
+    """Host-side free-list allocator + residency accounting over the shared
+    KV page pool of ``models.lm.init_paged_cache`` (DESIGN.md §7).
+
+    Physical page 0 is the write sink for inactive slots and is never
+    allocated; ``num_pages - 1`` pages are allocatable. The scheduler's
+    admission invariant is two-phase:
+
+      * ``try_reserve(n, group)`` at admission — the request's WORST-CASE
+        page count is debited from the (group's) free budget up front, so
+        preemption-free decode can never hit an empty pool mid-request;
+      * ``alloc(group)`` converts one reserved page into a physical page id
+        (a chunk's worth at prefill, on demand at decode page boundaries);
+      * ``release(pages, group, unused_reserved)`` returns everything at
+        completion.
+
+    Heterogeneous plans (DESIGN.md §6) express per-device capacity as
+    per-group page-pool ``shares`` instead of masked tail slots: physical
+    pages stay fungible in one free list, but each group's
+    reserve/alloc/release is budgeted against its own share.
+
+    Per-group invariant, checked by ``assert_consistent``:
+    ``free + reserved_unallocated + in_use == share``.
+    """
+
+    def __init__(self, num_pages: int, *, page_bytes: int = 0,
+                 shares: Optional[Sequence[int]] = None):
+        if num_pages < 2:
+            raise ValueError("need at least one allocatable page + the sink")
+        usable = num_pages - 1
+        self.num_pages = num_pages
+        self.page_bytes = page_bytes
+        self.shares = list(shares) if shares is not None else [usable]
+        if any(s < 0 for s in self.shares):
+            raise ValueError(f"negative page share: {self.shares}")
+        if sum(self.shares) > usable:
+            raise ValueError(
+                f"shares {self.shares} exceed {usable} allocatable pages"
+            )
+        self._free_list = list(range(num_pages - 1, 0, -1))
+        g = len(self.shares)
+        self._free = list(self.shares)
+        self._reserved = [0] * g
+        self._in_use = [0] * g
+        self.total_allocs = 0
+        self.total_frees = 0
+        self.peak_in_use_pages = 0
+
+    # -- admission / allocation ---------------------------------------------
+
+    def try_reserve(self, n: int, group: int = 0) -> bool:
+        """Debit ``n`` worst-case pages from ``group``'s budget (admission
+        by free-page budget). False leaves the pool untouched."""
+        if n < 0:
+            raise ValueError(n)
+        if self._free[group] < n:
+            return False
+        self._free[group] -= n
+        self._reserved[group] += n
+        return True
+
+    def alloc(self, group: int = 0) -> int:
+        """Turn one reserved page into a physical page id (>= 1)."""
+        if self._reserved[group] <= 0:
+            raise RuntimeError(
+                f"group {group} allocating beyond its reservation"
+            )
+        self._reserved[group] -= 1
+        self._in_use[group] += 1
+        self.total_allocs += 1
+        page = self._free_list.pop()
+        self.peak_in_use_pages = max(self.peak_in_use_pages,
+                                     self.in_use_pages)
+        return page
+
+    def release(self, pages: Sequence[int], group: int = 0,
+                unused_reserved: int = 0) -> None:
+        """Return a finished request's physical pages and any reservation
+        it never converted."""
+        for p in pages:
+            if not 1 <= p < self.num_pages:
+                raise ValueError(f"bad page id {p}")
+            self._free_list.append(p)
+        self._in_use[group] -= len(pages)
+        self._reserved[group] -= unused_reserved
+        self._free[group] += len(pages) + unused_reserved
+        self.total_frees += len(pages)
+        if self._in_use[group] < 0 or self._reserved[group] < 0:
+            raise RuntimeError(f"group {group} over-released")
+
+    # -- accounting -----------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return sum(self._free)
+
+    @property
+    def in_use_pages(self) -> int:
+        return sum(self._in_use)
+
+    @property
+    def reserved_pages(self) -> int:
+        return sum(self._reserved)
+
+    def group_free(self, group: int) -> int:
+        return self._free[group]
+
+    def reset_peak(self) -> None:
+        """Restart peak tracking from the current residency (benchmarks
+        call this after their warm-up workload)."""
+        self.peak_in_use_pages = self.in_use_pages
+
+    def assert_consistent(self) -> None:
+        for g, share in enumerate(self.shares):
+            total = self._free[g] + self._reserved[g] + self._in_use[g]
+            assert total == share, (g, self._free[g], self._reserved[g],
+                                    self._in_use[g], share)
+        assert len(self._free_list) == (self.num_pages - 1
+                                        - self.in_use_pages)
+        assert len(set(self._free_list)) == len(self._free_list)
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "num_pages": self.num_pages,
+            "page_bytes": self.page_bytes,
+            "free_pages": self.free_pages,
+            "in_use_pages": self.in_use_pages,
+            "reserved_pages": self.reserved_pages,
+            "peak_in_use_pages": self.peak_in_use_pages,
+            "peak_in_use_bytes": self.peak_in_use_pages * self.page_bytes,
+            "total_allocs": self.total_allocs,
+            "total_frees": self.total_frees,
+        }
+
+
+def page_shares(weights: Sequence[float], usable_pages: int) -> list[int]:
+    """Largest-remainder split of the allocatable pages proportional to
+    ``weights`` (a hetero plan's Eq. 1 ``token_counts``): the per-device
+    page-pool shares that replace masked tail slots (DESIGN.md §7)."""
+    import numpy as np
+
+    w = np.asarray(weights, dtype=np.float64)
+    if np.any(w < 0) or w.sum() <= 0:
+        raise ValueError(f"bad share weights {weights}")
+    raw = w / w.sum() * usable_pages
+    base = np.floor(raw).astype(np.int64)
+    order = np.argsort(-(raw - base))
+    base[order[: usable_pages - int(base.sum())]] += 1
+    assert base.sum() == usable_pages
+    return [int(v) for v in base]
 
 
 def gathered_layer_bytes(d: int, f: int, e: int, *, glu: bool = True,

@@ -1,0 +1,127 @@
+"""Checkpoint manager: save -> wait -> restore round-trips, gc_old keep
+boundaries, and AsyncSaver failure propagation — the guarantees a serving
+warm-restart leans on (ISSUE 4 satellite)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (4, 8), jnp.float32),
+        "moments": {
+            "bf16": jax.random.normal(k, (3, 5)).astype(jnp.bfloat16),
+            "step": jnp.asarray(7, jnp.int32),
+        },
+        "list": [jnp.arange(6), jnp.ones((2,), jnp.float32)],
+    }
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert la.dtype == lb.dtype
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_sync_roundtrip(tmp_path):
+    tree = _tree()
+    path = manager.save(str(tmp_path), 3, tree, meta={"tag": "x"})
+    assert path.endswith("step_00000003")
+    assert manager.latest_step(str(tmp_path)) == 3
+    restored, meta = manager.restore(str(tmp_path), 3, tree)
+    assert meta == {"tag": "x"}
+    _assert_trees_equal(tree, restored)
+
+
+def test_async_save_wait_restore_roundtrip(tmp_path):
+    """The serving warm-restart sequence: save_async -> wait -> restore."""
+    saver = manager.AsyncSaver()
+    tree = _tree(1)
+    saver.save(str(tmp_path), 10, tree, meta={"k": 1})
+    saver.wait()
+    assert saver.last_path is not None and saver.last_path.endswith(
+        "step_00000010")
+    # a second save waits for the first and supersedes it
+    tree2 = _tree(2)
+    saver.save(str(tmp_path), 11, tree2)
+    saver.wait()
+    assert manager.latest_step(str(tmp_path)) == 11
+    restored, _ = manager.restore(str(tmp_path), 11, tree2)
+    _assert_trees_equal(tree2, restored)
+    # the earlier checkpoint is still intact (no cross-step clobbering)
+    restored10, meta10 = manager.restore(str(tmp_path), 10, tree)
+    assert meta10 == {"k": 1}
+    _assert_trees_equal(tree, restored10)
+
+
+def test_async_failure_propagates_on_wait(tmp_path):
+    """A failed background write must surface, not leave last_path stale
+    while the trainer keeps gc'ing good checkpoints."""
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("occupied")
+    saver = manager.AsyncSaver()
+    # target "directory" is a regular file -> the background mkdir fails
+    saver.save(str(blocker), 1, _tree())
+    with pytest.raises(OSError):
+        saver.wait()
+    # the error is consumed: the saver is reusable afterwards
+    saver.save(str(tmp_path), 2, _tree())
+    saver.wait()
+    assert manager.latest_step(str(tmp_path)) == 2
+
+
+def test_latest_step_ignores_tmp(tmp_path):
+    manager.save(str(tmp_path), 1, _tree())
+    os.makedirs(tmp_path / "step_00000099.tmp")
+    assert manager.latest_step(str(tmp_path)) == 1
+
+
+def test_gc_old_keep_boundary(tmp_path):
+    tree = {"x": jnp.arange(3)}
+    for step in (1, 2, 5, 9):
+        manager.save(str(tmp_path), step, tree)
+    manager.gc_old(str(tmp_path), keep=2)
+    left = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert left == ["step_00000005", "step_00000009"]
+    # keep >= count: nothing deleted
+    manager.gc_old(str(tmp_path), keep=10)
+    assert len(os.listdir(tmp_path)) == 2
+    # keep=0 deletes everything (the old [:-0] slice kept everything)
+    manager.gc_old(str(tmp_path), keep=0)
+    assert [d for d in os.listdir(tmp_path) if d.startswith("step_")] == []
+    with pytest.raises(ValueError):
+        manager.gc_old(str(tmp_path), keep=-1)
+
+
+def test_gc_old_never_touches_tmp(tmp_path):
+    manager.save(str(tmp_path), 1, _tree())
+    manager.save(str(tmp_path), 2, _tree())
+    os.makedirs(tmp_path / "step_00000000.tmp")
+    manager.gc_old(str(tmp_path), keep=1)
+    left = sorted(os.listdir(tmp_path))
+    assert left == ["step_00000000.tmp", "step_00000002"]
+
+
+def test_restore_applies_dtype_views(tmp_path):
+    """bf16 leaves survive the uint16 npy view round-trip bit-exactly."""
+    tree = {"b": jnp.asarray([1.5, -2.25, 3.0], jnp.bfloat16)}
+    manager.save(str(tmp_path), 1, tree)
+    on_disk = np.load(tmp_path / "step_00000001" / "a_00000.npy")
+    assert on_disk.dtype == np.uint16  # stored as the view, not float
+    restored, _ = manager.restore(str(tmp_path), 1, tree)
+    _assert_trees_equal(tree, restored)
+
+
+def test_manifest_is_valid_json(tmp_path):
+    manager.save(str(tmp_path), 4, _tree(), meta={"note": "hi"})
+    with open(tmp_path / "step_00000004" / "manifest.json") as f:
+        m = json.load(f)
+    assert m["step"] == 4 and m["num_leaves"] == 5 and m["meta"] == {
+        "note": "hi"}

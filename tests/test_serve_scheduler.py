@@ -1,0 +1,242 @@
+"""Scheduler property tests (ISSUE 4): no page leaks after arbitrary
+admit/finish interleavings, FIFO admission without starvation, and batch
+invariance of a request's output stream.
+
+Each property body is a plain ``_check_*`` function: the hypothesis tests
+(skipped without the package, like the other property modules) drive it
+with drawn inputs, and the deterministic tests below drive it with pinned
+samples so the invariants stay executed on minimal CI environments."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.launch import serve, steps as steps_lib
+from repro.models import lm
+from repro.parallel.cache import PagePool, page_shares
+from repro.parallel.sharding import ParallelConfig, split_tree
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# --- tiny decode-capable model shared by every engine-level case ----------
+
+CFG = ModelConfig(
+    name="sched-smoke",
+    family="dense",
+    num_layers=1,
+    d_model=16,
+    num_heads=2,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=32,
+    vocab_size=32,
+    dtype="float32",
+)
+PCFG = ParallelConfig(blk=8)
+NUM_SLOTS, PAGE, MAXP = 3, 4, 8
+NUM_PAGES = 1 + NUM_SLOTS * MAXP
+
+_STATE: dict = {}
+
+
+def _shared():
+    """Params + jitted steps built once: every server instance reuses the
+    same compiled macro-step (identical shapes), so hypothesis examples
+    don't pay a retrace each."""
+    if not _STATE:
+        params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), CFG))
+        _STATE["params"] = params
+        _STATE["serve_step"] = jax.jit(steps_lib.make_paged_serve_step(
+            CFG, PCFG, None, (NUM_SLOTS, 1, CFG.d_model), PAGE))
+        _STATE["prefill_step"] = jax.jit(steps_lib.make_paged_prefill_step(
+            CFG, PCFG, None, PAGE))
+        _STATE["ref_step"] = jax.jit(steps_lib.make_serve_step(
+            CFG, PCFG, None, (1, 1, CFG.d_model)))
+    return _STATE
+
+
+def _server(prefill_chunk=4):
+    s = _shared()
+    srv = serve.PagedServer(
+        CFG, PCFG, None, num_slots=NUM_SLOTS, page_size=PAGE,
+        num_pages=NUM_PAGES, max_pages_per_slot=MAXP,
+        params=s["params"], prefill_chunk=prefill_chunk,
+    )
+    srv.serve_step = s["serve_step"]
+    srv.prefill_step = s["prefill_step"]
+    return srv
+
+
+def _mk_requests(spec):
+    """spec: list of (prompt_len, max_new) with deterministic contents."""
+    reqs = []
+    for i, (plen, max_new) in enumerate(spec):
+        prompt = (np.arange(plen) * 7 + i * 3) % CFG.vocab_size
+        reqs.append(serve.Request(rid=i, prompt=prompt.astype(np.int32),
+                                  max_new=max_new))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# property 1 — no page leaks under arbitrary admit/finish interleavings
+# ---------------------------------------------------------------------------
+
+def _check_pool_no_leak(num_pages, shares, ops):
+    """Drive a PagePool through an arbitrary interleaving of admissions
+    (reserve + partial alloc) and finishes; the pool must stay consistent
+    THROUGHOUT and the free count must return to its initial value."""
+    pool = PagePool(num_pages, page_bytes=128, shares=shares)
+    initial_free = pool.free_pages
+    live = []  # (group, need, pages)
+    for kind, a, b in ops:
+        if kind == "admit":
+            g = a % len(pool.shares)
+            need = 1 + b % 6
+            if pool.try_reserve(need, g):
+                n_alloc = b % (need + 1)
+                pages = [pool.alloc(g) for _ in range(n_alloc)]
+                live.append([g, need, pages])
+        elif kind == "grow" and live:
+            g, need, pages = live[a % len(live)]
+            if len(pages) < need:
+                pages.append(pool.alloc(g))
+        elif kind == "finish" and live:
+            g, need, pages = live.pop(a % len(live))
+            pool.release(pages, g, unused_reserved=need - len(pages))
+        pool.assert_consistent()
+        assert pool.in_use_pages <= num_pages - 1
+    while live:
+        g, need, pages = live.pop()
+        pool.release(pages, g, unused_reserved=need - len(pages))
+    pool.assert_consistent()
+    assert pool.free_pages == initial_free
+    assert pool.in_use_pages == 0 and pool.reserved_pages == 0
+
+
+OPS_SAMPLES = [
+    [("admit", 0, 5), ("admit", 1, 3), ("grow", 0, 0), ("finish", 0, 0),
+     ("admit", 0, 2), ("finish", 0, 0), ("finish", 0, 0)],
+    [("admit", 0, 6)] * 10 + [("finish", 0, 0)] * 10,
+    [("admit", 1, 4), ("grow", 0, 0), ("grow", 0, 0), ("grow", 0, 0),
+     ("admit", 0, 1), ("finish", 1, 0), ("finish", 0, 0)],
+]
+
+
+@pytest.mark.parametrize("ops", OPS_SAMPLES)
+@pytest.mark.parametrize("shares", [None, [10, 6], [15, 0, 1]])
+def test_pool_no_leak_samples(ops, shares):
+    _check_pool_no_leak(17, shares, ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(
+        st.tuples(st.sampled_from(["admit", "grow", "finish"]),
+                  st.integers(0, 7), st.integers(0, 7)),
+        max_size=60,
+    ), st.sampled_from([None, [10, 6], [4, 4, 4, 4]]))
+    def test_pool_no_leak_property(ops, shares):
+        _check_pool_no_leak(17, shares, ops)
+
+
+def test_pool_rejects_bad_inputs():
+    pool = PagePool(5, shares=[2, 2])
+    assert not pool.try_reserve(3, 0)           # beyond the group share
+    assert pool.try_reserve(2, 0)
+    with pytest.raises(RuntimeError):
+        [pool.alloc(1) for _ in range(1)]       # group 1 reserved nothing
+    with pytest.raises(ValueError):
+        PagePool(5, shares=[5])                 # shares exceed usable (4)
+    with pytest.raises(ValueError):
+        PagePool(1)
+    with pytest.raises(ValueError):
+        page_shares([0, 0], 4)
+    assert sum(page_shares([2, 1], 7)) == 7
+
+
+# ---------------------------------------------------------------------------
+# property 2 — engine-level: no leak + FIFO no-starvation
+# ---------------------------------------------------------------------------
+
+def _check_engine_fifo_and_leakfree(spec, prefill_chunk=4):
+    reqs = _mk_requests(spec)
+    srv = _server(prefill_chunk)
+    for r in reqs:
+        srv.submit(dataclasses.replace(r, out=[]))
+    done = srv.run()
+    # no starvation: every submitted request completes with its max_new
+    assert sorted(r.rid for r in done) == list(range(len(spec)))
+    for r in done:
+        assert len(r.out) == r.max_new
+    # FIFO: admission order is exactly submission order (head-of-line)
+    assert srv.admission_log == [r.rid for r in reqs]
+    # no leaks: pool drained back to initial, page table cleared
+    srv.pool.assert_consistent()
+    assert srv.pool.free_pages == NUM_PAGES - 1
+    assert srv.pool.in_use_pages == 0 and srv.pool.reserved_pages == 0
+    assert (srv.table == 0).all()
+    return {r.rid: r.out for r in done}
+
+
+ENGINE_SPECS = [
+    [(3, 2), (9, 4), (1, 1), (14, 3), (2, 5), (6, 1)],
+    [(29, 4), (1, 1), (1, 1), (1, 1)],       # long prompt at the head
+    [(4, 8)] * 7,                             # uniform churn > slots
+]
+
+
+@pytest.mark.parametrize("spec", ENGINE_SPECS)
+def test_engine_fifo_and_leakfree_samples(spec):
+    _check_engine_fifo_and_leakfree(spec)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 20), st.integers(1, 6)),
+                    min_size=1, max_size=7),
+           st.sampled_from([1, 4, 16]))
+    def test_engine_fifo_and_leakfree_property(spec, chunk):
+        # worst case must fit one slot's table and the pool share
+        cap = MAXP * PAGE
+        spec = [(p, min(m, cap - p + 1)) for p, m in spec]
+        _check_engine_fifo_and_leakfree(spec, prefill_chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# property 3 — a request's stream is invariant to its batch-mates
+# ---------------------------------------------------------------------------
+
+def _check_batch_invariance(spec, probe_idx):
+    probe = _mk_requests(spec)[probe_idx]
+
+    alone = _server()
+    alone.submit(dataclasses.replace(probe, out=[]))
+    solo_out = {r.rid: r.out for r in alone.run()}[probe.rid]
+
+    crowd = _server()
+    for r in _mk_requests(spec):
+        crowd.submit(dataclasses.replace(r, out=[]))
+    crowd_out = {r.rid: r.out for r in crowd.run()}[probe.rid]
+    assert crowd_out == solo_out, (
+        f"request {probe.rid} changed its stream when co-batched")
+
+
+@pytest.mark.parametrize("probe_idx", [0, 2, 4])
+def test_batch_invariance_samples(probe_idx):
+    _check_batch_invariance(
+        [(3, 3), (11, 2), (5, 4), (1, 5), (8, 2)], probe_idx)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 12), st.integers(1, 4)),
+                    min_size=2, max_size=6),
+           st.integers(0, 5))
+    def test_batch_invariance_property(spec, probe_idx):
+        _check_batch_invariance(spec, probe_idx % len(spec))
