@@ -19,14 +19,18 @@ docs-check:
 # paged-vs-dense comparison must carry both sides of every claim.
 bench-check:
 	$(PY) scripts/validate_bench.py BENCH_kernels.json BENCH_hetero.json \
-		BENCH_serve.json \
+		BENCH_serve.json BENCH_quant.json \
 		--require hetero_exec/data_centric/uniform \
 		--require hetero_exec/data_centric/proportional \
 		--require hetero_exec/model_centric/uniform \
 		--require hetero_exec/model_centric/proportional \
 		--require serve/paged/tokens_per_s \
 		--require serve/dense/tokens_per_s \
-		--lt serve/paged/kv_cache_bytes:serve/dense/kv_cache_bytes
+		--require quant/esffn/bytes \
+		--lt serve/paged/kv_cache_bytes:serve/dense/kv_cache_bytes \
+		--lt quant/esffn/bytes/int8:quant/esffn/bytes/bf16 \
+		--lt quant/crossover/tokens/int8:quant/crossover/tokens/bf16 \
+		--lt quant/kv/admitted/fp:quant/kv/admitted/int8
 
 ci:
 	bash scripts/ci.sh

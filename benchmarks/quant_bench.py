@@ -1,0 +1,124 @@
+"""Quantization benchmark (ISSUE 5, DESIGN.md §8) — emitted to
+``BENCH_quant.json`` via the per-suite routing in ``benchmarks/run.py``.
+
+Four claims, each carried as a machine-readable row pair so
+``scripts/validate_bench.py --lt`` can pin them in CI:
+
+  * ``quant/esffn/bytes/{int8,bf16}`` — the fused-FFN cost model's
+    ``bytes_accessed`` with int8 vs bf16 expert weights (the HBM bytes the
+    megakernel actually moves; int8 must be strictly below).
+  * ``quant/esffn/measured/{int8,f32}`` — measured blocked-path fused-FFN
+    latency with true int8 payloads vs dense weights (informational on
+    CPU, where the dequant is arithmetic, not bandwidth).
+  * ``quant/crossover/tokens/{int8,bf16}`` — the data-/model-centric
+    crossover token count under each weight width: int8 cheapens the
+    data-centric weight movement, so its crossover must sit at or below
+    bf16's (asserted).
+  * ``quant/kv/admitted/{int8,fp}`` — concurrent requests a PagePool of
+    EQUAL HBM bytes admits under int8 vs full-precision paged-KV pages
+    (int8 must admit strictly more).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_pair
+from repro import configs as cfglib
+from repro.core.reindex import build_reindex
+from repro.core.routing import route
+from repro.kernels import ops
+from repro.kernels.esffn import esffn_cost
+from repro.models import lm
+from repro.parallel import autotune
+from repro.parallel.cache import PagePool
+from repro.quant import core as qc
+
+
+def _esffn_rows(quick: bool):
+    n, d, f, e, k, blk = (256, 128, 256, 8, 2, 32) if quick else \
+        (1024, 512, 1024, 8, 2, 128)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    router = jnp.asarray(rng.normal(size=(d, e)), jnp.float32)
+    r = route(x, router, k)
+    ri = build_reindex(r.expert_idx, r.gates, e, blk)
+    wg, wu = (jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32)
+              for _ in range(2))
+    wd = jnp.asarray(rng.normal(size=(e, f, d)), jnp.float32)
+    (qg, sg), (qu, su), (qd, sd) = (qc.quantize_blockwise(w)
+                                    for w in (wg, wu, wd))
+
+    # cost-model bytes: what the Pallas megakernel declares it moves
+    nm = ri.block_expert.shape[0]
+    c16 = esffn_cost(ri.row_token.shape[0], d, f, nm, 2, glu=True,
+                     weight_bits=16)
+    c8 = esffn_cost(ri.row_token.shape[0], d, f, nm, 2, glu=True,
+                    weight_bits=8)
+    assert c8.bytes_accessed < c16.bytes_accessed
+    emit("quant/esffn/bytes/int8", float(c8.bytes_accessed),
+         f"cost-model HBM bytes, int8 weights (N={n} D={d} F={f} E={e})")
+    emit("quant/esffn/bytes/bf16", float(c16.bytes_accessed),
+         f"cost-model HBM bytes, bf16 weights "
+         f"({100 * c8.bytes_accessed / c16.bytes_accessed:.0f}% -> int8)")
+
+    def run_q():
+        return ops.esffn_glu(x, ri.row_token, ri.row_gate, ri.block_expert,
+                             ri.padded_counts, qg, qu, qd,
+                             scales=(sg, su, sd), impl="blocked")
+
+    def run_d():
+        return ops.esffn_glu(x, ri.row_token, ri.row_gate, ri.block_expert,
+                             ri.padded_counts, wg, wu, wd, impl="blocked")
+
+    us_q, us_d, ratio = time_pair(run_q, run_d)
+    emit("quant/esffn/measured/int8", us_q,
+         f"blocked fused FFN, int8 payloads ({ratio:.2f}x of dense; CPU "
+         "pays the dequant in arithmetic — the bytes win is the TPU story)")
+    emit("quant/esffn/measured/f32", us_d, "blocked fused FFN, dense f32")
+
+
+def _crossover_rows():
+    d, f, e, k, n_dev = 1024, 4096, 8, 2, 16
+    xo16 = autotune.crossover_tokens(d, f, e, k, n_dev=n_dev, weight_bits=16)
+    xo8 = autotune.crossover_tokens(d, f, e, k, n_dev=n_dev, weight_bits=8)
+    assert xo16 is not None and xo8 is not None and xo8 <= xo16, (xo8, xo16)
+    emit("quant/crossover/tokens/int8", float(xo8),
+         f"data-/model-centric crossover, int8 experts (d={d} f={f} e={e})")
+    emit("quant/crossover/tokens/bf16", float(xo16),
+         f"bf16 crossover — int8 pulls it {xo16 // max(xo8, 1)}x earlier")
+
+
+def _kv_capacity_rows():
+    cfg = dataclasses.replace(
+        cfglib.get_smoke_config("qwen3-moe-30b-a3b"), dtype="float32")
+    page = 8
+    pb_fp = lm.paged_kv_page_bytes(cfg, page, None)
+    pb_q = lm.paged_kv_page_bytes(cfg, page, "int8")
+    budget = 64 * pb_fp  # a fixed HBM budget for the KV pool
+    need = 6             # worst-case pages per representative request
+
+    def capacity(page_bytes):
+        pool = PagePool(1 + budget // page_bytes, page_bytes=page_bytes)
+        n = 0
+        while pool.try_reserve(need):
+            n += 1
+        return n
+
+    cap_fp, cap_q = capacity(pb_fp), capacity(pb_q)
+    assert cap_q > cap_fp, (cap_q, cap_fp)
+    emit("quant/kv/admitted/fp", float(cap_fp),
+         f"requests admitted at {budget} B KV budget, "
+         f"{pb_fp} B/page full precision")
+    emit("quant/kv/admitted/int8", float(cap_q),
+         f"same budget, {pb_q} B/page int8+scales -> "
+         f"{cap_q / max(cap_fp, 1):.1f}x admissions")
+
+
+def run(quick: bool = True):
+    _esffn_rows(quick)
+    _crossover_rows()
+    _kv_capacity_rows()

@@ -16,12 +16,14 @@ python -m pytest -x -q
 
 # Benchmark smoke: every paper-table module must at least run its quick grid
 # (JAX_PLATFORMS=cpu via the Makefile) and emit BENCH_kernels.json +
-# BENCH_hetero.json + BENCH_serve.json (the hetero suite runs the Eq. 1/2
-# uneven splits for real and asserts proportional <= uniform under simulated
-# skew; the serve suite runs the mixed-length workload through the dense and
-# paged drivers and asserts paged uses less peak KV cache with no tokens/s
-# regression), so the harness and the machine-readable perf trajectory
-# can't bit-rot.
+# BENCH_hetero.json + BENCH_serve.json + BENCH_quant.json (the hetero suite
+# runs the Eq. 1/2 uneven splits for real and asserts proportional <= uniform
+# under simulated skew; the serve suite runs the mixed-length workload
+# through the dense and paged drivers and asserts paged uses less peak KV
+# cache with no tokens/s regression; the quant suite asserts int8 fused-FFN
+# bytes < bf16, the crossover shift, and the equal-HBM paged-KV admission
+# gain), so the harness and the machine-readable perf trajectory can't
+# bit-rot.
 make bench
 
 # Validate the JSON files against the README-documented schema and pin the

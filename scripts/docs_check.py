@@ -5,10 +5,10 @@
    ``src/`` must resolve to a ``## §N`` heading in DESIGN.md (dangling
    section numbers fail).
 2. **Docstring audit** — every public module, class, and top-level function
-   in ``src/repro/parallel/`` and ``src/repro/runtime/`` must carry a
-   docstring; these are the layers whose contracts the paper sections /
-   DESIGN §§ define, so an undocumented public entry point is a review
-   failure, not a style nit.
+   in ``src/repro/parallel/``, ``src/repro/runtime/`` and
+   ``src/repro/quant/`` must carry a docstring; these are the layers
+   whose contracts the paper sections / DESIGN §§ define, so an
+   undocumented public entry point is a review failure, not a style nit.
 """
 from __future__ import annotations
 
@@ -18,7 +18,7 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-AUDITED_DIRS = ("src/repro/parallel", "src/repro/runtime")
+AUDITED_DIRS = ("src/repro/parallel", "src/repro/runtime", "src/repro/quant")
 
 
 def check_citations() -> list[str]:

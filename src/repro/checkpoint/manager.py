@@ -78,6 +78,11 @@ def _write(directory, step, host_leaves, treedef, meta) -> str:
             jax.tree_util.tree_unflatten(treedef, list(range(len(names))))
         ).__repr__(),
         "num_leaves": len(names),
+        # LOGICAL dtypes (pre-view): restore cross-checks these against the
+        # target structure so a mixed-dtype tree (int8 payloads + f32 scale
+        # leaves, DESIGN.md §8) can never silently load into the wrong
+        # leaf after a structural drift.
+        "dtypes": [str(np.asarray(l).dtype) for l in host_leaves],
         "meta": meta,
         "process_index": jax.process_index(),
     }
@@ -164,6 +169,25 @@ def restore(
         f"checkpoint has {manifest['num_leaves']} leaves, "
         f"target structure has {len(leaves)}"
     )
+    # Mixed-dtype round-trip guard: the manifest records every leaf's
+    # logical dtype; a target structure whose leaf dtypes disagree fails
+    # loudly BEFORE any array is materialised (a silent cast here would
+    # corrupt int8 payload / f32 scale pairs, DESIGN.md §8).
+    stored = manifest.get("dtypes")
+    if stored is not None:
+        # string compare: bfloat16/float8 dtype names are ml_dtypes
+        # extensions plain np.dtype() cannot parse
+        mismatched = [
+            f"leaf {i}: checkpoint {s} vs target {l.dtype}"
+            for i, (s, l) in enumerate(zip(stored, leaves))
+            if hasattr(l, "dtype") and s != str(l.dtype)
+        ]
+        if mismatched:
+            raise ValueError(
+                "checkpoint/target dtype mismatch:\n  "
+                + "\n  ".join(mismatched)
+            )
+
     def load_one(i, like):
         h = np.load(os.path.join(path, f"a_{i:05d}.npy"))
         want = np.dtype(like.dtype) if hasattr(like, "dtype") else None
@@ -171,7 +195,10 @@ def restore(
             h = h.view(want)  # undo the uint storage view
         assert tuple(h.shape) == tuple(np.shape(like)), (h.shape, like)
         if want is not None and h.dtype != want:
-            h = jax.numpy.asarray(h).astype(want)
+            raise ValueError(
+                f"leaf {i}: stored dtype {h.dtype} does not match target "
+                f"{want} (refusing a silent cast)"
+            )
         return h
 
     host = [load_one(i, l) for i, l in enumerate(leaves)]

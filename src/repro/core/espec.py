@@ -48,25 +48,32 @@ def moe_mlp(
     w2: jax.Array,
     b2: Optional[jax.Array],
     *,
+    scales=None,
     act: str = "gelu",
     impl: Optional[str] = None,
     fused: Optional[bool] = None,
 ) -> jax.Array:
-    """Paper-form 2-MLP expert FFN over a flat token batch x: (N, D)."""
+    """Paper-form 2-MLP expert FFN over a flat token batch x: (N, D).
+
+    ``scales``: (s1, s2) block-wise scales when w1/w2 are int8/fp8
+    payloads (DESIGN.md §8) — dequant fuses into the ES kernels."""
     impl = impl or ops.get_default_impl()
     if fused is None:
         fused = ops.default_fused_ffn(impl)
     if fused:
         ys = ops.esffn_mlp(
             x, ri.row_token, ri.row_gate, ri.block_expert, ri.padded_counts,
-            w1, b1, w2, b2, act=act, impl=impl,
+            w1, b1, w2, b2, scales=scales, act=act, impl=impl,
         )
         return scatter_rows(ys, ri.row_token, x.shape[0])
     f = ACTIVATIONS[act]
+    s1, s2 = scales if scales is not None else (None, None)
     xs = gather_sorted(x, ri)
-    h = ops.esmm(xs, w1, b1, ri.block_expert, ri.padded_counts, impl=impl)
+    h = ops.esmm(xs, w1, b1, ri.block_expert, ri.padded_counts, impl=impl,
+                 w_scales=s1)
     h = f(h)
-    ys = ops.esmm(h, w2, b2, ri.block_expert, ri.padded_counts, impl=impl)
+    ys = ops.esmm(h, w2, b2, ri.block_expert, ri.padded_counts, impl=impl,
+                  w_scales=s2)
     return combine_scatter(ys, ri, x.shape[0])
 
 
@@ -77,26 +84,34 @@ def moe_glu(
     w_up: jax.Array,
     w_down: jax.Array,
     *,
+    scales=None,
     act: str = "silu",
     impl: Optional[str] = None,
     fused: Optional[bool] = None,
 ) -> jax.Array:
-    """GLU expert FFN: y = (act(x Wg) * (x Wu)) Wd, routed per token."""
+    """GLU expert FFN: y = (act(x Wg) * (x Wu)) Wd, routed per token.
+
+    ``scales``: (sg, su, sd) block-wise scales when the weights are
+    int8/fp8 payloads (DESIGN.md §8)."""
     impl = impl or ops.get_default_impl()
     if fused is None:
         fused = ops.default_fused_ffn(impl)
     if fused:
         ys = ops.esffn_glu(
             x, ri.row_token, ri.row_gate, ri.block_expert, ri.padded_counts,
-            w_gate, w_up, w_down, act=act, impl=impl,
+            w_gate, w_up, w_down, scales=scales, act=act, impl=impl,
         )
         return scatter_rows(ys, ri.row_token, x.shape[0])
     f = ACTIVATIONS[act]
+    sg, su, sd = scales if scales is not None else (None, None, None)
     xs = gather_sorted(x, ri)
-    g = ops.esmm(xs, w_gate, None, ri.block_expert, ri.padded_counts, impl=impl)
-    u = ops.esmm(xs, w_up, None, ri.block_expert, ri.padded_counts, impl=impl)
+    g = ops.esmm(xs, w_gate, None, ri.block_expert, ri.padded_counts,
+                 impl=impl, w_scales=sg)
+    u = ops.esmm(xs, w_up, None, ri.block_expert, ri.padded_counts,
+                 impl=impl, w_scales=su)
     h = f(g) * u
-    ys = ops.esmm(h, w_down, None, ri.block_expert, ri.padded_counts, impl=impl)
+    ys = ops.esmm(h, w_down, None, ri.block_expert, ri.padded_counts,
+                  impl=impl, w_scales=sd)
     return combine_scatter(ys, ri, x.shape[0])
 
 
@@ -125,9 +140,9 @@ def hexa_moe_ffn(
     """Complete Hexa-MoE FFN: routing + expert-specific computation.
 
     x: (N, D) flat tokens. params holds 'router' (D, E) plus either
-    {'w1','b1','w2','b2'} (mlp) or {'w_gate','w_up','w_down'} (glu).
-    ``fused``: collapse the FFN stages into the single fused op (None =
-    impl default: on for pallas).
+    {'w1','b1','w2','b2'} (mlp) or {'w_gate','w_up','w_down'} (glu);
+    quantized expert weights carry their block scales as '<name>_scale'
+    entries (quant.core.quantize_ffn, DESIGN.md §8) and are detected here.
     """
     r = route(
         x,
@@ -139,17 +154,25 @@ def hexa_moe_ffn(
     )
     ri = build_reindex(r.expert_idx, r.gates, num_experts, blk)
     if glu:
+        scales = None
+        if "w_gate_scale" in params:
+            scales = (params["w_gate_scale"], params["w_up_scale"],
+                      params["w_down_scale"])
         y = moe_glu(
             x,
             ri,
             params["w_gate"],
             params["w_up"],
             params["w_down"],
+            scales=scales,
             act=act,
             impl=impl,
             fused=fused,
         )
     else:
+        scales = None
+        if "w1_scale" in params:
+            scales = (params["w1_scale"], params["w2_scale"])
         y = moe_mlp(
             x,
             ri,
@@ -157,6 +180,7 @@ def hexa_moe_ffn(
             params.get("b1"),
             params["w2"],
             params.get("b2"),
+            scales=scales,
             act=act,
             impl=impl,
             fused=fused,

@@ -184,6 +184,14 @@ class HeteroPlan:
                         so the autotune roofline can evaluate the uneven-
                         split latency term and so replans can EMA against
                         the original measurement.
+    ``expert_bits``   — per-device-class expert-weight storage bits
+                        (DESIGN.md §8): 8 ⇒ that class holds block-wise
+                        int8 expert payloads (smaller HBM footprint AND a
+                        smaller weight-byte roofline term), 16 ⇒ bf16.
+                        Low-HBM classes go 8 while big devices stay 16;
+                        ``parallel.hetero_exec`` quantizes each class's
+                        weight slice accordingly and the autotune chooser
+                        prices the uneven split with per-device bits.
 
     The plan is hashable/static: every distinct plan compiles its own trace
     (the replan loop bounds retraces with a plan-keyed cache,
@@ -199,6 +207,7 @@ class HeteroPlan:
     #: mesh), these are the TP group's t_i; ``hidden_splits`` derive from
     #: them. None ⇒ ``proxy_latencies`` covers both groups.
     tp_latencies: Optional[tuple] = None
+    expert_bits: Optional[tuple] = None    # per-class weight bits (8 | 16)
 
     def __post_init__(self):
         if self.token_counts is not None and self.token_capacity is not None:
@@ -206,6 +215,16 @@ class HeteroPlan:
                 raise ValueError(
                     f"token_counts {self.token_counts} exceed capacity "
                     f"{self.token_capacity}"
+                )
+        if self.expert_bits is not None:
+            if any(b not in (8, 16) for b in self.expert_bits):
+                raise ValueError(
+                    f"expert_bits must be 8 or 16, got {self.expert_bits}"
+                )
+            if len(self.expert_bits) != len(self.proxy_latencies):
+                raise ValueError(
+                    f"expert_bits has {len(self.expert_bits)} entries for "
+                    f"{len(self.proxy_latencies)} device classes"
                 )
 
     @property
@@ -234,7 +253,8 @@ class HeteroPlan:
     def key(self) -> tuple:
         """Hashable retrace key: what the compiled program depends on."""
         return (self.token_counts, self.hidden_splits,
-                self.token_capacity, self.token_quantum, self.hidden_quantum)
+                self.token_capacity, self.token_quantum,
+                self.hidden_quantum, self.expert_bits)
 
     def with_token_counts(self, counts: Sequence[int]) -> "HeteroPlan":
         """Replan step: same plan, new Eq. 1 shares (capacity-clamped)."""
@@ -255,6 +275,7 @@ def make_hetero_plan(
     token_quantum: int = 1,
     hidden_quantum: int = 128,
     capacity_headroom: float = 1.0,
+    expert_bits: Optional[Sequence[int]] = None,
 ) -> HeteroPlan:
     """Build the executable plan from measured proxy latencies (Eq. 1/2).
 
@@ -264,7 +285,9 @@ def make_hetero_plan(
     a different device set, else ``latencies``). ``capacity_headroom > 1``
     reserves extra padded rows per device so later replans can shift MORE
     load onto a device than the initial plan gave it without changing the
-    SPMD shapes.
+    SPMD shapes. ``expert_bits`` (DESIGN.md §8): per-class expert-weight
+    storage bits — low-HBM classes hold int8 payloads (8), big devices
+    stay bf16 (16).
     """
     lat = tuple(float(t) for t in latencies)
     tp_lat = (tuple(float(t) for t in tp_latencies)
@@ -303,6 +326,8 @@ def make_hetero_plan(
         hidden_quantum=hidden_quantum,
         token_capacity=capacity,
         tp_latencies=tp_lat,
+        expert_bits=(tuple(int(b) for b in expert_bits)
+                     if expert_bits is not None else None),
     )
 
 

@@ -42,6 +42,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.common import ACTIVATIONS, pallas_interpret_default, tpu_compiler_params
+from repro.quant.core import dequant_tile, scale_block_dims
 
 _CONTRACT_K = (((1,), (0,)), ((), ()))  # row-major matmul: (m,k)x(k,n)
 
@@ -56,6 +57,7 @@ def esffn_cost(
     glu: bool,
     has_b1: bool = False,
     has_b2: bool = False,
+    weight_bits: int | None = None,
 ) -> pl.CostEstimate:
     """Cost model of the fused FFN pass.
 
@@ -64,10 +66,17 @@ def esffn_cost(
     construction, EXCLUDES the (Np, F) hidden round-trip the unfused
     composition pays (2 HBM writes + 2..3 reads of g/u/h between stages)
     plus the (Np, D) sorted-copy round-trip of ``gather_sorted``.
+
+    ``weight_bits`` (DESIGN.md §8) overrides the weight itemsize for
+    quantized experts: int8/fp8 payloads move 8 bits per element across
+    HBM regardless of the activation dtype, which is what shifts the
+    autotune data-/model-centric crossover (block-wise scales add
+    ~``(128*128)``-fold fewer bytes and are excluded).
     """
     n_mm = 3 if glu else 2
     flops = n_mm * 2 * np_rows * d * f
-    w_bytes = num_blocks * n_mm * d * f * itemsize
+    w_itemsize = itemsize if weight_bits is None else weight_bits // 8
+    w_bytes = num_blocks * n_mm * d * f * w_itemsize
     b_bytes = num_blocks * ((f if has_b1 else 0) + (d if has_b2 else 0)) * itemsize
     bytes_accessed = (
         np_rows * d * itemsize      # token rows gathered in
@@ -106,23 +115,33 @@ def _gather_block(x_any, rt_ref, x_s, sem, m, bm, n_tokens):
     jax.lax.fori_loop(0, bm, wait, None)
 
 
+def _wtile(w_ref, s_ref):
+    """One expert weight tile, dequantized in VMEM when quantized
+    (DESIGN.md §8) — only the int8/fp8 bytes crossed HBM."""
+    if s_ref is None:
+        return w_ref[0]
+    return dequant_tile(w_ref[0], s_ref[0])
+
+
 def _esffn_glu_kernel(
     block_expert,  # scalar prefetch (num_blocks,)
     row_token,     # scalar prefetch (Np,)
     x_any,         # (N, D) unsorted tokens, ANY/HBM
-    wg_ref,        # (1, D, BLK_F)
-    wu_ref,        # (1, D, BLK_F)
-    wd_ref,        # (1, BLK_F, D)
-    gate_ref,      # (BLK_M, 1)
-    o_ref,         # (BLK_M, D)
-    x_s,           # VMEM (BLK_M, D) x.dtype
-    acc,           # VMEM (BLK_M, D) f32
-    sem,           # DMA semaphore
-    *,
+    *rest,         # wg [sg] wu [su] wd [sd] gate o x_s acc sem
     act_fn,
     bm: int,
     n_tokens: int,
+    quantized: bool,
 ):
+    rest = list(rest)
+    wg_ref = rest.pop(0)
+    sg_ref = rest.pop(0) if quantized else None
+    wu_ref = rest.pop(0)
+    su_ref = rest.pop(0) if quantized else None
+    wd_ref = rest.pop(0)
+    sd_ref = rest.pop(0) if quantized else None
+    gate_ref, o_ref, x_s, acc, sem = rest
+
     m = pl.program_id(0)
     fb = pl.program_id(1)
     nf = pl.num_programs(1)
@@ -135,14 +154,17 @@ def _esffn_glu_kernel(
     x = x_s[...]
     # One read of the x tile feeds BOTH projections (the GLU sharing).
     g = jax.lax.dot_general(
-        x, wg_ref[0], _CONTRACT_K, preferred_element_type=jnp.float32
+        x, _wtile(wg_ref, sg_ref), _CONTRACT_K,
+        preferred_element_type=jnp.float32,
     ).astype(x.dtype)
     u = jax.lax.dot_general(
-        x, wu_ref[0], _CONTRACT_K, preferred_element_type=jnp.float32
+        x, _wtile(wu_ref, su_ref), _CONTRACT_K,
+        preferred_element_type=jnp.float32,
     ).astype(x.dtype)
     h = act_fn(g) * u  # (BLK_M, BLK_F), VMEM only — never written to HBM
     acc[...] += jax.lax.dot_general(
-        h, wd_ref[0], _CONTRACT_K, preferred_element_type=jnp.float32
+        h, _wtile(wd_ref, sd_ref), _CONTRACT_K,
+        preferred_element_type=jnp.float32,
     )
 
     @pl.when(fb == nf - 1)
@@ -157,17 +179,20 @@ def _esffn_mlp_kernel(
     row_token,
     x_any,
     w1_ref,        # (1, D, BLK_F)
-    *rest,         # [b1 (1, BLK_F)], w2 (1, BLK_F, D), [b2 (1, D)],
-                   # gate, o, x_s, acc, sem
+    *rest,         # [s1], [b1 (1, BLK_F)], w2 (1, BLK_F, D), [s2],
+                   # [b2 (1, D)], gate, o, x_s, acc, sem
     act_fn,
     bm: int,
     n_tokens: int,
     has_b1: bool,
     has_b2: bool,
+    quantized: bool,
 ):
     rest = list(rest)
+    s1_ref = rest.pop(0) if quantized else None
     b1_ref = rest.pop(0) if has_b1 else None
     w2_ref = rest.pop(0)
+    s2_ref = rest.pop(0) if quantized else None
     b2_ref = rest.pop(0) if has_b2 else None
     gate_ref, o_ref, x_s, acc, sem = rest
 
@@ -188,13 +213,15 @@ def _esffn_mlp_kernel(
 
     x = x_s[...]
     z = jax.lax.dot_general(
-        x, w1_ref[0], _CONTRACT_K, preferred_element_type=jnp.float32
+        x, _wtile(w1_ref, s1_ref), _CONTRACT_K,
+        preferred_element_type=jnp.float32,
     )
     if has_b1:
         z = z + b1_ref[0].astype(jnp.float32)
     h = act_fn(z.astype(x.dtype))
     acc[...] += jax.lax.dot_general(
-        h, w2_ref[0], _CONTRACT_K, preferred_element_type=jnp.float32
+        h, _wtile(w2_ref, s2_ref), _CONTRACT_K,
+        preferred_element_type=jnp.float32,
     )
 
     @pl.when(fb == nf - 1)
@@ -241,6 +268,14 @@ def _call(kernel, x, row_token, row_gate, block_expert, tensor_args,
       row_gate.reshape(np_rows, 1).astype(jnp.float32))
 
 
+def _scale_spec(wdims, sdims, bdims, index_map):
+    """BlockSpec of a weight's scale operand, congruent with its weight
+    BlockSpec (each per-axis quant tile must divide the kernel block)."""
+    return pl.BlockSpec(
+        (1,) + scale_block_dims(wdims, sdims, bdims), index_map
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("act", "bf", "interpret"))
 def esffn_glu_pallas(
     x: jax.Array,
@@ -251,6 +286,7 @@ def esffn_glu_pallas(
     w_up: jax.Array,
     w_down: jax.Array,
     *,
+    w_scales=None,
     act: str = "silu",
     bf: int = 128,
     interpret: bool | None = None,
@@ -259,7 +295,10 @@ def esffn_glu_pallas(
     sorted output, in one Pallas pass.
 
     x: (N, D); row_token/row_gate: (Np,) from ``core.reindex``; block_expert:
-    (Np // blk,); w_gate/w_up: (E, D, F); w_down: (E, F, D).
+    (Np // blk,); w_gate/w_up: (E, D, F); w_down: (E, F, D). ``w_scales``
+    (DESIGN.md §8): (sg, su, sd) block-wise scales of int8/fp8 weights —
+    each weight tile is dequantized in VMEM right before its MXU
+    contraction, so the quantized bytes are what cross HBM.
     """
     if interpret is None:
         interpret = pallas_interpret_default()
@@ -268,17 +307,32 @@ def esffn_glu_pallas(
     assert dw == d and w_up.shape == (e, d, f) and w_down.shape == (e, f, d)
     nm = block_expert.shape[0]
     bf_r = min(bf, f)
-    kernel = functools.partial(_esffn_glu_kernel, act_fn=ACTIVATIONS[act])
-    specs = [
-        pl.BlockSpec((1, d, bf_r), lambda m, fb, be, rt: (be[m], 0, fb)),
-        pl.BlockSpec((1, d, bf_r), lambda m, fb, be, rt: (be[m], 0, fb)),
-        pl.BlockSpec((1, bf_r, d), lambda m, fb, be, rt: (be[m], fb, 0)),
-    ]
+    quantized = w_scales is not None
+    kernel = functools.partial(
+        _esffn_glu_kernel, act_fn=ACTIVATIONS[act], quantized=quantized
+    )
+    up_map = lambda m, fb, be, rt: (be[m], 0, fb)    # noqa: E731
+    down_map = lambda m, fb, be, rt: (be[m], fb, 0)  # noqa: E731
+    args, specs = [], []
+    for wt, sc, wdims, bdims, imap in (
+        (w_gate, None if not quantized else w_scales[0], (d, f),
+         (d, bf_r), up_map),
+        (w_up, None if not quantized else w_scales[1], (d, f),
+         (d, bf_r), up_map),
+        (w_down, None if not quantized else w_scales[2], (f, d),
+         (bf_r, d), down_map),
+    ):
+        args.append(wt)
+        specs.append(pl.BlockSpec((1,) + bdims, imap))
+        if quantized:
+            args.append(sc)
+            specs.append(_scale_spec(wdims, sc.shape[1:], bdims, imap))
     cost = esffn_cost(
-        row_token.shape[0], d, f, nm, w_gate.dtype.itemsize, glu=True
+        row_token.shape[0], d, f, nm, x.dtype.itemsize, glu=True,
+        weight_bits=8 * w_gate.dtype.itemsize,
     )
     return _call(kernel, x, row_token, row_gate, block_expert,
-                 [w_gate, w_up, w_down], specs, f, bf, cost, interpret)
+                 args, specs, f, bf, cost, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("act", "bf", "interpret"))
@@ -292,6 +346,7 @@ def esffn_mlp_pallas(
     w2: jax.Array,
     b2: jax.Array | None,
     *,
+    w_scales=None,
     act: str = "gelu",
     bf: int = 128,
     interpret: bool | None = None,
@@ -299,6 +354,8 @@ def esffn_mlp_pallas(
     """Fused 2-MLP expert FFN (optionally biased); see ``esffn_glu_pallas``.
 
     w1: (E, D, F); b1: (E, F) or None; w2: (E, F, D); b2: (E, D) or None.
+    ``w_scales``: (s1, s2) block-wise scales of quantized w1/w2 (biases
+    stay full precision).
     """
     if interpret is None:
         interpret = pallas_interpret_default()
@@ -307,25 +364,37 @@ def esffn_mlp_pallas(
     assert dw == d and w2.shape == (e, f, d)
     nm = block_expert.shape[0]
     bf_r = min(bf, f)
+    quantized = w_scales is not None
     kernel = functools.partial(
         _esffn_mlp_kernel, act_fn=ACTIVATIONS[act],
-        has_b1=b1 is not None, has_b2=b2 is not None,
+        has_b1=b1 is not None, has_b2=b2 is not None, quantized=quantized,
     )
+    up_map = lambda m, fb, be, rt: (be[m], 0, fb)    # noqa: E731
+    down_map = lambda m, fb, be, rt: (be[m], fb, 0)  # noqa: E731
     args = [w1]
-    specs = [pl.BlockSpec((1, d, bf_r), lambda m, fb, be, rt: (be[m], 0, fb))]
+    specs = [pl.BlockSpec((1, d, bf_r), up_map)]
+    if quantized:
+        args.append(w_scales[0])
+        specs.append(_scale_spec((d, f), w_scales[0].shape[1:],
+                                 (d, bf_r), up_map))
     if b1 is not None:
         assert b1.shape == (e, f)
         args.append(b1)
         specs.append(pl.BlockSpec((1, bf_r), lambda m, fb, be, rt: (be[m], fb)))
     args.append(w2)
-    specs.append(pl.BlockSpec((1, bf_r, d), lambda m, fb, be, rt: (be[m], fb, 0)))
+    specs.append(pl.BlockSpec((1, bf_r, d), down_map))
+    if quantized:
+        args.append(w_scales[1])
+        specs.append(_scale_spec((f, d), w_scales[1].shape[1:],
+                                 (bf_r, d), down_map))
     if b2 is not None:
         assert b2.shape == (e, d)
         args.append(b2)
         specs.append(pl.BlockSpec((1, d), lambda m, fb, be, rt: (be[m], 0)))
     cost = esffn_cost(
-        row_token.shape[0], d, f, nm, w1.dtype.itemsize, glu=False,
+        row_token.shape[0], d, f, nm, x.dtype.itemsize, glu=False,
         has_b1=b1 is not None, has_b2=b2 is not None,
+        weight_bits=8 * w1.dtype.itemsize,
     )
     return _call(kernel, x, row_token, row_gate, block_expert,
                  args, specs, f, bf, cost, interpret)

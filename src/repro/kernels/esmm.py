@@ -11,10 +11,17 @@ the re-index vector becomes a single ahead-of-time sort-permute (see
 ``core.reindex``); the kernel itself then streams contiguous VMEM tiles into
 the MXU with a float32 accumulator, which is the TPU-native shape of the same
 zero-redundancy computation.
+
+Quantized weights (DESIGN.md §8): with ``w_scales`` the weight operand is an
+int8/fp8 payload whose block-wise scales (``quant.core.quantize_blockwise``)
+ride along as a congruent BlockSpec — each weight tile is dequantized in
+VMEM right before the MXU contraction, so only the quantized bytes cross
+HBM (the cost estimate reflects the smaller itemsize automatically).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +29,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.common import cdiv, pallas_interpret_default, tpu_compiler_params
+from repro.quant.core import dequant_tile, scale_block_dims
 
 
 def _esmm_kernel(
@@ -29,11 +37,14 @@ def _esmm_kernel(
     x_ref,         # (BLK_M, BLK_K)
     w_ref,         # (1, BLK_K, BLK_N) or (1, BLK_N, BLK_K) if transposed
     *rest,
+    transpose: bool,
+    has_scale: bool,
+    has_bias: bool,
 ):
-    if len(rest) == 3:
-        b_ref, o_ref, acc_ref = rest
-    else:
-        b_ref, (o_ref, acc_ref) = None, rest
+    rest = list(rest)
+    s_ref = rest.pop(0) if has_scale else None
+    b_ref = rest.pop(0) if has_bias else None
+    o_ref, acc_ref = rest
     k = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -46,40 +57,14 @@ def _esmm_kernel(
                 b_ref[0].astype(jnp.float32), acc_ref.shape
             )
 
+    w = w_ref[0]
+    if has_scale:
+        # VMEM dequant right before the contraction (DESIGN.md §8).
+        w = dequant_tile(w, s_ref[0])
+    # transposed: w block is (BLK_N, BLK_K); contract x dim 1 with w dim 1.
+    dims = (((1,), (1,)), ((), ())) if transpose else (((1,), (0,)), ((), ()))
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[...],
-        w_ref[0],
-        dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-
-    @pl.when(k == nk - 1)
-    def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
-
-
-def _esmm_kernel_transposed(block_expert, x_ref, w_ref, *rest):
-    if len(rest) == 3:
-        b_ref, o_ref, acc_ref = rest
-    else:
-        b_ref, (o_ref, acc_ref) = None, rest
-    k = pl.program_id(2)
-    nk = pl.num_programs(2)
-
-    @pl.when(k == 0)
-    def _init():
-        if b_ref is None:
-            acc_ref[...] = jnp.zeros_like(acc_ref)
-        else:
-            acc_ref[...] = jnp.broadcast_to(
-                b_ref[0].astype(jnp.float32), acc_ref.shape
-            )
-
-    # w block is (BLK_N, BLK_K); contract x dim 1 with w dim 1.
-    acc_ref[...] += jax.lax.dot_general(
-        x_ref[...],
-        w_ref[0],
-        dimension_numbers=(((1,), (1,)), ((), ())),
+        x_ref[...], w, dimension_numbers=dims,
         preferred_element_type=jnp.float32,
     )
 
@@ -98,6 +83,7 @@ def esmm_pallas(
     b: jax.Array | None,
     block_expert: jax.Array,
     *,
+    w_scales: Optional[jax.Array] = None,
     transpose_rhs: bool = False,
     bm: int = 128,
     bn: int = 128,
@@ -107,7 +93,9 @@ def esmm_pallas(
     """Grouped matmul ys = xs @ W[e] (+ b[e]) on the sorted layout.
 
     xs: (Np, D1); w: (E, D1, D2) ((E, D2, D1) when transpose_rhs);
-    b: (E, D2) or None; block_expert: (Np // bm,).
+    b: (E, D2) or None; block_expert: (Np // bm,). ``w_scales``
+    (E, n1, n2): block-wise scales of a quantized ``w`` (same axis order
+    as w) — dequantized tile-wise in VMEM before the MXU contraction.
     """
     if interpret is None:
         interpret = pallas_interpret_default()
@@ -129,17 +117,30 @@ def esmm_pallas(
     grid = (np_rows // bm, d2 // bn, d1 // bk)
 
     if transpose_rhs:
-        kernel = _esmm_kernel_transposed
         w_spec = pl.BlockSpec((1, bn, bk), lambda i, j, k, be: (be[i], j, k))
     else:
-        kernel = _esmm_kernel
         w_spec = pl.BlockSpec((1, bk, bn), lambda i, j, k, be: (be[i], k, j))
 
+    kernel = functools.partial(
+        _esmm_kernel, transpose=transpose_rhs,
+        has_scale=w_scales is not None, has_bias=b is not None,
+    )
     in_specs = [
         pl.BlockSpec((bm, bk), lambda i, j, k, be: (i, k)),
         w_spec,
     ]
     args = [block_expert, xs, w]
+    if w_scales is not None:
+        assert w_scales.shape[0] == e, (w_scales.shape, w.shape)
+        if transpose_rhs:
+            sb = scale_block_dims((d2, d1), w_scales.shape[1:], (bn, bk))
+            in_specs.append(pl.BlockSpec(
+                (1,) + sb, lambda i, j, k, be: (be[i], j, k)))
+        else:
+            sb = scale_block_dims((d1, d2), w_scales.shape[1:], (bk, bn))
+            in_specs.append(pl.BlockSpec(
+                (1,) + sb, lambda i, j, k, be: (be[i], k, j)))
+        args.append(w_scales)
     if b is not None:
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k, be: (be[i], j)))
         args.append(b)
@@ -150,6 +151,9 @@ def esmm_pallas(
         + grid[0] * d1 * d2 * w.dtype.itemsize  # one expert tile per m-block
         + np_rows * d2 * xs.dtype.itemsize
     )
+    if w_scales is not None:
+        bytes_accessed += grid[0] * int(
+            w_scales.shape[1] * w_scales.shape[2]) * 4
 
     return pl.pallas_call(
         kernel,

@@ -32,6 +32,7 @@ from jax import lax
 
 from repro.common import ACTIVATIONS, on_tpu
 from repro.kernels import ref as _ref
+from repro.quant.core import dequantize_blockwise
 from repro.kernels.esmm import esmm_pallas
 from repro.kernels.esffn import esffn_glu_pallas, esffn_mlp_pallas
 from repro.kernels.esfk import esfk_pallas
@@ -78,12 +79,17 @@ def default_fused_ffn(impl: Optional[str] = None) -> bool:
 # weight gather becomes the scalar-prefetched DMA).
 # ---------------------------------------------------------------------------
 
-def _blocked_esmm(xs, w, b, block_expert, transpose_rhs):
+def _blocked_esmm(xs, w, b, block_expert, transpose_rhs, w_scales=None):
     np_rows = xs.shape[0]
     nblk = block_expert.shape[0]
     blk = np_rows // nblk
     xb = xs.reshape(nblk, blk, -1)
     wb = w[block_expert]  # (nblk, D1, D2) or (nblk, D2, D1)
+    if w_scales is not None:
+        # int8/fp8 tiles gathered per block (the quantized bytes are what
+        # move), dequantized block-wise right before the contraction —
+        # the XLA analogue of the kernel's VMEM dequant (DESIGN.md §8).
+        wb = dequantize_blockwise(wb, w_scales[block_expert], dtype=xs.dtype)
     if transpose_rhs:
         y = jnp.einsum(
             "gbk,gnk->gbn", xb, wb, preferred_element_type=xs.dtype
@@ -189,16 +195,22 @@ def _ragged_ess(x, block_expert, num_experts):
 # impl dispatch (no autodiff)
 # ---------------------------------------------------------------------------
 
-def _esmm_any(impl, transpose_rhs, xs, w, b, block_expert, padded_counts):
+def _esmm_any(impl, transpose_rhs, xs, w, b, block_expert, padded_counts,
+              w_scales=None):
     if impl == "pallas":
         blk = xs.shape[0] // block_expert.shape[0]
         return esmm_pallas(
-            xs, w, b, block_expert, transpose_rhs=transpose_rhs, bm=blk
+            xs, w, b, block_expert, w_scales=w_scales,
+            transpose_rhs=transpose_rhs, bm=blk,
         )
+    if impl == "blocked":
+        return _blocked_esmm(xs, w, b, block_expert, transpose_rhs,
+                             w_scales=w_scales)
+    if w_scales is not None:
+        # ragged/ref: semantics references — dequantize up front.
+        w = dequantize_blockwise(w, w_scales, dtype=xs.dtype)
     if impl == "ragged":
         return _ragged_esmm(xs, w, b, block_expert, padded_counts, transpose_rhs)
-    if impl == "blocked":
-        return _blocked_esmm(xs, w, b, block_expert, transpose_rhs)
     if impl == "ref":
         return _ref.esmm(xs, w, b, block_expert, transpose_rhs=transpose_rhs)
     raise ValueError(f"unknown impl {impl!r}")
@@ -277,6 +289,48 @@ def _esmm_bwd(impl, transpose_rhs, fused, res, dy):
 _esmm.defvjp(_esmm_fwd, _esmm_bwd)
 
 
+# Quantized-weight ESMM (DESIGN.md §8): the int8/fp8 payload + block scales
+# go through the fused-dequant kernels in forward; backward flows dX (and
+# db) against the dequantized weights. The payload itself is frozen — no
+# dW: training-side quantization is the STE ``quant.core.fake_quant`` on
+# the full-precision master weights, not gradients into int8.
+
+def _zero_cot(x):
+    """Cotangent for a frozen operand: zeros for inexact dtypes (fp8
+    scales/payloads), None for integer payloads (jax float0)."""
+    return jnp.zeros_like(x) if jnp.issubdtype(x.dtype, jnp.inexact) else None
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _esmm_q(impl, transpose_rhs, xs, w, w_scales, b, block_expert,
+            padded_counts):
+    return _esmm_any(impl, transpose_rhs, xs, w, b, block_expert,
+                     padded_counts, w_scales=w_scales)
+
+
+def _esmm_q_fwd(impl, transpose_rhs, xs, w, w_scales, b, block_expert,
+                padded_counts):
+    y = _esmm_any(impl, transpose_rhs, xs, w, b, block_expert,
+                  padded_counts, w_scales=w_scales)
+    return y, (xs, w, w_scales, b is not None, block_expert, padded_counts)
+
+
+def _esmm_q_bwd(impl, transpose_rhs, res, dy):
+    xs, w, w_scales, has_b, block_expert, padded_counts = res
+    w_dq = dequantize_blockwise(w, w_scales, dtype=xs.dtype)
+    dxs = _esmm_any(
+        impl, not transpose_rhs, dy, w_dq, None, block_expert, padded_counts
+    )
+    db = None
+    if has_b:
+        db = ess(dy, block_expert, padded_counts, impl=impl).astype(dy.dtype)
+    return (dxs, _zero_cot(w), jnp.zeros_like(w_scales),
+            db if has_b else None, None, None)
+
+
+_esmm_q.defvjp(_esmm_q_fwd, _esmm_q_bwd)
+
+
 def esmm(
     xs: jax.Array,
     w: jax.Array,
@@ -284,6 +338,7 @@ def esmm(
     block_expert: jax.Array,
     padded_counts: jax.Array,
     *,
+    w_scales: Optional[jax.Array] = None,
     transpose_rhs: bool = False,
     impl: Optional[str] = None,
     fused: Optional[bool] = None,
@@ -292,9 +347,14 @@ def esmm(
 
     xs: (Np, K); w: (E, K, N) — or (E, N, K) with transpose_rhs; b: (E, N)
     or None; block_expert/padded_counts from ``core.reindex.build_reindex``.
+    ``w_scales``: block-wise scales of a quantized ``w`` (DESIGN.md §8) —
+    dequant fuses into the kernels; the payload is frozen (dX/db only).
     """
     impl = impl or get_default_impl()
     fused = _FUSED_BACKWARD if fused is None else fused
+    if w_scales is not None:
+        return _esmm_q(impl, transpose_rhs, xs, w, w_scales, b,
+                       block_expert, padded_counts)
     return _esmm(impl, transpose_rhs, fused, xs, w, b, block_expert, padded_counts)
 
 
@@ -362,84 +422,117 @@ def _blocked_wtiles(onehot, w):
 
 
 def _blocked_esffn_glu(x, row_token, row_gate, block_expert, wg, wu, wd,
-                       act_fn):
+                       act_fn, scales=None):
     np_rows = row_token.shape[0]
     nblk = block_expert.shape[0]
     blk = np_rows // nblk
     xb = _gather_rows(x, row_token).reshape(nblk, blk, -1)
-    onehot = jax.nn.one_hot(block_expert, wg.shape[0], dtype=wg.dtype)
-    g = jnp.einsum("gbd,gdf->gbf", xb, _blocked_wtiles(onehot, wg),
+    if scales is not None:
+        # int8/fp8 payloads: gather the quantized expert tiles per block
+        # (the quantized bytes move) and dequantize block-wise just before
+        # the contraction — the XLA analogue of the kernel's VMEM dequant.
+        sg, su, sd = scales
+        tiles = [
+            dequantize_blockwise(w[block_expert], s[block_expert],
+                                 dtype=x.dtype)
+            for w, s in ((wg, sg), (wu, su), (wd, sd))
+        ]
+    else:
+        onehot = jax.nn.one_hot(block_expert, wg.shape[0], dtype=wg.dtype)
+        tiles = [_blocked_wtiles(onehot, w) for w in (wg, wu, wd)]
+    g = jnp.einsum("gbd,gdf->gbf", xb, tiles[0],
                    preferred_element_type=x.dtype)
-    u = jnp.einsum("gbd,gdf->gbf", xb, _blocked_wtiles(onehot, wu),
+    u = jnp.einsum("gbd,gdf->gbf", xb, tiles[1],
                    preferred_element_type=x.dtype)
     h = act_fn(g) * u
-    y = jnp.einsum("gbf,gfd->gbd", h, _blocked_wtiles(onehot, wd),
+    y = jnp.einsum("gbf,gfd->gbd", h, tiles[2],
                    preferred_element_type=x.dtype)
     y = y * row_gate.reshape(nblk, blk, 1).astype(y.dtype)
     return y.reshape(np_rows, -1)
 
 
 def _blocked_esffn_mlp(x, row_token, row_gate, block_expert, w1, b1, w2, b2,
-                       act_fn):
+                       act_fn, scales=None):
     np_rows = row_token.shape[0]
     nblk = block_expert.shape[0]
     blk = np_rows // nblk
     xb = _gather_rows(x, row_token).reshape(nblk, blk, -1)
-    onehot = jax.nn.one_hot(block_expert, w1.shape[0], dtype=w1.dtype)
-    z = jnp.einsum("gbd,gdf->gbf", xb, _blocked_wtiles(onehot, w1),
-                   preferred_element_type=x.dtype)
+    onehot = jax.nn.one_hot(block_expert, w1.shape[0],
+                            dtype=b1.dtype if b1 is not None else w1.dtype)
+    if scales is not None:
+        s1, s2 = scales
+        t1 = dequantize_blockwise(w1[block_expert], s1[block_expert],
+                                  dtype=x.dtype)
+        t2 = dequantize_blockwise(w2[block_expert], s2[block_expert],
+                                  dtype=x.dtype)
+    else:
+        t1 = _blocked_wtiles(onehot.astype(w1.dtype), w1)
+        t2 = _blocked_wtiles(onehot.astype(w2.dtype), w2)
+    z = jnp.einsum("gbd,gdf->gbf", xb, t1, preferred_element_type=x.dtype)
     if b1 is not None:
-        z = z + _blocked_wtiles(onehot, b1)[:, None].astype(z.dtype)
+        z = z + _blocked_wtiles(onehot.astype(b1.dtype), b1)[:, None].astype(
+            z.dtype)
     h = act_fn(z)
-    y = jnp.einsum("gbf,gfd->gbd", h, _blocked_wtiles(onehot, w2),
-                   preferred_element_type=x.dtype)
+    y = jnp.einsum("gbf,gfd->gbd", h, t2, preferred_element_type=x.dtype)
     if b2 is not None:
-        y = y + _blocked_wtiles(onehot, b2)[:, None].astype(y.dtype)
+        y = y + _blocked_wtiles(onehot.astype(b2.dtype), b2)[:, None].astype(
+            y.dtype)
     y = y * row_gate.reshape(nblk, blk, 1).astype(y.dtype)
     return y.reshape(np_rows, -1)
 
 
 def _staged_esffn(impl, act_fn, x, row_token, row_gate, block_expert,
-                  padded_counts, glu, ws):
+                  padded_counts, glu, ws, scales=None):
     """Per-stage composition inside the fused op (ragged / ref impls)."""
     xs = _gather_rows(x, row_token)
     if glu:
         wg, wu, wd = ws
-        g = _esmm_any(impl, False, xs, wg, None, block_expert, padded_counts)
-        u = _esmm_any(impl, False, xs, wu, None, block_expert, padded_counts)
+        sg, su, sd = scales if scales is not None else (None, None, None)
+        g = _esmm_any(impl, False, xs, wg, None, block_expert, padded_counts,
+                      w_scales=sg)
+        u = _esmm_any(impl, False, xs, wu, None, block_expert, padded_counts,
+                      w_scales=su)
         h = act_fn(g) * u
-        ys = _esmm_any(impl, False, h, wd, None, block_expert, padded_counts)
+        ys = _esmm_any(impl, False, h, wd, None, block_expert, padded_counts,
+                       w_scales=sd)
     else:
         w1, b1, w2, b2 = ws
-        z = _esmm_any(impl, False, xs, w1, b1, block_expert, padded_counts)
+        s1, s2 = scales if scales is not None else (None, None)
+        z = _esmm_any(impl, False, xs, w1, b1, block_expert, padded_counts,
+                      w_scales=s1)
         h = act_fn(z)
-        ys = _esmm_any(impl, False, h, w2, b2, block_expert, padded_counts)
+        ys = _esmm_any(impl, False, h, w2, b2, block_expert, padded_counts,
+                       w_scales=s2)
     return ys * row_gate[:, None].astype(ys.dtype)
 
 
 def _esffn_fwd_any(impl, act, glu, x, row_token, row_gate, block_expert,
-                   padded_counts, ws):
+                   padded_counts, ws, scales=None):
     act_fn = ACTIVATIONS[act]
     if impl == "pallas":
         if glu:
             return esffn_glu_pallas(
-                x, row_token, row_gate, block_expert, *ws, act=act
+                x, row_token, row_gate, block_expert, *ws,
+                w_scales=scales, act=act,
             )
         return esffn_mlp_pallas(
-            x, row_token, row_gate, block_expert, *ws, act=act
+            x, row_token, row_gate, block_expert, *ws,
+            w_scales=scales, act=act,
         )
     if impl == "blocked":
         if glu:
             return _blocked_esffn_glu(
-                x, row_token, row_gate, block_expert, *ws, act_fn=act_fn
+                x, row_token, row_gate, block_expert, *ws, act_fn=act_fn,
+                scales=scales,
             )
         return _blocked_esffn_mlp(
-            x, row_token, row_gate, block_expert, *ws, act_fn=act_fn
+            x, row_token, row_gate, block_expert, *ws, act_fn=act_fn,
+            scales=scales,
         )
     if impl in ("ragged", "ref"):
         return _staged_esffn(
             impl, act_fn, x, row_token, row_gate, block_expert,
-            padded_counts, glu, ws,
+            padded_counts, glu, ws, scales=scales,
         )
     raise ValueError(f"unknown impl {impl!r}")
 
@@ -472,6 +565,8 @@ def _esffn_glu_fwd(impl, act, x, row_token, row_gate, block_expert,
 
 
 def _esffn_glu_bwd(impl, act, res, dys_w):
+    """Flash-style recompute backward against DENSE weights; the quantized
+    op's backward dequantizes first and reuses this body verbatim."""
     x, row_token, row_gate, block_expert, padded_counts, wg, wu, wd = res
     act_fn = ACTIVATIONS[act]
     fused = _FUSED_BACKWARD
@@ -563,6 +658,121 @@ def _esffn_mlp_bwd(impl, act, res, dys_w):
 _esffn_mlp.defvjp(_esffn_mlp_fwd, _esffn_mlp_bwd)
 
 
+# ---------------------------------------------------------------------------
+# quantized fused expert FFN (DESIGN.md §8): int8/fp8 payloads + block-wise
+# scales flow through the same fused forward (VMEM dequant in the Pallas
+# kernel, per-block dequant in the blocked XLA region). Backward recomputes
+# the hidden through the QUANTIZED esmm ops (the quantized bytes are what
+# move there too) and flows dX / d_gate / bias grads; the payloads and
+# scales are frozen — training quantization is the STE fake_quant on the
+# full-precision masters, not gradients into int8.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _esffn_glu_q(impl, act, x, row_token, row_gate, block_expert,
+                 padded_counts, wg, sg, wu, su, wd, sd):
+    return _esffn_fwd_any(
+        impl, act, True, x, row_token, row_gate, block_expert,
+        padded_counts, (wg, wu, wd), scales=(sg, su, sd),
+    )
+
+
+def _esffn_glu_q_fwd(impl, act, x, row_token, row_gate, block_expert,
+                     padded_counts, wg, sg, wu, su, wd, sd):
+    y = _esffn_fwd_any(
+        impl, act, True, x, row_token, row_gate, block_expert,
+        padded_counts, (wg, wu, wd), scales=(sg, su, sd),
+    )
+    return y, (x, row_token, row_gate, block_expert, padded_counts,
+               wg, sg, wu, su, wd, sd)
+
+
+def _esffn_glu_q_bwd(impl, act, res, dys_w):
+    x, row_token, row_gate, block_expert, padded_counts, \
+        wg, sg, wu, su, wd, sd = res
+    act_fn = ACTIVATIONS[act]
+    xs = _gather_rows(x, row_token)
+    g = _esmm_any(impl, False, xs, wg, None, block_expert, padded_counts,
+                  w_scales=sg)
+    u = _esmm_any(impl, False, xs, wu, None, block_expert, padded_counts,
+                  w_scales=su)
+    h, h_vjp = jax.vjp(lambda g_, u_: act_fn(g_) * u_, g, u)
+    t = _esmm_any(impl, True, dys_w, wd, None, block_expert, padded_counts,
+                  w_scales=sd)
+    d_gate = jnp.sum(t.astype(jnp.float32) * h.astype(jnp.float32), axis=-1)
+    gate = row_gate[:, None].astype(dys_w.dtype)
+    dg, du = h_vjp((t * gate).astype(h.dtype))
+    dxs = (
+        _esmm_any(impl, True, dg, wg, None, block_expert, padded_counts,
+                  w_scales=sg)
+        + _esmm_any(impl, True, du, wu, None, block_expert, padded_counts,
+                    w_scales=su)
+    )
+    return (_scatter_dx(x, row_token, dxs), None,
+            d_gate.astype(row_gate.dtype), None, None,
+            _zero_cot(wg), jnp.zeros_like(sg),
+            _zero_cot(wu), jnp.zeros_like(su),
+            _zero_cot(wd), jnp.zeros_like(sd))
+
+
+_esffn_glu_q.defvjp(_esffn_glu_q_fwd, _esffn_glu_q_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _esffn_mlp_q(impl, act, x, row_token, row_gate, block_expert,
+                 padded_counts, w1, s1, b1, w2, s2, b2):
+    return _esffn_fwd_any(
+        impl, act, False, x, row_token, row_gate, block_expert,
+        padded_counts, (w1, b1, w2, b2), scales=(s1, s2),
+    )
+
+
+def _esffn_mlp_q_fwd(impl, act, x, row_token, row_gate, block_expert,
+                     padded_counts, w1, s1, b1, w2, s2, b2):
+    y = _esffn_fwd_any(
+        impl, act, False, x, row_token, row_gate, block_expert,
+        padded_counts, (w1, b1, w2, b2), scales=(s1, s2),
+    )
+    return y, (x, row_token, row_gate, block_expert, padded_counts,
+               w1, s1, b1, w2, s2, b2)
+
+
+def _esffn_mlp_q_bwd(impl, act, res, dys_w):
+    x, row_token, row_gate, block_expert, padded_counts, \
+        w1, s1, b1, w2, s2, b2 = res
+    act_fn = ACTIVATIONS[act]
+    xs = _gather_rows(x, row_token)
+    z = _esmm_any(impl, False, xs, w1, b1, block_expert, padded_counts,
+                  w_scales=s1)
+    h, act_vjp = jax.vjp(act_fn, z)
+    t = _esmm_any(impl, True, dys_w, w2, None, block_expert, padded_counts,
+                  w_scales=s2)
+    d_gate = jnp.sum(t.astype(jnp.float32) * h.astype(jnp.float32), axis=-1)
+    if b2 is not None:
+        blk = xs.shape[0] // block_expert.shape[0]
+        b2_rows = b2[jnp.repeat(block_expert, blk)]
+        d_gate = d_gate + jnp.sum(
+            dys_w.astype(jnp.float32) * b2_rows.astype(jnp.float32), axis=-1
+        )
+    gate = row_gate[:, None].astype(dys_w.dtype)
+    dys = dys_w * gate
+    (dz,) = act_vjp((t * gate).astype(h.dtype))
+    # Biases stay full precision, so their grads flow normally.
+    db1 = (ess(dz, block_expert, padded_counts, impl=impl).astype(b1.dtype)
+           if b1 is not None else None)
+    db2 = (ess(dys, block_expert, padded_counts, impl=impl).astype(b2.dtype)
+           if b2 is not None else None)
+    dxs = _esmm_any(impl, True, dz, w1, None, block_expert, padded_counts,
+                    w_scales=s1)
+    return (_scatter_dx(x, row_token, dxs), None,
+            d_gate.astype(row_gate.dtype), None, None,
+            _zero_cot(w1), jnp.zeros_like(s1), db1,
+            _zero_cot(w2), jnp.zeros_like(s2), db2)
+
+
+_esffn_mlp_q.defvjp(_esffn_mlp_q_fwd, _esffn_mlp_q_bwd)
+
+
 def esffn_glu(
     x: jax.Array,
     row_token: jax.Array,
@@ -573,6 +783,7 @@ def esffn_glu(
     w_up: jax.Array,
     w_down: jax.Array,
     *,
+    scales=None,
     act: str = "silu",
     impl: Optional[str] = None,
 ) -> jax.Array:
@@ -580,9 +791,15 @@ def esffn_glu(
 
     x: (N, D) UNSORTED tokens; row maps from ``core.reindex.build_reindex``.
     Returns the gate-weighted sorted output (Np, D) — combine it with
-    ``core.reindex.scatter_rows``.
+    ``core.reindex.scatter_rows``. ``scales``: (sg, su, sd) block-wise
+    scales of quantized weights (DESIGN.md §8); dequant fuses into the
+    kernels and the payloads are frozen (dX/d_gate grads only).
     """
     impl = impl or get_default_impl()
+    if scales is not None:
+        sg, su, sd = scales
+        return _esffn_glu_q(impl, act, x, row_token, row_gate, block_expert,
+                            padded_counts, w_gate, sg, w_up, su, w_down, sd)
     return _esffn_glu(impl, act, x, row_token, row_gate, block_expert,
                       padded_counts, w_gate, w_up, w_down)
 
@@ -598,10 +815,16 @@ def esffn_mlp(
     w2: jax.Array,
     b2: Optional[jax.Array],
     *,
+    scales=None,
     act: str = "gelu",
     impl: Optional[str] = None,
 ) -> jax.Array:
-    """Differentiable fused 2-MLP expert FFN; see ``esffn_glu``."""
+    """Differentiable fused 2-MLP expert FFN; see ``esffn_glu``.
+    ``scales``: (s1, s2) for quantized w1/w2 (biases full precision)."""
     impl = impl or get_default_impl()
+    if scales is not None:
+        s1, s2 = scales
+        return _esffn_mlp_q(impl, act, x, row_token, row_gate, block_expert,
+                            padded_counts, w1, s1, b1, w2, s2, b2)
     return _esffn_mlp(impl, act, x, row_token, row_gate, block_expert,
                       padded_counts, w1, b1, w2, b2)

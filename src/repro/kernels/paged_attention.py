@@ -92,6 +92,8 @@ def paged_attention_ref(
     page_table: jax.Array,  # (B, maxp) int32, physical page per logical page
     lengths: jax.Array,     # (B,) int32, live tokens per slot (incl. current)
     *,
+    k_scale: Optional[jax.Array] = None,  # (npages, page, Hkv) int8 pools
+    v_scale: Optional[jax.Array] = None,
     window: Optional[int] = None,
     softcap: float = 0.0,
     scale: Optional[float] = None,
@@ -102,6 +104,8 @@ def paged_attention_ref(
     ``take`` over the page table, then runs the exact masked-softmax
     reduction of ``models.attention.decode_attention`` — the numerical
     reference the parity matrix pins the other impls against.
+    ``k_scale``/``v_scale``: per-(row, kv-head) scales of int8 pools
+    (DESIGN.md §8) — gathered pages are dequantized before the reduction.
     """
     b, one, hq, hd = q.shape
     npages, page, hkv, _ = k_pool.shape
@@ -110,12 +114,15 @@ def paged_attention_ref(
     scale = scale if scale is not None else hd ** -0.5
     s = maxp * page
 
-    def view(pool):
+    def view(pool, sc):
         gathered = pool[page_table]                      # (B, maxp, page, Hkv, hd)
+        if sc is not None:
+            gathered = (gathered.astype(jnp.float32)
+                        * sc[page_table][..., None]).astype(q.dtype)
         return gathered.reshape(b, s, hkv, hd)
 
-    k_v = view(k_pool)
-    v_v = view(v_pool)
+    k_v = view(k_pool, k_scale)
+    v_v = view(v_pool, v_scale)
     qg = q.reshape(b, hkv, g, hd)
     logits = jnp.einsum(
         "bhgd,bshd->bhgs", qg, k_v, preferred_element_type=jnp.float32
@@ -145,13 +152,16 @@ def paged_attention_blocked(
     page_table: jax.Array,
     lengths: jax.Array,
     *,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
     window: Optional[int] = None,
     softcap: float = 0.0,
     scale: Optional[float] = None,
 ) -> jax.Array:
     """Flash-decode over pages: scan logical pages, gather one physical
     (B, page) K/V block per step, fold into a running (m, l, acc). Live
-    memory is one page per slot instead of the whole gathered view."""
+    memory is one page per slot instead of the whole gathered view.
+    int8 pools (``k_scale``/``v_scale``) dequantize per gathered page."""
     b, one, hq, hd = q.shape
     npages, page, hkv, _ = k_pool.shape
     maxp = page_table.shape[1]
@@ -164,6 +174,12 @@ def paged_attention_blocked(
         phys = page_table[:, j]                          # (B,)
         kb = k_pool[phys]                                # (B, page, Hkv, hd)
         vb = v_pool[phys]
+        if k_scale is not None:
+            kb = (kb.astype(jnp.float32)
+                  * k_scale[phys][..., None]).astype(q.dtype)
+        if v_scale is not None:
+            vb = (vb.astype(jnp.float32)
+                  * v_scale[phys][..., None]).astype(q.dtype)
         logits = jnp.einsum(
             "bhgd,bphd->bhgp", qg, kb, preferred_element_type=jnp.float32
         ) * scale
@@ -205,16 +221,17 @@ def _paged_kernel(
     q_ref,       # (1, 1, G, hd)
     k_ref,       # (1, page, 1, hd) — physical page via pt_ref index map
     v_ref,
-    o_ref,       # (1, 1, G, hd)
-    m_s,         # VMEM (G, 1) f32
-    l_s,         # VMEM (G, 1) f32
-    acc_s,       # VMEM (G, hd) f32
-    *,
+    *rest,       # [ks (1, page, 1), vs] o_ref, m_s, l_s, acc_s
     scale: float,
     page: int,
     window: Optional[int],
     softcap: float,
+    quantized: bool,
 ):
+    rest = list(rest)
+    ks_ref = rest.pop(0) if quantized else None
+    vs_ref = rest.pop(0) if quantized else None
+    o_ref, m_s, l_s, acc_s = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -234,6 +251,9 @@ def _paged_kernel(
     def _step():
         q = q_ref[0, 0].astype(jnp.float32)              # (G, hd)
         k = k_ref[0, :, 0, :].astype(jnp.float32)        # (page, hd)
+        if quantized:
+            # per-row dequant of the gathered int8 page (DESIGN.md §8)
+            k = k * ks_ref[0, :, 0][:, None]
         logits = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -254,9 +274,11 @@ def _paged_kernel(
         p = jnp.exp(logits - m_new)
         l_s[...] = l_s[...] * alpha + p.sum(axis=1, keepdims=True)
         m_s[...] = m_new
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            v = v * vs_ref[0, :, 0][:, None]
         acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
-            p, v_ref[0, :, 0, :].astype(jnp.float32),
-            (((1,), (0,)), ((), ())),
+            p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
 
@@ -277,12 +299,17 @@ def paged_attention_pallas(
     page_table: jax.Array,
     lengths: jax.Array,
     *,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
     window: Optional[int] = None,
     softcap: float = 0.0,
     interpret: bool | None = None,
 ) -> jax.Array:
     """One query row per slot, K/V gathered page-wise through the
-    scalar-prefetched page table (grid = slot x kv-head x logical page)."""
+    scalar-prefetched page table (grid = slot x kv-head x logical page).
+    int8 pools ride with per-(row, head) scale pools whose pages follow
+    the same table-indexed BlockSpec and dequantize in VMEM
+    (DESIGN.md §8) — the int8 bytes are what cross HBM."""
     if interpret is None:
         interpret = pallas_interpret_default()
     b, one, hq, hd = q.shape
@@ -292,30 +319,37 @@ def paged_attention_pallas(
     scale = hd ** -0.5
     qg = q.reshape(b, hkv, g, hd)
     grid = (b, hkv, maxp)
+    quantized = k_scale is not None
 
     cost = paged_attn_cost(
         [maxp * page] * b, page, hq, hkv, hd, k_pool.dtype.itemsize
     )
 
+    kv_spec = pl.BlockSpec(
+        (1, page, 1, hd), lambda bb, h, j, pt, ln: (pt[bb, j], 0, h, 0)
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda bb, h, j, pt, ln: (bb, h, 0, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    args = [qg, k_pool, v_pool]
+    if quantized:
+        sc_spec = pl.BlockSpec(
+            (1, page, 1), lambda bb, h, j, pt, ln: (pt[bb, j], 0, h)
+        )
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale, v_scale]
+
     out = pl.pallas_call(
         functools.partial(
             _paged_kernel, scale=scale, page=page, window=window,
-            softcap=softcap,
+            softcap=softcap, quantized=quantized,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, g, hd), lambda bb, h, j, pt, ln: (bb, h, 0, 0)),
-                pl.BlockSpec(
-                    (1, page, 1, hd),
-                    lambda bb, h, j, pt, ln: (pt[bb, j], 0, h, 0),
-                ),
-                pl.BlockSpec(
-                    (1, page, 1, hd),
-                    lambda bb, h, j, pt, ln: (pt[bb, j], 0, h, 0),
-                ),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (1, 1, g, hd), lambda bb, h, j, pt, ln: (bb, h, 0, 0)
             ),
@@ -335,8 +369,7 @@ def paged_attention_pallas(
             transcendentals=cost["transcendentals"],
         ),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      qg, k_pool, v_pool)
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), *args)
     return out.reshape(b, 1, hq, hd)
 
 
@@ -351,6 +384,8 @@ def paged_attention(
     page_table: jax.Array,
     lengths: jax.Array,
     *,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
     window: Optional[int] = None,
     softcap: float = 0.0,
     impl: Optional[str] = None,
@@ -358,23 +393,20 @@ def paged_attention(
     """Impl dispatch, mirroring ``kernels.ops``: "pallas" | "blocked" |
     "ref"/"gather" (default off-TPU: the gather-dense reference — on CPU the
     page gather is memory-bound either way and the dense reduction is what
-    the parity matrix pins)."""
+    the parity matrix pins). ``k_scale``/``v_scale``: int8-pool
+    per-(row, head) scales (DESIGN.md §8)."""
     from repro.kernels import ops
 
     impl = impl or ops.get_default_impl()
+    kw = dict(k_scale=k_scale, v_scale=v_scale, window=window,
+              softcap=softcap)
     if impl == "pallas":
-        return paged_attention_pallas(
-            q, k_pool, v_pool, page_table, lengths,
-            window=window, softcap=softcap,
-        )
+        return paged_attention_pallas(q, k_pool, v_pool, page_table,
+                                      lengths, **kw)
     if impl == "blocked":
-        return paged_attention_blocked(
-            q, k_pool, v_pool, page_table, lengths,
-            window=window, softcap=softcap,
-        )
+        return paged_attention_blocked(q, k_pool, v_pool, page_table,
+                                       lengths, **kw)
     if impl in ("ref", "gather", "ragged"):
-        return paged_attention_ref(
-            q, k_pool, v_pool, page_table, lengths,
-            window=window, softcap=softcap,
-        )
+        return paged_attention_ref(q, k_pool, v_pool, page_table,
+                                   lengths, **kw)
     raise ValueError(f"unknown paged attention impl {impl!r}")

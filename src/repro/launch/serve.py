@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfglib
-from repro.common import cdiv
+from repro.common import cdiv, tree_bytes
 from repro.core import hetero as hetero_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_mesh
@@ -200,8 +200,9 @@ class PagedServer:
 
     def __init__(self, cfg, pcfg, mesh, *, num_slots: int, page_size: int,
                  num_pages: int, max_pages_per_slot: int, params,
-                 prefill_chunk: int = 16, plan=None):
+                 prefill_chunk: int = 16, plan=None, kv_quant=None):
         self.cfg, self.mesh = cfg, mesh
+        self.kv_quant = None if kv_quant in (None, "none") else kv_quant
         # The plan's Eq. 1 shares are honored as page budgets (below), not
         # as masked tail rows — every slot is schedulable, so only the
         # token_counts half is stripped from the step config. The Eq. 2
@@ -220,13 +221,14 @@ class PagedServer:
         self.max_pages_per_slot = max_pages_per_slot
         self.prefill_chunk = prefill_chunk
         self.params = params
-        self.cache = lm.init_paged_cache(cfg, num_slots, num_pages, page_size)
+        self.cache = lm.init_paged_cache(cfg, num_slots, num_pages, page_size,
+                                         kv_quant=self.kv_quant)
 
-        n_attn = sum(cfg.layer_kind(i) == "attn" for i in range(cfg.num_layers))
-        itemsize = jnp.dtype(cfg.dtype).itemsize
-        self.page_bytes = (
-            n_attn * 2 * page_size * cfg.num_kv_heads * cfg.hd * itemsize
-        )
+        # int8 paged-KV (DESIGN.md §8): admission budgets in the SMALLER
+        # page bytes, so an equal-HBM pool holds proportionally more pages
+        # and admits more concurrent requests.
+        self.page_bytes = lm.paged_kv_page_bytes(cfg, page_size,
+                                                 kv_quant=self.kv_quant)
         shares = None
         self.groups = [0] * num_slots
         if plan is not None:
@@ -467,7 +469,18 @@ def main(argv=None):
     ap.add_argument("--hetero-tp-latencies", default=None,
                     help="comma-separated t_i per TP-group member: Eq. 2 "
                          "uneven hidden tiles")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "int8", "fp8"],
+                    help="quantize expert weights to block-wise int8/fp8 "
+                         "payloads served through the fused-dequant ES "
+                         "kernels (DESIGN.md §8)")
+    ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
+                    help="store paged-KV pages as int8 + per-row scales — "
+                         "smaller pages, more admitted requests per HBM "
+                         "byte (--paged only, DESIGN.md §8)")
     args = ap.parse_args(argv)
+    if args.kv_quant != "none" and not args.paged:
+        ap.error("--kv-quant requires --paged")
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -510,10 +523,24 @@ def main(argv=None):
         cache_layers=args.cache_layers,
         scan_layers=args.cache_layers <= 0,
         hetero_plan=plan,
+        # auto-mode roofline prices the served weight width (the island
+        # itself skips QAT fake-quant when the params carry true payloads)
+        quant=args.quant,
     )
 
     params, specs = split_tree(
         lm.init_params(jax.random.PRNGKey(0), cfg, plan=plan))
+    if args.quant != "none":
+        if mesh is not None:
+            ap.error("--quant serves whole-expert int8/fp8 payloads; "
+                     "combine with --mesh is not supported (the scales "
+                     "do not shard congruently)")
+        from repro.quant import quantize_lm_params
+
+        before = tree_bytes(params)
+        params = quantize_lm_params(params, cfg, mode=args.quant)
+        print(f"[serve] expert weights -> {args.quant}: params "
+              f"{before / 1e6:.1f}MB -> {tree_bytes(params) / 1e6:.1f}MB")
     if mesh is not None:
         params = jax.tree.map(
             jax.device_put, params, tree_shardings(params, specs, pcfg, mesh)
@@ -526,6 +553,7 @@ def main(argv=None):
             page_size=args.page_size, num_pages=pages,
             max_pages_per_slot=cdiv(args.max_seq, args.page_size),
             params=params, prefill_chunk=args.prefill_chunk, plan=plan,
+            kv_quant=args.kv_quant,
         )
     else:
         server = BatchedServer(cfg, pcfg, mesh, num_slots=num_slots,

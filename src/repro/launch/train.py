@@ -103,6 +103,12 @@ def main(argv=None):
                     help="comma-separated per-worker slowdown factors used "
                          "to synthesise per-device telemetry on a single "
                          "host (demo/test of the replan loop)")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "int8", "fp8"],
+                    help="QAT: expert weights pass through block-wise "
+                         "int8/fp8 fake-quant inside the MoE islands "
+                         "(straight-through grads; routers/dense layers "
+                         "stay full precision — DESIGN.md §8)")
     ap.add_argument("--impl", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--warmup", type=int, default=20)
@@ -145,6 +151,7 @@ def main(argv=None):
         device_latencies=latencies,
         impl=args.impl,
         blk=min(128, max(16, args.seq_len // 4)),
+        quant=args.quant,
     )
 
     def parse_lat(s, flag):

@@ -228,6 +228,7 @@ def paged_cache_spec(
     num_slots: int,
     num_pages: int,
     page_size: int,
+    kv_quant: Optional[str] = None,
 ) -> dict:
     """Abstract paged decode cache for serving (DESIGN.md §7).
 
@@ -240,20 +241,35 @@ def paged_cache_spec(
     is never allocated. Windowed layers store full positions too (the
     window is masked at read; a rolling buffer would break page identity).
 
+    ``kv_quant="int8"`` (DESIGN.md §8): the pools hold int8 payloads plus
+    float32 ``k_scale``/``v_scale`` pools of per-(row, kv-head) scales —
+    ~(itemsize*hd)/(hd+4)x smaller pages, so the same HBM budget admits
+    proportionally more pages (``paged_kv_page_bytes``/``PagePool``).
+
     Recurrent mixers (mamba/xlstm) keep their per-slot constant-size state
     exactly as in ``cache_spec`` — there is nothing to page.
     """
-    dtype = jnp.dtype(cfg.dtype)
+    if kv_quant not in (None, "none", "int8"):
+        raise ValueError(f"unsupported kv_quant {kv_quant!r}")
+    quant = kv_quant == "int8"
+    dtype = jnp.int8 if quant else jnp.dtype(cfg.dtype)
     period = cfg.period
     n_periods = cfg.num_layers // period
     pool = jax.ShapeDtypeStruct(
         (n_periods, num_pages, page_size, cfg.num_kv_heads, cfg.hd), dtype
     )
+    sc_pool = jax.ShapeDtypeStruct(
+        (n_periods, num_pages, page_size, cfg.num_kv_heads), jnp.float32
+    )
     layers = []
     for pos in range(period):
         kind = cfg.layer_kind(pos)
         if kind == "attn":
-            layers.append({"k": pool, "v": pool})
+            entry = {"k": pool, "v": pool}
+            if quant:
+                entry["k_scale"] = sc_pool
+                entry["v_scale"] = sc_pool
+            layers.append(entry)
             continue
         if kind == "mamba":
             spec = mamba.cache_spec_mamba(cfg, num_slots, dtype)
@@ -291,6 +307,9 @@ def paged_cache_logical_specs(cfg: ModelConfig, cache: dict) -> dict:
         if kind == "attn":
             spec = {"k": (None, "dp", None, None, None),
                     "v": (None, "dp", None, None, None)}
+            if "k_scale" in cache["layers"][pos]:
+                spec["k_scale"] = (None, "dp", None, None)
+                spec["v_scale"] = (None, "dp", None, None)
         elif kind == "mamba":
             spec = {"conv": (None, "dp", None, "tp"),
                     "ssm": (None, "dp", "tp", None)}
@@ -310,9 +329,29 @@ def init_paged_cache(
     num_slots: int,
     num_pages: int,
     page_size: int,
+    kv_quant: Optional[str] = None,
 ) -> dict:
-    spec = paged_cache_spec(cfg, num_slots, num_pages, page_size)
+    spec = paged_cache_spec(cfg, num_slots, num_pages, page_size,
+                            kv_quant=kv_quant)
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def paged_kv_page_bytes(
+    cfg: ModelConfig, page_size: int, kv_quant: Optional[str] = None
+) -> int:
+    """HBM bytes ONE physical page costs across every attention layer —
+    the unit ``parallel.cache.PagePool`` budgets admission in.
+
+    With ``kv_quant="int8"`` each K/V row stores hd int8 payload bytes
+    plus one float32 per-(row, head) scale, so a page costs
+    ``(hd + 4) / (hd * itemsize)`` of its full-precision size and the
+    same HBM admits proportionally more concurrent requests
+    (DESIGN.md §8)."""
+    n_attn = sum(cfg.layer_kind(i) == "attn" for i in range(cfg.num_layers))
+    row = cfg.num_kv_heads * cfg.hd * jnp.dtype(cfg.dtype).itemsize
+    if kv_quant == "int8":
+        row = cfg.num_kv_heads * (cfg.hd + 4)  # int8 payload + f32 scale
+    return n_attn * 2 * page_size * row
 
 
 def reset_slot(cfg: ModelConfig, cache: dict, slot: int) -> dict:

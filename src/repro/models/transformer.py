@@ -225,6 +225,11 @@ def apply_moe_ffn(p: dict, x: jax.Array, ctx: Ctx,
         b1=src.get("b1"),
         w2=src.get("w2"),
         b2=src.get("b2"),
+        w_gate_scale=src.get("w_gate_scale"),
+        w_up_scale=src.get("w_up_scale"),
+        w_down_scale=src.get("w_down_scale"),
+        w1_scale=src.get("w1_scale"),
+        w2_scale=src.get("w2_scale"),
     )
     return moe_layer(
         x, mp, ms, ctx.pcfg, ctx.mesh, x_spec=ctx.x_spec, noise_rng=ctx.rng,
@@ -317,6 +322,7 @@ def apply_attention(
         # carries the absolute offsets (cache_len + arange), so RoPE and
         # the window mask line up with decode exactly.
         from repro.kernels.paged_attention import NEG_INF
+        from repro.quant.core import dequantize_rows, quantize_rows
 
         page = int(ctx.paged["page_size"])
         table = ctx.paged["table"]                 # (B, maxp)
@@ -329,16 +335,38 @@ def apply_attention(
             active, table[rows, (pos_abs // page).astype(jnp.int32)], 0
         ).astype(jnp.int32)
         off = (pos_abs % page).astype(jnp.int32)
-        k_pool = cache["k"].at[phys.reshape(-1), off.reshape(-1)].set(
-            k.reshape(b * s, hkv, hd).astype(cache["k"].dtype))
-        v_pool = cache["v"].at[phys.reshape(-1), off.reshape(-1)].set(
-            v.reshape(b * s, hkv, hd).astype(cache["v"].dtype))
-        new_cache = {"k": k_pool, "v": v_pool}
+        kv_q = "k_scale" in cache  # int8 paged-KV pool (DESIGN.md §8)
+        k_rows = k.reshape(b * s, hkv, hd)
+        v_rows = v.reshape(b * s, hkv, hd)
+        idx = (phys.reshape(-1), off.reshape(-1))
+        if kv_q:
+            # Each written row quantizes with its own per-(row, head)
+            # scale, so already-resident pages never re-scale.
+            kq, ks = quantize_rows(k_rows)
+            vq, vs = quantize_rows(v_rows)
+            k_pool = cache["k"].at[idx].set(kq)
+            v_pool = cache["v"].at[idx].set(vq)
+            k_sc = cache["k_scale"].at[idx].set(ks)
+            v_sc = cache["v_scale"].at[idx].set(vs)
+            new_cache = {"k": k_pool, "v": v_pool,
+                         "k_scale": k_sc, "v_scale": v_sc}
+        else:
+            k_pool = cache["k"].at[idx].set(k_rows.astype(cache["k"].dtype))
+            v_pool = cache["v"].at[idx].set(v_rows.astype(cache["v"].dtype))
+            new_cache = {"k": k_pool, "v": v_pool}
 
         maxp = table.shape[1]
         s_all = maxp * page
-        kv_view = k_pool[table].reshape(b, s_all, hkv, hd)
-        vv_view = v_pool[table].reshape(b, s_all, hkv, hd)
+        if kv_q:
+            kv_view = dequantize_rows(
+                k_pool[table], k_sc[table], dtype=q.dtype
+            ).reshape(b, s_all, hkv, hd)
+            vv_view = dequantize_rows(
+                v_pool[table], v_sc[table], dtype=q.dtype
+            ).reshape(b, s_all, hkv, hd)
+        else:
+            kv_view = k_pool[table].reshape(b, s_all, hkv, hd)
+            vv_view = v_pool[table].reshape(b, s_all, hkv, hd)
         g = hq // hkv
         qg = q.reshape(b, s, hkv, g, hd)
         logits = jnp.einsum(
@@ -365,6 +393,7 @@ def apply_attention(
         # (kernels.paged_attention), window masked by absolute position —
         # paged storage never rolls, unlike the dense windowed buffer.
         from repro.kernels.paged_attention import paged_attention
+        from repro.quant.core import quantize_rows
 
         assert cache is not None and s == 1
         page = int(ctx.paged["page_size"])
@@ -378,12 +407,29 @@ def apply_attention(
         phys = jnp.where(
             active, table[jnp.arange(b), logical], 0
         ).astype(jnp.int32)
-        k_pool = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
-        v_pool = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
-        new_cache = {"k": k_pool, "v": v_pool}
+        k_sc = v_sc = None
+        if "k_scale" in cache:
+            # int8 paged-KV (DESIGN.md §8): the new row quantizes with its
+            # own per-(row, head) scale; the read dequantizes per gathered
+            # page inside the paged-attention kernels.
+            kq, ks = quantize_rows(k[:, 0])
+            vq, vs = quantize_rows(v[:, 0])
+            k_pool = cache["k"].at[phys, off].set(kq)
+            v_pool = cache["v"].at[phys, off].set(vq)
+            k_sc = cache["k_scale"].at[phys, off].set(ks)
+            v_sc = cache["v_scale"].at[phys, off].set(vs)
+            new_cache = {"k": k_pool, "v": v_pool,
+                         "k_scale": k_sc, "v_scale": v_sc}
+        else:
+            k_pool = cache["k"].at[phys, off].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_pool = cache["v"].at[phys, off].set(
+                v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": k_pool, "v": v_pool}
         lengths = length + active.astype(jnp.int32)
         out = paged_attention(
             q, k_pool, v_pool, table, lengths,
+            k_scale=k_sc, v_scale=v_sc,
             window=window,
             softcap=cfg.logit_softcap,
             impl=ctx.pcfg.impl,

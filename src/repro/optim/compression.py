@@ -9,6 +9,10 @@ unbiased over time: the quantisation residual is carried to the next step
 ``compressed_psum`` is collective-correct: the shared scale is agreed with a
 (psum, max) of per-pod maxima, then int8 payloads are summed as int32 and
 dequantised — associative, so the result is exact for the quantised values.
+
+The int8 primitives themselves live in ``quant.core`` (one rounding/
+clipping convention repo-wide, shared with the fused-kernel weight path,
+DESIGN.md §8) and are re-exported here for the existing public API.
 """
 from __future__ import annotations
 
@@ -18,14 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-
-def quantize_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
-    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(scale, 1e-30))
-    return jnp.clip(q, -127, 127).astype(jnp.int8)
-
-
-def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+from repro.quant.core import dequantize_int8, quantize_int8  # noqa: F401
 
 
 def compress_roundtrip(x: jax.Array) -> tuple[jax.Array, jax.Array]:

@@ -67,6 +67,7 @@ def layer_latency(
     hw: HardwareProfile = V5E,
     *,
     fused_ffn: bool = True,
+    weight_bits: int = 16,
 ) -> float:
     """One MoE FFN layer (fwd), bf16, on an ``n_dev`` TP/DP group.
 
@@ -82,10 +83,15 @@ def layer_latency(
     round-trips between the 3-4 separate kernels — which inflates the
     token-proportional side of the roofline and moves the data-/model-
     centric crossover.
+    ``weight_bits`` (DESIGN.md §8): expert-weight storage bits. Quantized
+    experts (8) shrink the weight term of BOTH the HBM and the all-gather
+    bills while the token bytes stay bf16 — data-centric's constant
+    weight-movement cost halves, so the crossover shifts toward FEWER
+    tokens (data-centric wins earlier).
     """
     active_rows = tokens * k
     flops = 2 * active_rows * d * f * 2  # two MLPs
-    w_bytes = e * 2 * d * f * 2          # full expert params, bf16
+    w_bytes = e * 2 * d * f * (weight_bits / 8)  # full expert params
     tok_bytes = tokens * d * 2
     # Unfused inter-stage HBM round-trips (1 write + 1 read each), bf16:
     # the expert-sorted (Np, D) copy and the (Np, F) hidden activations.
@@ -124,9 +130,15 @@ def layer_latency_uneven(
     hidden_shares: Optional[Sequence[int]] = None,
     hw: HardwareProfile = V5E,
     fused_ffn: bool = True,
+    weight_bits=16,
 ) -> float:
     """Uneven-split roofline: max over devices of each device's latency
     under its Eq. 1/2 share (paper §4.4 executed; DESIGN.md §6).
+
+    ``weight_bits`` may be a scalar or a per-device sequence (a plan's
+    ``expert_bits``, DESIGN.md §8): device i's weight-byte terms use its
+    own class's storage width, so an int8 low-HBM class sees a smaller
+    HBM bill than its bf16 peers.
 
     Replaces the ``effective_devices`` scalar approximation when an actual
     per-device allocation is known: device ``i`` runs at ``t_min/t_i`` of
@@ -151,9 +163,14 @@ def layer_latency_uneven(
     tok_frac = np.asarray(token_shares, np.float64) / max(sum(token_shares), 1)
     hid_frac = np.asarray(hidden_shares, np.float64) / max(sum(hidden_shares), 1)
 
+    bits = (list(weight_bits) if not isinstance(weight_bits, (int, float))
+            else [weight_bits] * n)
+    if len(bits) != n:
+        raise ValueError(
+            f"weight_bits has {len(bits)} entries for {n} devices")
+
     active_rows = tokens * k
     flops = 2 * active_rows * d * f * 2
-    w_bytes = e * 2 * d * f * 2
     tok_bytes = tokens * d * 2
     srt_bytes = 2 * active_rows * d * 2
     hid_bytes = 2 * active_rows * f * 2
@@ -162,6 +179,7 @@ def layer_latency_uneven(
     for i in range(n):
         peak = hw.peak_flops * speed[i]
         hbm = hw.hbm_bw * speed[i]
+        w_bytes = e * 2 * d * f * (bits[i] / 8)
         if mode == "model_centric":
             compute = flops * hid_frac[i] / peak
             mem = (w_bytes * hid_frac[i] + tok_bytes) / hbm
@@ -206,6 +224,7 @@ def choose_mode(
     n_dev: float = 16,
     hw: HardwareProfile = V5E,
     fused_ffn: bool = True,
+    weight_bits: int = 16,
 ) -> str:
     """argmin-latency mode for one MoE layer's token workload (ties resolve
     in CHOOSABLE_MODES order: model-centric first)."""
@@ -215,7 +234,7 @@ def choose_mode(
         return "data_centric"
     costs = {
         m: layer_latency(m, tokens, d, f, e, k, n_dev, hw,
-                         fused_ffn=fused_ffn)
+                         fused_ffn=fused_ffn, weight_bits=weight_bits)
         for m in CHOOSABLE_MODES
     }
     return min(costs, key=costs.get)
@@ -230,6 +249,7 @@ def crossover_tokens(
     n_dev: float = 16,
     hw: HardwareProfile = V5E,
     fused_ffn: bool = True,
+    weight_bits: int = 16,
     lo_exp: int = 4,
     hi_exp: int = 18,
 ) -> Optional[int]:
@@ -237,11 +257,14 @@ def crossover_tokens(
 
     Scans the same 2**lo_exp .. 2**(hi_exp-1) grid as the Fig. 10 benchmark
     so the runtime chooser and the offline roofline agree exactly.
+    Quantized experts (``weight_bits=8``, DESIGN.md §8) cheapen the
+    data-centric weight movement and pull the crossover to fewer tokens.
     """
     prev = None
     for tokens in (2 ** i for i in range(lo_exp, hi_exp)):
         winner = choose_mode(
-            tokens, d, f, e, k, n_dev=n_dev, hw=hw, fused_ffn=fused_ffn
+            tokens, d, f, e, k, n_dev=n_dev, hw=hw, fused_ffn=fused_ffn,
+            weight_bits=weight_bits,
         )
         if prev is not None and prev != winner:
             return tokens
@@ -348,6 +371,9 @@ def resolve_layer_mode(
     ``cfg.device_latencies``. Fused-FFN HBM cost is modelled unless the
     config forces the unfused composition (``cfg.fused_ffn is False``) — the
     roofline describes the TPU execution, where fused is the default.
+    Weight bytes are priced at the quantized width (DESIGN.md §8): the
+    plan's per-class ``expert_bits`` when it carries them, else 8 bits
+    under ``cfg.quant`` int8/fp8, else 16.
     """
     if cfg.forced_layer_mode is not None:
         return cfg.forced_layer_mode
@@ -355,8 +381,11 @@ def resolve_layer_mode(
         planned = cfg.layer_mode_plan[layer_idx % len(cfg.layer_mode_plan)]
         if planned is not None:
             return planned
+    from repro.quant.core import quant_bits
+
     n_dev = float(_tp_group_size(cfg, mesh))
     fused = getattr(cfg, "fused_ffn", None)
+    bits = quant_bits(getattr(cfg, "quant", "none"))
     plan = getattr(cfg, "hetero_plan", None)
     plan_lat = (None if plan is None
                 else (plan.tp_latencies or plan.proxy_latencies))
@@ -366,11 +395,14 @@ def resolve_layer_mode(
         inv = [1.0 / t for t in lat]
         hs = (list(plan.hidden_splits)
               if plan.hidden_splits is not None else inv)
+        wb = (list(plan.expert_bits)
+              if plan.expert_bits is not None
+              and len(plan.expert_bits) == len(lat) else bits)
         costs = {
             m: layer_latency_uneven(
                 m, tokens, d, f, e, k, lat,
                 token_shares=inv, hidden_shares=hs,
-                fused_ffn=fused is not False,
+                fused_ffn=fused is not False, weight_bits=wb,
             )
             for m in CHOOSABLE_MODES
         }
@@ -386,7 +418,8 @@ def resolve_layer_mode(
         else:
             n_dev = n_dev * effective_devices(lat) / len(lat)
     return choose_mode(
-        tokens, d, f, e, k, n_dev=n_dev, fused_ffn=fused is not False
+        tokens, d, f, e, k, n_dev=n_dev, fused_ffn=fused is not False,
+        weight_bits=bits,
     )
 
 

@@ -57,13 +57,20 @@ class HeteroStep(NamedTuple):
 
 def _ffn(x, ri, params, *, act, glu, impl):
     if glu:
+        scales = None
+        if "w_gate_scale" in params:
+            scales = (params["w_gate_scale"], params["w_up_scale"],
+                      params["w_down_scale"])
         return espec.moe_glu(
             x, ri, params["w_gate"], params["w_up"], params["w_down"],
-            act=act, impl=impl,
+            scales=scales, act=act, impl=impl,
         )
+    scales = None
+    if "w1_scale" in params:
+        scales = (params["w1_scale"], params["w2_scale"])
     return espec.moe_mlp(
         x, ri, params["w1"], params.get("b1"), params["w2"],
-        params.get("b2"), act=act, impl=impl,
+        params.get("b2"), scales=scales, act=act, impl=impl,
     )
 
 
@@ -74,6 +81,13 @@ class HeteroExecutor:
     the FULL d_ff hidden — slicing happens here). ``mode`` picks which Eq.
     the devices execute: "data_centric" needs ``plan.token_counts``,
     "model_centric" needs ``plan.hidden_splits``.
+
+    Precision-aware planning (``plan.expert_bits``, DESIGN.md §8): a
+    device class marked 8 holds its expert-weight slice as block-wise
+    int8 payloads + scales (``quant.core.quantize_ffn``) and runs the
+    fused-dequant kernels — per-device-program execution is exactly where
+    mixed per-class precision is expressible, since each class compiles
+    its own program. Classes marked 16 keep the full-precision weights.
     """
 
     def __init__(
@@ -88,12 +102,39 @@ class HeteroExecutor:
         mode: str,
         blk: int = 128,
         impl: Optional[str] = None,
+        quant_mode: str = "int8",
+        quant_tile: int = 128,
     ):
+        from repro.quant.core import quantize_ffn
+
         self.plan = plan
         self.mode = mode
         self.glu = glu
         t = np.asarray(plan.proxy_latencies, np.float64)
         self.skews = tuple(float(v) for v in t / t.min())
+        splits = (plan.token_counts if mode == "data_centric"
+                  else plan.hidden_splits)
+        bits = plan.expert_bits or (16,) * len(splits or ())
+        if splits is not None and len(bits) != len(splits):
+            # expert_bits is validated against proxy_latencies at plan
+            # construction, but the executed split may follow tp_latencies
+            # (model-centric on a 2-D mesh) — refuse a silent mis-mapping.
+            raise ValueError(
+                f"expert_bits has {len(bits)} entries but the executed "
+                f"{mode} split has {len(splits)} device programs"
+            )
+        # data-centric programs share the UNSLICED weights, so all 8-bit
+        # classes can share one quantized copy (model-centric slices
+        # differ per class and must quantize per slice).
+        shared_q = (quantize_ffn(params, mode=quant_mode, tile=quant_tile)
+                    if mode == "data_centric" and 8 in bits else None)
+
+        def class_params(i, p_i):
+            if bits[i] != 8:
+                return p_i
+            if shared_q is not None:
+                return shared_q
+            return quantize_ffn(p_i, mode=quant_mode, tile=quant_tile)
 
         def layer_fn(x, p, n_valid, n_rows):
             vm = None
@@ -114,16 +155,17 @@ class HeteroExecutor:
                 raise ValueError("data_centric needs plan.token_counts")
             q = plan.token_quantum
             off = 0
-            for b_i in plan.token_counts:
+            for i, b_i in enumerate(plan.token_counts):
                 rows = max(round_up(b_i, q), q)
                 fn = functools.partial(jit_fn, n_valid=b_i, n_rows=rows)
-                self._programs.append((fn, params, (off, b_i, rows)))
+                self._programs.append(
+                    (fn, class_params(i, params), (off, b_i, rows)))
                 off += b_i
         elif mode == "model_centric":
             if plan.hidden_splits is None:
                 raise ValueError("model_centric needs plan.hidden_splits")
             off = 0
-            for h_i in plan.hidden_splits:
+            for i, h_i in enumerate(plan.hidden_splits):
                 sl = slice(off, off + h_i)
                 if glu:
                     p_i = {
@@ -144,10 +186,22 @@ class HeteroExecutor:
                                 if params.get("b2") is not None else None)),
                     }
                 fn = functools.partial(jit_fn, n_valid=-1, n_rows=-1)
-                self._programs.append((fn, p_i, (off, h_i, None)))
+                self._programs.append(
+                    (fn, class_params(i, p_i), (off, h_i, None)))
                 off += h_i
         else:
             raise ValueError(mode)
+
+    def device_param_bytes(self) -> tuple:
+        """Per-device expert-weight HBM bytes (router excluded) — the
+        memory claim of per-class precision (DESIGN.md §8): an int8 class
+        holds ~half the bf16 bytes (~quarter of f32) plus its scales."""
+        from repro.common import tree_bytes
+
+        return tuple(
+            tree_bytes({k: v for k, v in p.items() if k != "router"})
+            for _, p, _ in self._programs
+        )
 
     # -- execution ----------------------------------------------------------
 

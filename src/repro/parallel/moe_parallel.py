@@ -46,7 +46,12 @@ from repro.parallel.sharding import ParallelConfig
 
 
 class MoEParams(NamedTuple):
-    """Expert parameter shards as seen inside the island (local views)."""
+    """Expert parameter shards as seen inside the island (local views).
+
+    The ``*_scale`` leaves are present only for true-quantized expert
+    weights (int8/fp8 payloads from ``quant.core.quantize_ffn``,
+    DESIGN.md §8): block-wise per-(expert, tile) scales the fused-dequant
+    kernels consume. Routers and biases are never quantized."""
     router: jax.Array                  # (D, E) replicated
     w_gate: Optional[jax.Array] = None  # (E, D_l, F_l) glu
     w_up: Optional[jax.Array] = None    # (E, D_l, F_l) glu
@@ -55,6 +60,11 @@ class MoEParams(NamedTuple):
     b1: Optional[jax.Array] = None      # (E, F_l) mlp
     w2: Optional[jax.Array] = None      # (E, F_l, D_l) mlp
     b2: Optional[jax.Array] = None      # (E, D_l) mlp
+    w_gate_scale: Optional[jax.Array] = None  # (E, nD, nF)
+    w_up_scale: Optional[jax.Array] = None
+    w_down_scale: Optional[jax.Array] = None  # (E, nF, nD)
+    w1_scale: Optional[jax.Array] = None
+    w2_scale: Optional[jax.Array] = None
 
 
 class MoEStatic(NamedTuple):
@@ -160,25 +170,49 @@ def hexa_moe_island(
     )
     ri = build_reindex(r.expert_idx, r.gates, ms.num_experts, cfg.blk)
 
+    # True-quantized expert weights (int8/fp8 payloads + block scales,
+    # DESIGN.md §8): the scales are NOT sharded congruently with a
+    # sliced weight, so the path requires whole expert weights per device
+    # (serving without TP over experts, or the per-device hetero_exec
+    # programs). QAT (cfg.quant) fake-quants the gathered weights instead
+    # and composes with any sharding.
+    quantized = p.w_gate_scale is not None or p.w1_scale is not None
+    if quantized and (fsdp or tp is not None):
+        raise NotImplementedError(
+            "true-quantized expert weights require ungathered whole-expert "
+            "layouts (no fsdp/tp over expert weights); use cfg.quant (QAT "
+            "fake-quant) on sharded meshes"
+        )
+
+    def maybe_fq(w):
+        if w is None or quantized or cfg.quant == "none":
+            return w
+        from repro.quant.core import fake_quant
+        return fake_quant(w, cfg.quant, cfg.quant_tile)
+
     tp_w = tp if dc else None  # data-centric: gather the weights' TP factor
     name = checkpoint_name  # pipeline-shared cache tagging
     if ms.glu:
-        wg = name(_ag(_ag(p.w_gate, fsdp, 1), tp_w, 2), "gathered_w")
-        wu = name(_ag(_ag(p.w_up, fsdp, 1), tp_w, 2), "gathered_w")
-        wd = name(_ag(_ag(p.w_down, fsdp, 2), tp_w, 1), "gathered_w")
+        wg = name(maybe_fq(_ag(_ag(p.w_gate, fsdp, 1), tp_w, 2)), "gathered_w")
+        wu = name(maybe_fq(_ag(_ag(p.w_up, fsdp, 1), tp_w, 2)), "gathered_w")
+        wd = name(maybe_fq(_ag(_ag(p.w_down, fsdp, 2), tp_w, 1)), "gathered_w")
+        scales = ((p.w_gate_scale, p.w_up_scale, p.w_down_scale)
+                  if quantized else None)
         y = espec.moe_glu(
-            x, ri, wg, wu, wd, act=ms.act, impl=cfg.impl, fused=cfg.fused_ffn
+            x, ri, wg, wu, wd, scales=scales, act=ms.act, impl=cfg.impl,
+            fused=cfg.fused_ffn,
         )
     else:
-        w1 = name(_ag(_ag(p.w1, fsdp, 1), tp_w, 2), "gathered_w")
-        w2 = name(_ag(_ag(p.w2, fsdp, 2), tp_w, 1), "gathered_w")
+        w1 = name(maybe_fq(_ag(_ag(p.w1, fsdp, 1), tp_w, 2)), "gathered_w")
+        w2 = name(maybe_fq(_ag(_ag(p.w2, fsdp, 2), tp_w, 1)), "gathered_w")
         # (E, F_l) bias: local TP slice adds locally; dc gathers it full.
         b1 = _ag(p.b1, tp_w, 1)
         b2 = _ag(p.b2, fsdp, 1)
         if not dc:
             b2 = _mask_rank0(b2, tp)
+        scales = (p.w1_scale, p.w2_scale) if quantized else None
         y = espec.moe_mlp(
-            x, ri, w1, b1, w2, b2, act=ms.act, impl=cfg.impl,
+            x, ri, w1, b1, w2, b2, scales=scales, act=ms.act, impl=cfg.impl,
             fused=cfg.fused_ffn,
         )
 
@@ -219,6 +253,10 @@ def ep_moe_island(
     exactly zero; they may still occupy capacity slots (the EP baseline's
     capacity buffer is exactly the redundancy the paper removes, so the
     masked path is not optimised further here)."""
+    if p.w_gate_scale is not None or p.w1_scale is not None:
+        raise NotImplementedError(
+            "the EP baseline does not support quantized expert weights"
+        )
     tp = cfg.axes(mesh)["tp"]
     ep = mesh.shape[tp] if tp else 1
     e, k = ms.num_experts, ms.top_k
@@ -459,6 +497,18 @@ def _param_specs(p: MoEParams, ms: MoEStatic, cfg: ParallelConfig, mesh: Mesh,
     return MoEParams(**{name: spec_of(name) for name in MoEParams._fields})
 
 
+#: Block-wise scale leaves of quantized expert weights stay replicated —
+#: their (E, n1, n2) blocks do not tile congruently under arbitrary
+#: weight sharding, and the quantized path requires whole-expert layouts
+#: anyway (see hexa_moe_island's guard).
+_SCALE_LOGICAL = {
+    "w_gate_scale": (None, None, None),
+    "w_up_scale": (None, None, None),
+    "w_down_scale": (None, None, None),
+    "w1_scale": (None, None, None),
+    "w2_scale": (None, None, None),
+}
+
 MOE_PARAM_LOGICAL = {
     "router": (None, None),
     "w_gate": (None, "fsdp", "tp"),
@@ -468,6 +518,7 @@ MOE_PARAM_LOGICAL = {
     "b1": (None, "tp"),
     "w2": (None, "tp", "fsdp"),
     "b2": (None, "fsdp"),
+    **_SCALE_LOGICAL,
 }
 
 EP_PARAM_LOGICAL = {
@@ -479,6 +530,7 @@ EP_PARAM_LOGICAL = {
     "b1": ("tp", None),
     "w2": ("tp", None, None),
     "b2": ("tp", None),
+    **_SCALE_LOGICAL,
 }
 
 

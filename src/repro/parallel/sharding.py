@@ -94,6 +94,15 @@ class ParallelConfig:
                           the chooser).
       device_latencies  — heterogeneous proxy latencies (core.hetero t_i);
                           shrink the chooser's effective TP group size.
+    Quantization (DESIGN.md §8):
+      quant      — "none" | "int8" | "fp8": QAT fake-quant of the expert
+                   weights inside the MoE islands (quant.core.fake_quant,
+                   straight-through grads; routers/dense layers untouched).
+                   Ignored when the params already carry true int8/fp8
+                   payloads + '<name>_scale' leaves (serving-side
+                   quant.core.quantize_lm_params) — those dispatch the
+                   fused-dequant kernels directly.
+      quant_tile — block size of the per-(expert, tile) scales.
     Pipeline-shared cache realisation (models.lm unrolled layer loop):
       cache_layers — gathered-period residency bound for the prefetching
                      cache (one entry = one period's MoE layers; 2 = double
@@ -130,6 +139,8 @@ class ParallelConfig:
     device_latencies: Optional[Tuple[float, ...]] = None
     cache_layers: int = 0
     hetero_plan: Optional[Any] = None  # core.hetero.HeteroPlan
+    quant: str = "none"           # expert-weight QAT: none | int8 | fp8
+    quant_tile: int = 128         # block size of the per-(expert,tile) scales
 
     def axes(self, mesh: Mesh) -> dict:
         names = list(mesh.axis_names)

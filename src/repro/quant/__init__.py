@@ -1,0 +1,20 @@
+"""Quantization subsystem (DESIGN.md §8): block-wise int8/fp8 expert
+weights fused into the ES kernels, int8 paged-KV payloads, and the STE
+training path. ``quant.core`` is the single rounding/clipping convention
+for the repo; ``optim.compression`` re-exports its int8 helpers."""
+from repro.quant.core import (  # noqa: F401
+    EXPERT_WEIGHT_KEYS,
+    QUANT_FORMATS,
+    dequant_tile,
+    dequantize_blockwise,
+    dequantize_int8,
+    dequantize_rows,
+    fake_quant,
+    ffn_scales,
+    quant_bits,
+    quantize_blockwise,
+    quantize_ffn,
+    quantize_int8,
+    quantize_lm_params,
+    quantize_rows,
+)

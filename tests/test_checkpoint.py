@@ -119,6 +119,47 @@ def test_restore_applies_dtype_views(tmp_path):
     _assert_trees_equal(tree, restored)
 
 
+def test_mixed_dtype_tree_roundtrip(tmp_path):
+    """int8 payload + f32 scale + fp8 leaves (a quantized-expert tree,
+    ISSUE 5) round-trip bit-exactly with their dtypes intact."""
+    rng = np.random.default_rng(0)
+    tree = {
+        "ffn": {
+            "w_gate": jnp.asarray(
+                rng.integers(-127, 128, size=(2, 4, 8)), jnp.int8),
+            "w_gate_scale": jnp.asarray(
+                rng.random((2, 1, 1)), jnp.float32),
+            "w_up": jnp.asarray(rng.random((2, 4, 8)),
+                                jnp.float8_e4m3fn),
+            "router": jnp.asarray(rng.random((4, 2)), jnp.float32),
+        },
+        "step": jnp.asarray(3, jnp.int32),
+    }
+    manager.save(str(tmp_path), 7, tree)
+    restored, _ = manager.restore(str(tmp_path), 7, tree)
+    _assert_trees_equal(tree, restored)
+    assert restored["ffn"]["w_gate"].dtype == jnp.int8
+    assert restored["ffn"]["w_up"].dtype == jnp.float8_e4m3fn
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    """A target structure whose leaf dtype disagrees with the checkpoint
+    fails loudly instead of silently casting (the failure mode that would
+    corrupt int8 payload / f32 scale pairs)."""
+    tree = {"w": jnp.asarray([1, -2, 3], jnp.int8),
+            "s": jnp.asarray([0.5], jnp.float32)}
+    manager.save(str(tmp_path), 1, tree)
+    wrong = {"w": jnp.asarray([1.0, -2.0, 3.0], jnp.float32),
+             "s": jnp.asarray([0.5], jnp.float32)}
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        manager.restore(str(tmp_path), 1, wrong)
+    # manifest records the logical dtypes
+    with open(tmp_path / "step_00000001" / "manifest.json") as f:
+        m = json.load(f)
+    assert m["dtypes"] == ["float32", "int8"] or m["dtypes"] == [
+        "int8", "float32"]
+
+
 def test_manifest_is_valid_json(tmp_path):
     manager.save(str(tmp_path), 4, _tree(), meta={"note": "hi"})
     with open(tmp_path / "step_00000004" / "manifest.json") as f:

@@ -12,6 +12,7 @@ block is grafted onto a tiny decode-capable LM)."""
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -247,6 +248,64 @@ def test_window_page_reclamation():
     assert server.pool.total_allocs == 12
     server.pool.assert_consistent()
     assert server.pool.free_pages == 2 * maxp
+
+
+def test_int8_kv_decode_parity_and_capacity():
+    """int8 paged-KV (ISSUE 5, DESIGN.md §8): the quantized-cache server
+    stays token-identical to its own full-precision run under greedy
+    sampling (per-row scales keep the quantization error far inside the
+    pinned greedy-argmax margin on this matrix), while the smaller page
+    bytes make an equal-HBM PagePool admit measurably more concurrent
+    requests."""
+    from repro.parallel.cache import PagePool
+
+    cfg = _config("qwen3-moe-30b-a3b")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    reqs = _requests(cfg, N_REQ, seed=11)
+    maxp = MAX_SEQ // 4
+
+    def run_server(kv_quant):
+        server = serve.PagedServer(
+            cfg, pcfg, None, num_slots=NUM_SLOTS, page_size=4,
+            num_pages=1 + NUM_SLOTS * maxp, max_pages_per_slot=maxp,
+            params=params, prefill_chunk=5, kv_quant=kv_quant,
+        )
+        for r in reqs:
+            server.submit(dataclasses.replace(r, out=[]))
+        done = server.run()
+        server.pool.assert_consistent()
+        assert len(done) == N_REQ
+        return server, {r.rid: r.out for r in done}
+
+    srv_fp, out_fp = run_server(None)
+    srv_q, out_q = run_server("int8")
+    assert out_q == out_fp, "int8 KV diverged from its own fp run"
+    # the int8 cache really is int8 + scales
+    attn_pos = next(i for i in range(cfg.period)
+                    if cfg.layer_kind(i) == "attn")
+    entry = srv_q.cache["layers"][attn_pos]
+    assert entry["k"].dtype == jnp.int8 and "k_scale" in entry
+
+    # equal-HBM admission capacity: same byte budget -> more int8 pages ->
+    # more concurrently admissible requests
+    pb_fp = lm.paged_kv_page_bytes(cfg, 4, None)
+    pb_q = lm.paged_kv_page_bytes(cfg, 4, "int8")
+    assert srv_fp.page_bytes == pb_fp and srv_q.page_bytes == pb_q
+    budget = 24 * pb_fp
+    pool_fp = PagePool(1 + budget // pb_fp, page_bytes=pb_fp)
+    pool_q = PagePool(1 + budget // pb_q, page_bytes=pb_q)
+    need = 4  # worst-case pages of a representative request
+
+    def capacity(pool):
+        n = 0
+        while pool.try_reserve(need):
+            n += 1
+        return n
+
+    cap_fp, cap_q = capacity(pool_fp), capacity(pool_q)
+    assert cap_q > cap_fp, (cap_q, cap_fp)
+    assert cap_q * pb_q * need <= budget + need * pb_q  # still within HBM
 
 
 def test_prefill_chunk_size_is_invisible():
