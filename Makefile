@@ -10,7 +10,8 @@ bench:
 	JAX_PLATFORMS=cpu $(PY) benchmarks/run.py --quick
 
 # Every `DESIGN.md §N` citation in src/ must resolve to a `## §N` heading,
-# and every public API in parallel/ + runtime/ must carry a docstring.
+# and every public API in parallel/ + runtime/ + quant/ + launch/ must
+# carry a docstring.
 docs-check:
 	$(PY) scripts/docs_check.py
 
@@ -26,8 +27,10 @@ bench-check:
 		--require hetero_exec/model_centric/proportional \
 		--require serve/paged/tokens_per_s \
 		--require serve/dense/tokens_per_s \
+		--require serve/prefix/hit_rate \
 		--require quant/esffn/bytes \
 		--lt serve/paged/kv_cache_bytes:serve/dense/kv_cache_bytes \
+		--lt serve/prefix/ttft/cached:serve/prefix/ttft/uncached \
 		--lt quant/esffn/bytes/int8:quant/esffn/bytes/bf16 \
 		--lt quant/crossover/tokens/int8:quant/crossover/tokens/bf16 \
 		--lt quant/kv/admitted/fp:quant/kv/admitted/int8

@@ -20,7 +20,9 @@ python -m pytest -x -q
 # runs the Eq. 1/2 uneven splits for real and asserts proportional <= uniform
 # under simulated skew; the serve suite runs the mixed-length workload
 # through the dense and paged drivers and asserts paged uses less peak KV
-# cache with no tokens/s regression; the quant suite asserts int8 fused-FFN
+# cache with no tokens/s regression, then the high-duplicate prefix
+# workload and asserts prefix-cached TTFT < uncached at a real hit-rate;
+# the quant suite asserts int8 fused-FFN
 # bytes < bf16, the crossover shift, and the equal-HBM paged-KV admission
 # gain), so the harness and the machine-readable perf trajectory can't
 # bit-rot.

@@ -1,3 +1,6 @@
+"""Multi-pod dry-run driver: compile (not execute) the paper-scale
+training/decode cells on a host-platform device farm, reporting per-cell
+parallel-config choices, HLO collective counts, and memory estimates."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ^ MUST precede any jax import: jax locks the device count on first init.
@@ -111,6 +114,8 @@ def find_loop_multipliers(hlo_text: str, n_periods: int) -> dict:
 
 
 def default_pcfg(cfg, shape, args) -> ParallelConfig:
+    """Pick the per-cell parallel mode/layout the way the paper's runtime
+    would: decode prefers model-centric when one TP shard fits HBM."""
     blk = 128  # MXU-aligned; padding <= E*(blk-1) stays <5% for all cells
     mode = args.mode
     if mode == "auto":
@@ -138,6 +143,8 @@ def default_pcfg(cfg, shape, args) -> ParallelConfig:
 
 
 def default_opt_cfg(cfg, n_chips) -> adamw.OptimizerConfig:
+    """Optimizer precision by memory pressure: bf16 state once fp32
+    master + moments would exceed the per-chip HBM budget."""
     pbytes14 = cfg.param_count() * 14
     if pbytes14 / n_chips > 12e9:
         return adamw.OptimizerConfig(state_dtype="bfloat16", master_fp32=False)
@@ -186,6 +193,8 @@ def _extract(compiled):
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, args) -> dict:
+    """Compile one (arch, shape) cell on the virtual mesh and return its
+    report row (mode, collectives, padding, memory estimates)."""
     import dataclasses
 
     cfg = cfglib.get_config(arch)
@@ -429,6 +438,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, args) -> dict:
 
 
 def main():
+    """CLI: dry-run one cell and print/append its JSON report row."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True, choices=list(SHAPES))

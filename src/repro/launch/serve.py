@@ -41,41 +41,75 @@ from repro.core import hetero as hetero_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_mesh
 from repro.models import lm
-from repro.parallel.cache import PagePool, page_shares
+from repro.parallel.cache import PagePool, PrefixIndex, page_shares
 from repro.parallel.sharding import ParallelConfig, split_tree, tree_shardings
 
 
 @dataclass
 class Request:
+    """One serving request: prompt tokens in, up to ``max_new`` generated
+    tokens out, sampled greedily at ``temperature`` 0 (the default) or
+    categorically under the request's own ``seed``."""
     rid: int
     prompt: np.ndarray           # (S_prompt,)
     max_new: int
     out: list = field(default_factory=list)
+    temperature: float = 0.0     # 0 = greedy argmax
+    seed: int = 0                # per-request sampling seed
 
 
 def _greedy(logits) -> np.ndarray:
     return np.asarray(jnp.argmax(logits[..., -1, :], axis=-1)).reshape(-1)
 
 
-def greedy_reference(cfg, pcfg, mesh, params, prompt, max_new, *,
+def next_token(logits_row, req: Request) -> int:
+    """Engine-independent next-token selection: greedy argmax at
+    ``temperature <= 0``, else categorical sampling at a key derived ONLY
+    from ``(req.seed, len(req.out))`` — the same seed threading in
+    ``BatchedServer``, ``PagedServer``, and the batch-1 reference, so a
+    request's sampled stream is a pure function of its own logits and
+    seed, never of its batch-mates, slot id, or engine
+    (tests/test_serve_parity.py pins this)."""
+    row = np.asarray(logits_row, np.float32).reshape(-1)
+    if req.temperature <= 0.0:
+        return int(np.argmax(row))
+    key = jax.random.fold_in(
+        jax.random.PRNGKey(req.seed), len(req.out))
+    return int(jax.random.categorical(
+        key, jnp.asarray(row) / req.temperature))
+
+
+def reference_stream(cfg, pcfg, mesh, params, req: Request, *,
                      max_seq: int, step=None) -> list[int]:
     """One-request-at-a-time dense-cache reference stream: batch-1 prefill
-    (token by token) then greedy decode — the ground truth the parity
-    matrix pins both batched servers against."""
+    (token by token) then decode through ``next_token`` — the ground truth
+    the parity matrix pins both batched servers against, for greedy AND
+    sampled requests."""
     if step is None:
         step = jax.jit(steps_lib.make_serve_step(
             cfg, pcfg, mesh, (1, 1, cfg.d_model)))
+    ref = dataclasses.replace(req, out=[])
     cache = lm.init_cache(cfg, 1, max_seq)
     logits = None
-    for tok in prompt:
+    for tok in ref.prompt:
         logits, cache = step(
             params, {"tokens": jnp.asarray([[tok]], jnp.int32)}, cache)
-    out = [int(_greedy(logits)[0])]
-    while len(out) < max_new:
+    ref.out.append(next_token(logits[0, -1], ref))
+    while len(ref.out) < ref.max_new:
         logits, cache = step(
-            params, {"tokens": jnp.asarray([[out[-1]]], jnp.int32)}, cache)
-        out.append(int(_greedy(logits)[0]))
-    return out
+            params, {"tokens": jnp.asarray([[ref.out[-1]]], jnp.int32)},
+            cache)
+        ref.out.append(next_token(logits[0, -1], ref))
+    return ref.out
+
+
+def greedy_reference(cfg, pcfg, mesh, params, prompt, max_new, *,
+                     max_seq: int, step=None) -> list[int]:
+    """Greedy ``reference_stream`` under the pre-sampling signature."""
+    return reference_stream(
+        cfg, pcfg, mesh, params,
+        Request(rid=-1, prompt=np.asarray(prompt), max_new=max_new),
+        max_seq=max_seq, step=step)
 
 
 # ---------------------------------------------------------------------------
@@ -143,7 +177,7 @@ class BatchedServer:
             {"tokens": jnp.asarray(tokens), "active": jnp.asarray(active)},
             self.cache,
         )
-        nxt = _greedy(logits)
+        nxt = np.asarray(logits)
         self.decode_times_s.append(time.perf_counter() - t0)
         done = []
         for slot, st in enumerate(self.slots):
@@ -151,7 +185,7 @@ class BatchedServer:
                 continue
             st.pos += 1
             if st.pos >= len(st.req.prompt):
-                st.req.out.append(int(nxt[slot]))
+                st.req.out.append(next_token(nxt[slot, -1], st.req))
                 if len(st.req.out) >= st.req.max_new:
                     done.append(st.req)
                     self.slots[slot] = None
@@ -177,11 +211,27 @@ class _PagedSlot:
     req: Request
     group: int
     order: int           # admission sequence (FIFO prefill priority)
-    need: int            # worst-case pages reserved at admission
+    need: int            # worst-case pages for the request
+    reserved: int        # pages reserved from the pool at admission
     pages: list = field(default_factory=list)  # phys page per logical (0 =
     pos: int = 0         # prompt tokens consumed       # reclaimed)
-    length: int = 0      # tokens written to the paged cache
+    length: int = 0      # tokens resident in the paged cache
     reclaimed: int = 0   # leading logical pages released behind the window
+    allocated: int = 0   # pool.alloc calls (reservations consumed)
+    matched: int = 0     # prefix-cache pages mapped in at refcount+1
+
+
+def derive_roles(token_counts) -> list[str]:
+    """Disaggregated prefill/decode role per device class (DESIGN.md §7):
+    the fastest class(es) — largest Eq. 1 token share — take the
+    compute-bound prefill role, the rest take the bandwidth-bound decode
+    role. Uniform (or single-class) plans collapse to ``"both"`` for every
+    class, which reduces the server to the single-loop engine."""
+    counts = list(token_counts)
+    if len(set(counts)) < 2:
+        return ["both"] * len(counts)
+    top = max(counts)
+    return ["prefill" if c == top else "decode" for c in counts]
 
 
 class PagedServer:
@@ -200,7 +250,8 @@ class PagedServer:
 
     def __init__(self, cfg, pcfg, mesh, *, num_slots: int, page_size: int,
                  num_pages: int, max_pages_per_slot: int, params,
-                 prefill_chunk: int = 16, plan=None, kv_quant=None):
+                 prefill_chunk: int = 16, plan=None, kv_quant=None,
+                 prefix_cache: bool = False, disagg: bool = False):
         self.cfg, self.mesh = cfg, mesh
         self.kv_quant = None if kv_quant in (None, "none") else kv_quant
         # The plan's Eq. 1 shares are honored as page budgets (below), not
@@ -256,11 +307,55 @@ class PagedServer:
             else None
         )
 
+        # Prefix sharing (DESIGN.md §7): a radix index over FULL prompt
+        # pages, each node holding one pool refcount. Only valid when every
+        # period layer is attention — recurrent layers carry per-slot state
+        # that pages do not capture, so a skipped prefix would silently
+        # decode from a zero recurrent state.
+        self.index = None
+        if prefix_cache:
+            if any(cfg.layer_kind(i) != "attn"
+                   for i in range(cfg.num_layers)):
+                raise ValueError(
+                    "prefix_cache requires an all-attention stack: "
+                    "recurrent layers keep per-slot state outside the KV "
+                    "pages, so a shared prefix cannot be skipped")
+            self.index = PrefixIndex(page_size)
+
+        # Disaggregated prefill/decode roles (DESIGN.md §7): each slot is
+        # tagged "prefill", "decode", or "both". Under a hetero plan the
+        # tag comes from the slot's device class via derive_roles; without
+        # one, an even half/half split. Single-role-class plans collapse to
+        # "both" everywhere == the single-loop engine (pinned by
+        # tests/test_disagg.py).
+        self.disagg = disagg
+        self.roles = ["both"] * num_slots
+        if disagg:
+            if plan is not None:
+                group_roles = derive_roles(plan.token_counts)
+                self.roles = [group_roles[self.groups[s]]
+                              for s in range(num_slots)]
+            else:
+                if num_slots < 2:
+                    raise ValueError("disagg needs >= 2 slots")
+                self.roles = ["prefill" if s < num_slots // 2 else "decode"
+                              for s in range(num_slots)]
+            if "prefill" in self.roles and "decode" not in self.roles:
+                raise ValueError(
+                    "disaggregated plan has prefill-only slots but no "
+                    "decode-capable slot — finished prefills could never "
+                    "hand off")
+
         self.table = np.zeros((num_slots, max_pages_per_slot), np.int32)
         self.serve_step = jax.jit(steps_lib.make_paged_serve_step(
             cfg, self.pcfg, mesh, (num_slots, 1, cfg.d_model), page_size))
         self.prefill_step = jax.jit(steps_lib.make_paged_prefill_step(
             cfg, self.pcfg, mesh, page_size))
+        # Handoff/CoW-copy steps are built lazily on first use: most runs
+        # never transfer a slot or copy a page, and tests monkeypatch the
+        # two eager steps above.
+        self._handoff_step = None
+        self._copy_step = None
         self.slots: list[Optional[_PagedSlot]] = [None] * num_slots
         self.queue: deque[Request] = deque()
         self.free = sorted(range(num_slots), reverse=True)
@@ -268,6 +363,14 @@ class PagedServer:
         self.admissions = 0
         self.admission_log: list[int] = []   # rids, in admission order
         self._order = 0
+        # Scheduler trace: ("admit", rid, slot), ("prefill_chunk", rid,
+        # slot, n), ("decode", (slots...)), ("transfer", rid, src, dst),
+        # ("finish", rid, slot) — the observable schedule the disagg
+        # invariants and degenerate-reduction tests pin.
+        self.trace: list[tuple] = []
+        self.ttft_s: dict[int, float] = {}   # rid -> first-token latency
+        self.transfers = 0
+        self._run_t0 = 0.0
 
     def _need_pages(self, req: Request) -> int:
         # cache rows written = prompt + fed-back outputs (the last
@@ -290,29 +393,88 @@ class PagedServer:
 
     # -- scheduling ticks -----------------------------------------------------
 
+    def _try_reserve_evicting(self, n: int, group: int) -> bool:
+        """``try_reserve`` with prefix-cache backpressure: when the free
+        budget is short, evict LRU refcount-1 trie nodes — pages only the
+        index still holds — back into the pool until the reservation fits
+        or the index runs dry."""
+        while not self.pool.try_reserve(n, group):
+            if self.index is None or not self.index.evict_lru(self.pool):
+                return False
+        return True
+
     def _admit(self):
-        """Strict FIFO: the queue head admits as soon as ANY free slot's
-        group can reserve its worst-case pages; nothing overtakes it
-        (head-of-line blocking is what makes FIFO starvation-free)."""
+        """Strict FIFO: the queue head admits as soon as ANY free
+        prefill-capable slot's group can reserve its worst-case pages;
+        nothing overtakes it (head-of-line blocking is what makes FIFO
+        starvation-free).
+
+        With the prefix cache on, admission first matches the prompt
+        against the radix index (capped at ``(plen - 1) // page_size``
+        pages so at least one suffix token always prefills and produces
+        the first-token logits), forks the matched pages — refcount+1,
+        zero budget cost, and eviction-proof from that moment — and only
+        reserves pages for the uncached remainder."""
         while self.queue and self.free:
             req = self.queue[0]
             need = self._need_pages(req)
+            matched: list[int] = []
+            if self.index is not None:
+                plen = len(req.prompt)
+                matched = self.index.match(
+                    req.prompt, (plen - 1) // self.page_size)
+                if matched:
+                    self.pool.fork(matched)
+            reserve_n = need - len(matched)
             slot = None
             for s in reversed(self.free):        # lowest slot id first
-                if self.pool.try_reserve(need, self.groups[s]):
+                if self.roles[s] == "decode":
+                    continue
+                if self._try_reserve_evicting(reserve_n, self.groups[s]):
                     slot = s
                     break
             if slot is None:
+                if matched:
+                    self.pool.release(matched)   # undo the admission forks
                 return
             self.queue.popleft()
             self.free.remove(slot)
-            self.cache = lm.reset_slot(self.cfg, self.cache, slot)
-            st = _PagedSlot(req, self.groups[slot], self._order, need)
+            m = len(matched) * self.page_size
+            self.cache = lm.reset_slot(self.cfg, self.cache, slot, length=m)
+            st = _PagedSlot(req, self.groups[slot], self._order, need,
+                            reserved=reserve_n, pages=list(matched),
+                            pos=m, length=m, matched=len(matched))
             self._order += 1
             self.admissions += 1
             self.admission_log.append(req.rid)
             self.table[slot, :] = 0
+            self.table[slot, :len(matched)] = matched
             self.slots[slot] = st
+            self.trace.append(("admit", req.rid, slot))
+
+    def _cow_page(self, slot: int, st: _PagedSlot, j: int):
+        """Copy-on-write guard: logical page ``j`` is about to be written
+        but its physical page is shared (refcount > 1). Reserve+alloc a
+        private replacement, copy the payload, repoint table and slot, and
+        surrender the shared reference. The scheduler's own write pattern
+        never triggers this — decode writes land strictly past the full
+        prompt pages the index shares — so this is the defensive pool-level
+        guarantee (exercised directly by tests/test_page_refcount.py)."""
+        if not self._try_reserve_evicting(1, st.group):
+            raise RuntimeError(
+                f"slot {slot}: cannot reserve a CoW page for logical "
+                f"page {j}")
+        st.reserved += 1
+        src = st.pages[j]
+        dst = self.pool.cow(src, st.group)
+        st.allocated += 1
+        if self._copy_step is None:
+            self._copy_step = jax.jit(
+                steps_lib.make_page_copy_step(self.cfg))
+        self.cache = self._copy_step(
+            self.cache, jnp.int32(src), jnp.int32(dst))
+        st.pages[j] = dst
+        self.table[slot, j] = dst
 
     def _ensure_pages(self, slot: int, st: _PagedSlot, length: int):
         """Back every position below ``length`` with a physical page,
@@ -320,9 +482,15 @@ class PagedServer:
         at once before a prefill tick (the bulk grant), one page at a
         decode boundary. Granting at use (not all at admission) is what
         lets window reclamation bound an SWA request's live pages below
-        its total page count."""
+        its total page count. The first page the coming write touches is
+        CoW-resolved if shared."""
+        j = st.length // self.page_size
+        if j < len(st.pages) and st.pages[j] != 0 \
+                and self.pool.refcount(st.pages[j]) > 1:
+            self._cow_page(slot, st, j)
         while (length - 1) // self.page_size >= len(st.pages):
             st.pages.append(self.pool.alloc(st.group))
+            st.allocated += 1
             self.table[slot, len(st.pages) - 1] = st.pages[-1]
 
     def _reclaim(self, slot: int, st: _PagedSlot):
@@ -345,15 +513,31 @@ class PagedServer:
     def _finish(self, slot: int, st: _PagedSlot, done: list):
         done.append(st.req)
         self.pool.release([p for p in st.pages if p != 0], st.group,
-                          unused_reserved=st.need - len(st.pages))
+                          unused_reserved=st.reserved - st.allocated)
         self.table[slot, :] = 0
         self.slots[slot] = None
         self.free.append(slot)
+        self.trace.append(("finish", st.req.rid, slot))
+
+    def _index_prompt(self, st: _PagedSlot):
+        """Insert the request's FULL prompt pages into the radix index at
+        prefill completion. Only whole pages go in (a partial page would
+        later be written by decode), and a window-reclaimed slot skips
+        insertion entirely — its leading pages are gone, so the chain from
+        the root would dangle. Decode writes land strictly past
+        ``plen // page_size`` pages, so indexed pages are immutable."""
+        if self.index is None or st.reclaimed > 0:
+            return
+        full = len(st.req.prompt) // self.page_size
+        if full > 0:
+            self.index.insert(st.req.prompt, st.pages[:full], self.pool)
 
     def _prefill_tick(self, done: list) -> bool:
-        """One chunk of the FIFO-oldest prefilling request."""
+        """One chunk of the FIFO-oldest prefilling request, restricted to
+        prefill-capable slots (all slots unless disaggregated)."""
         cand = [(st.order, slot, st) for slot, st in enumerate(self.slots)
-                if st is not None and st.pos < len(st.req.prompt)]
+                if st is not None and st.pos < len(st.req.prompt)
+                and self.roles[slot] != "decode"]
         if not cand:
             return False
         _, slot, st = min(cand)
@@ -373,16 +557,61 @@ class PagedServer:
         st.pos += n
         st.length += n
         self._reclaim(slot, st)
+        self.trace.append(("prefill_chunk", st.req.rid, slot, n))
         if st.pos == len(st.req.prompt):
-            st.req.out.append(int(np.argmax(np.asarray(last))))
+            self._index_prompt(st)
+            st.req.out.append(next_token(last, st.req))
+            self.ttft_s[st.req.rid] = time.perf_counter() - self._run_t0
             if len(st.req.out) >= st.req.max_new:
                 self._finish(slot, st, done)
         return True
 
+    def _handoff(self, src: int, dst: int):
+        if self._handoff_step is None:
+            self._handoff_step = jax.jit(
+                steps_lib.make_paged_handoff_step(self.cfg))
+        self.cache = self._handoff_step(
+            self.cache, jnp.int32(src), jnp.int32(dst))
+
+    def _transfer_tick(self) -> bool:
+        """Disaggregated handoff: move every prefill-role slot that has
+        finished its prompt into a free decode-capable slot. The KV pages
+        never move — the transfer is the page-table row plus the jitted
+        per-slot metadata (``len`` and any recurrent state), so its cost
+        is independent of context length."""
+        if not self.disagg:
+            return False
+        ready = sorted(
+            (st.order, src, st) for src, st in enumerate(self.slots)
+            if st is not None and self.roles[src] == "prefill"
+            and st.pos >= len(st.req.prompt))
+        moved = False
+        for _, src, st in ready:
+            dst = None
+            for s in sorted(self.free):
+                if self.roles[s] != "prefill":
+                    dst = s
+                    break
+            if dst is None:
+                break
+            self.free.remove(dst)
+            self._handoff(src, dst)
+            self.table[dst, :] = self.table[src]
+            self.table[src, :] = 0
+            self.slots[dst] = st
+            self.slots[src] = None
+            self.free.append(src)
+            self.transfers += 1
+            self.trace.append(("transfer", st.req.rid, src, dst))
+            moved = True
+        return moved
+
     def _decode_tick(self, done: list) -> bool:
-        """One decode macro-step over every slot past prefill."""
+        """One decode macro-step over every decode-capable slot past
+        prefill (a strict prefill-role slot waits for _transfer_tick)."""
         dec = [(slot, st) for slot, st in enumerate(self.slots)
-               if st is not None and st.pos >= len(st.req.prompt)]
+               if st is not None and st.pos >= len(st.req.prompt)
+               and self.roles[slot] != "prefill"]
         if not dec:
             return False
         tokens = np.zeros((self.num_slots, 1), np.int32)
@@ -401,11 +630,12 @@ class PagedServer:
              "active": jnp.asarray(active)},
             self.cache,
         )
-        nxt = _greedy(logits)
+        nxt = np.asarray(logits)
         self.decode_times_s.append(time.perf_counter() - t0)
+        self.trace.append(("decode", tuple(slot for slot, _ in dec)))
         for slot, st in dec:
             st.length += 1
-            st.req.out.append(int(nxt[slot]))
+            st.req.out.append(next_token(nxt[slot, -1], st.req))
             self._reclaim(slot, st)
             if len(st.req.out) >= st.req.max_new:
                 self._finish(slot, st, done)
@@ -414,18 +644,31 @@ class PagedServer:
     def run(self, max_steps: int = 100000) -> list[Request]:
         done: list[Request] = []
         steps = 0
+        self._run_t0 = time.perf_counter()
         while (self.queue or any(s is not None for s in self.slots)) \
                 and steps < max_steps:
             self._admit()
-            advanced = self._prefill_tick(done)
+            advanced = self._transfer_tick()
+            advanced |= self._prefill_tick(done)
             advanced |= self._decode_tick(done)
             if not advanced and not self.queue:
                 break
             steps += 1
         return done
 
+    def drop_prefix_cache(self) -> int:
+        """Release every page the radix index holds back to the pool
+        (leak-check draining; also the operator's cache-flush)."""
+        if self.index is None:
+            return 0
+        return self.index.clear(self.pool)
+
     def stats(self) -> dict:
-        return {**self.pool.stats(), "admissions": self.admissions}
+        out = {**self.pool.stats(), "admissions": self.admissions,
+               "transfers": self.transfers}
+        if self.index is not None:
+            out["prefix"] = self.index.stats()
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -433,6 +676,9 @@ class PagedServer:
 # ---------------------------------------------------------------------------
 
 def main(argv=None):
+    """CLI serving driver: dense or paged continuous batching with
+    optional hetero plan, weight/KV quantization, prefix cache, and
+    disaggregated roles."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -478,9 +724,22 @@ def main(argv=None):
                     help="store paged-KV pages as int8 + per-row scales — "
                          "smaller pages, more admitted requests per HBM "
                          "byte (--paged only, DESIGN.md §8)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share full prompt pages across requests through "
+                         "a CoW radix index — repeated prefixes admit at "
+                         "refcount+1 and only prefill their uncached "
+                         "suffix (--paged only, DESIGN.md §7)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="split slots into prefill and decode roles; "
+                         "finished prefills hand off by page-table "
+                         "transfer, no KV copy (--paged only, DESIGN.md "
+                         "§7). Role shares follow --hetero-latencies "
+                         "classes, else half/half")
     args = ap.parse_args(argv)
     if args.kv_quant != "none" and not args.paged:
         ap.error("--kv-quant requires --paged")
+    if (args.prefix_cache or args.disagg) and not args.paged:
+        ap.error("--prefix-cache/--disagg require --paged")
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -553,7 +812,8 @@ def main(argv=None):
             page_size=args.page_size, num_pages=pages,
             max_pages_per_slot=cdiv(args.max_seq, args.page_size),
             params=params, prefill_chunk=args.prefill_chunk, plan=plan,
-            kv_quant=args.kv_quant,
+            kv_quant=args.kv_quant, prefix_cache=args.prefix_cache,
+            disagg=args.disagg,
         )
     else:
         server = BatchedServer(cfg, pcfg, mesh, num_slots=num_slots,
@@ -579,10 +839,21 @@ def main(argv=None):
               f"{np.percentile(ts, 90) * 1e3:.1f}ms over {len(ts)} steps")
     if args.paged:
         st = server.stats()
+        server.drop_prefix_cache()
         print(f"[serve] page pool: {st['peak_in_use_pages']} peak pages "
               f"({st['peak_in_use_bytes'] / 1024:.1f} KiB KV resident) of "
               f"{st['num_pages'] - 1} allocatable; "
-              f"{st['total_allocs']} allocs, leak-free={st['free_pages'] == st['num_pages'] - 1}")
+              f"{st['total_allocs']} allocs, leak-free="
+              f"{server.pool.stats()['free_pages'] == st['num_pages'] - 1}")
+        if "prefix" in st:
+            pf = st["prefix"]
+            hit = pf["hit_tokens"] / max(pf["lookup_tokens"], 1)
+            print(f"[serve] prefix cache: {hit:.0%} token hit-rate over "
+                  f"{pf['lookups']} lookups, {pf['cached_pages']} pages "
+                  f"held at peak, {pf['evictions']} LRU evictions")
+        if args.disagg:
+            print(f"[serve] disagg: roles {server.roles}, "
+                  f"{server.transfers} page-table handoffs")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     return done

@@ -93,6 +93,8 @@ def chunked_xent(x, params, cfg: ModelConfig, labels, mask,
 
 def make_loss_fn(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Optional[Mesh],
                  batch_shape3):
+    """Build the training loss closure: LM forward (hidden-state output) +
+    chunked cross-entropy + MoE aux/z losses, weighted per ``cfg.moe``."""
     x_spec = activation_spec(batch_shape3, pcfg, mesh)
     aw = cfg.moe.aux_weight if cfg.moe else 0.0
     zw = cfg.moe.z_weight if cfg.moe else 0.0
@@ -124,6 +126,8 @@ def make_train_step(
     opt_cfg: adamw.OptimizerConfig,
     batch_shape3,
 ):
+    """Build the jittable train step: value_and_grad of ``make_loss_fn``
+    followed by the AdamW update, returning (params, opt_state, metrics)."""
     loss_fn = make_loss_fn(cfg, pcfg, mesh, batch_shape3)
 
     def train_step(params, opt_state, batch):
@@ -140,6 +144,8 @@ def make_train_step(
 
 def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
                       mesh: Optional[Mesh], batch_shape3):
+    """Build the dense-cache prefill step: one forward over the whole
+    prompt batch, writing K/V rows into the ``(slots, max_seq)`` cache."""
     x_spec = activation_spec(batch_shape3, pcfg, mesh)
 
     def prefill_step(params, inputs, cache):
@@ -154,6 +160,8 @@ def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
 
 def make_serve_step(cfg: ModelConfig, pcfg: ParallelConfig,
                     mesh: Optional[Mesh], batch_shape3):
+    """Build the dense-cache decode macro-step: one token per occupied
+    slot (``active`` masks the rest), returning last-position logits."""
     # decode tokens are replicated over TP (S=1 can't shard).
     x_spec = activation_spec(batch_shape3, pcfg, mesh)
 
@@ -240,6 +248,64 @@ def _make_paged_prefill_chunk(cfg: ModelConfig, pcfg: ParallelConfig,
                 {"layers": sub["layers"], "len": new_len})
 
     return prefill_step
+
+
+def make_paged_handoff_step(cfg: ModelConfig):
+    """Prefill→decode role handoff (DESIGN.md §7 disaggregation): move one
+    finished-prefill sequence from slot ``src`` to slot ``dst`` as a PURE
+    page-table/metadata transfer — the KV pages live in the shared pool and
+    are reached through the (host-side) table row the scheduler copies, so
+    NO K/V bytes move. On-device state that IS per-slot moves here: the
+    ``len`` entry and, for hybrid stacks, the recurrent mixer state rows
+    (mamba conv/ssm, xlstm c/n/h/m) — constant-size, orders of magnitude
+    below the KV it avoids copying. ``src``/``dst`` are traced int32
+    scalars so slot refill never retraces."""
+    is_attn = [cfg.layer_kind(p) == "attn" for p in range(cfg.period)]
+
+    def handoff(cache, src, dst):
+        def move_rows(v):
+            row = jax.lax.dynamic_index_in_dim(v, src, axis=1, keepdims=True)
+            v = jax.lax.dynamic_update_slice_in_dim(v, row, dst, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(
+                v, jnp.zeros_like(row), src, axis=1)
+
+        layers = [
+            cache["layers"][p] if is_attn[p]
+            else jax.tree.map(move_rows, cache["layers"][p])
+            for p in range(cfg.period)
+        ]
+        ln = cache["len"]
+        val = jax.lax.dynamic_index_in_dim(ln, src, axis=0, keepdims=True)
+        ln = jax.lax.dynamic_update_slice(ln, val, (dst,))
+        ln = jax.lax.dynamic_update_slice(
+            ln, jnp.zeros((1,), ln.dtype), (src,))
+        return {"layers": layers, "len": ln}
+
+    return handoff
+
+
+def make_page_copy_step(cfg: ModelConfig):
+    """Copy one physical page's K/V rows (and int8 scale rows) from ``src``
+    to ``dst`` across every attention pool — the device half of
+    ``parallel.cache.PagePool.cow``: the scheduler allocates ``dst`` from
+    the writer's reservation, copies the shared payload here, and repoints
+    the writer's table entry so the refcount>1 original is never written
+    (DESIGN.md §7)."""
+    is_attn = [cfg.layer_kind(p) == "attn" for p in range(cfg.period)]
+
+    def copy_page(cache, src, dst):
+        def cp(v):
+            row = jax.lax.dynamic_index_in_dim(v, src, axis=1, keepdims=True)
+            return jax.lax.dynamic_update_slice_in_dim(v, row, dst, axis=1)
+
+        layers = [
+            jax.tree.map(cp, cache["layers"][p]) if is_attn[p]
+            else cache["layers"][p]
+            for p in range(cfg.period)
+        ]
+        return {"layers": layers, "len": cache["len"]}
+
+    return copy_page
 
 
 def _make_paged_prefill_scan(cfg: ModelConfig, pcfg: ParallelConfig,

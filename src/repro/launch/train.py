@@ -46,6 +46,8 @@ from repro.runtime.straggler import StragglerConfig, StragglerMonitor
 
 
 def build_state(cfg, pcfg, mesh, opt_cfg, seed):
+    """Init sharded params (hetero-plan-padded when attached) + AdamW
+    optimizer state."""
     params_p = lm.init_params(
         jax.random.PRNGKey(seed), cfg, plan=pcfg.hetero_plan
     )
@@ -58,6 +60,8 @@ def build_state(cfg, pcfg, mesh, opt_cfg, seed):
 
 
 def main(argv=None):
+    """CLI training driver: synthetic-data train loop with optional mesh,
+    hetero plan, straggler monitor, and QAT fake-quant."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",

@@ -354,10 +354,25 @@ def paged_kv_page_bytes(
     return n_attn * 2 * page_size * row
 
 
-def reset_slot(cfg: ModelConfig, cache: dict, slot: int) -> dict:
-    """Zero one slot's length and recurrent state so a new request can
-    reuse it (continuous-batching slot refill). K/V needs no scrub: the
-    dense buffer and freshly-granted pages are both masked by ``len``."""
+def reset_slot(cfg: ModelConfig, cache: dict, slot: int,
+               length: int = 0) -> dict:
+    """Reset one slot's length and zero its recurrent state so a new
+    request can reuse it (continuous-batching slot refill). K/V needs no
+    scrub: the dense buffer and freshly-granted pages are both masked by
+    ``len``.
+
+    ``length > 0`` is the prefix-sharing admission path (DESIGN.md §7):
+    the slot starts with ``length`` tokens already resident — whole pages
+    matched by the radix index and forked into the slot's page table at
+    refcount+1 — so the next chunk-prefill continues at absolute position
+    ``length`` instead of re-prefilling the shared prefix. The shared
+    pages themselves MUST NOT be scrubbed here: other slots and the index
+    still read them. Only valid for all-attention stacks (recurrent state
+    is per-slot and cannot be borrowed page-wise)."""
+    if length and any(cfg.layer_kind(p) != "attn" for p in range(cfg.period)):
+        raise ValueError(
+            "prefix-sharing reset (length > 0) requires an all-attention "
+            "stack: recurrent per-slot state has no paged representation")
     layers = []
     for pos in range(cfg.period):
         tree = cache["layers"][pos]
@@ -368,7 +383,8 @@ def reset_slot(cfg: ModelConfig, cache: dict, slot: int) -> dict:
                 lambda v: v.at[:, slot].set(jnp.zeros_like(v[:, slot])),
                 tree,
             ))
-    return {"layers": layers, "len": cache["len"].at[slot].set(0)}
+    return {"layers": layers,
+            "len": cache["len"].at[slot].set(jnp.int32(length))}
 
 
 # ---------------------------------------------------------------------------

@@ -320,7 +320,11 @@ def apply_attention(
         # causally over the gathered logical view — prior chunks of the
         # same prompt plus the intra-chunk triangle. ctx.positions already
         # carries the absolute offsets (cache_len + arange), so RoPE and
-        # the window mask line up with decode exactly.
+        # the window mask line up with decode exactly. Prefix-sharing
+        # admission reuses this path unchanged: cache_len starts at the
+        # matched prefix length, so only the uncached suffix is written —
+        # the shared (refcount>1) prefix pages are read through the table
+        # but never scattered into.
         from repro.kernels.paged_attention import NEG_INF
         from repro.quant.core import dequantize_rows, quantize_rows
 
@@ -392,6 +396,12 @@ def apply_attention(
         # not advance. The read gathers K/V page-wise through the table
         # (kernels.paged_attention), window masked by absolute position —
         # paged storage never rolls, unlike the dense windowed buffer.
+        # CoW invariant (prefix sharing): the scheduler guarantees the
+        # write-target page has refcount 1 — decode must never write into
+        # a refcount>1 page, so ``PagedServer._ensure_pages`` CoW-copies
+        # (``PagePool.cow`` + ``make_page_copy_step``) BEFORE repointing
+        # the table row this step reads. Shared prefix pages are therefore
+        # read-only from this kernel's point of view.
         from repro.kernels.paged_attention import paged_attention
         from repro.quant.core import quantize_rows
 

@@ -173,8 +173,9 @@ def gather_ffn_params(ffn: dict, cfg, mesh) -> dict:
 # ---------------------------------------------------------------------------
 
 class PagePool:
-    """Host-side free-list allocator + residency accounting over the shared
-    KV page pool of ``models.lm.init_paged_cache`` (DESIGN.md §7).
+    """Host-side free-list allocator + copy-on-write refcounts + residency
+    accounting over the shared KV page pool of
+    ``models.lm.init_paged_cache`` (DESIGN.md §7).
 
     Physical page 0 is the write sink for inactive slots and is never
     allocated; ``num_pages - 1`` pages are allocatable. The scheduler's
@@ -185,13 +186,28 @@ class PagePool:
         preemption-free decode can never hit an empty pool mid-request;
       * ``alloc(group)`` converts one reserved page into a physical page id
         (a chunk's worth at prefill, on demand at decode page boundaries);
-      * ``release(pages, group, unused_reserved)`` returns everything at
-        completion.
+      * ``release(pages, group, unused_reserved)`` drops one reference per
+        page at completion.
+
+    Copy-on-write prefix sharing (DESIGN.md §7) layers refcounts on top:
+    ``alloc`` hands out a page at refcount 1 owned by its group; ``fork``
+    maps the same physical page into another holder at refcount+1 (the
+    radix prefix index and every borrowing slot hold one reference each —
+    a fork consumes NO page budget, which is the whole capacity win);
+    ``release`` decrements and only a 0-refcount page returns to the free
+    list (credited to its OWNER group); ``cow`` is the write trigger —
+    writing a refcount>1 page surrenders the shared reference and converts
+    one reservation into a private copy's page id. Releasing a page below
+    refcount 0 (the classic double-free) raises instead of corrupting the
+    free list.
 
     Heterogeneous plans (DESIGN.md §6) express per-device capacity as
     per-group page-pool ``shares`` instead of masked tail slots: physical
     pages stay fungible in one free list, but each group's
-    reserve/alloc/release is budgeted against its own share.
+    reserve/alloc/release is budgeted against its own share. A forked page
+    stays charged to the group that allocated it until its LAST reference
+    dies, so cross-group sharing can pin another group's budget — the
+    documented cost of keeping pages fungible.
 
     Per-group invariant, checked by ``assert_consistent``:
     ``free + reserved_unallocated + in_use == share``.
@@ -216,8 +232,12 @@ class PagePool:
         self._free = list(self.shares)
         self._reserved = [0] * g
         self._in_use = [0] * g
+        self._ref: Dict[int, int] = {}    # page -> live references
+        self._owner: Dict[int, int] = {}  # page -> group charged for it
         self.total_allocs = 0
         self.total_frees = 0
+        self.total_forks = 0
+        self.total_cow_copies = 0
         self.peak_in_use_pages = 0
 
     # -- admission / allocation ---------------------------------------------
@@ -234,7 +254,8 @@ class PagePool:
         return True
 
     def alloc(self, group: int = 0) -> int:
-        """Turn one reserved page into a physical page id (>= 1)."""
+        """Turn one reserved page into a physical page id (>= 1) at
+        refcount 1, owned by (charged to) ``group``."""
         if self._reserved[group] <= 0:
             raise RuntimeError(
                 f"group {group} allocating beyond its reservation"
@@ -243,23 +264,70 @@ class PagePool:
         self._in_use[group] += 1
         self.total_allocs += 1
         page = self._free_list.pop()
+        self._ref[page] = 1
+        self._owner[page] = group
         self.peak_in_use_pages = max(self.peak_in_use_pages,
                                      self.in_use_pages)
         return page
 
-    def release(self, pages: Sequence[int], group: int = 0,
-                unused_reserved: int = 0) -> None:
-        """Return a finished request's physical pages and any reservation
-        it never converted."""
+    def fork(self, pages: Sequence[int]) -> None:
+        """Add one reference to each live page (prefix sharing: a borrowing
+        slot or the radix index maps the page without copying it). Costs no
+        group budget — that is the capacity win. Forking a free page or the
+        sink is a scheduler bug and raises."""
         for p in pages:
             if not 1 <= p < self.num_pages:
                 raise ValueError(f"bad page id {p}")
-            self._free_list.append(p)
-        self._in_use[group] -= len(pages)
+            if self._ref.get(p, 0) <= 0:
+                raise RuntimeError(f"fork of free page {p}")
+        for p in pages:
+            self._ref[p] += 1
+            self.total_forks += 1
+
+    def refcount(self, page: int) -> int:
+        """Live references on ``page`` (0 = free)."""
+        return self._ref.get(page, 0)
+
+    def cow(self, page: int, group: int = 0) -> int:
+        """Write trigger for a shared page: at refcount 1 the caller owns
+        the page exclusively and may write in place (returned unchanged);
+        at refcount>1 the caller's reference is surrendered and one of its
+        ``group`` reservations converts into a fresh private page id. The
+        caller must copy the page's payload (``launch.steps.
+        make_page_copy_step``) and repoint its table entry."""
+        if self._ref.get(page, 0) <= 0:
+            raise RuntimeError(f"cow on free page {page}")
+        if self._ref[page] == 1:
+            return page
+        self._ref[page] -= 1
+        self.total_cow_copies += 1
+        return self.alloc(group)
+
+    def release(self, pages: Sequence[int], group: int = 0,
+                unused_reserved: int = 0) -> None:
+        """Drop one reference per page (returning 0-refcount pages to the
+        free list, credited to their owner group) plus any reservation the
+        caller never converted. Releasing a free page raises — the
+        double-free guard the refcount layer exists for."""
+        for p in pages:
+            if not 1 <= p < self.num_pages:
+                raise ValueError(f"bad page id {p}")
+            if self._ref.get(p, 0) <= 0:
+                raise RuntimeError(
+                    f"double release of page {p} (refcount already 0)"
+                )
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                owner = self._owner.pop(p)
+                self._free_list.append(p)
+                self._in_use[owner] -= 1
+                self._free[owner] += 1
+                self.total_frees += 1
         self._reserved[group] -= unused_reserved
-        self._free[group] += len(pages) + unused_reserved
-        self.total_frees += len(pages)
-        if self._in_use[group] < 0 or self._reserved[group] < 0:
+        self._free[group] += unused_reserved
+        if self._reserved[group] < 0:
             raise RuntimeError(f"group {group} over-released")
 
     # -- accounting -----------------------------------------------------------
@@ -292,6 +360,15 @@ class PagePool:
         assert len(self._free_list) == (self.num_pages - 1
                                         - self.in_use_pages)
         assert len(set(self._free_list)) == len(self._free_list)
+        # refcount layer: live pages and the free list partition the pool
+        assert all(r > 0 for r in self._ref.values()), self._ref
+        assert set(self._ref) == set(self._owner)
+        assert not (set(self._ref) & set(self._free_list)), (
+            "page both live and free")
+        assert len(self._ref) == self.in_use_pages
+        for g in range(len(self.shares)):
+            assert self._in_use[g] == sum(
+                1 for o in self._owner.values() if o == g)
 
     def stats(self) -> Dict[str, int]:
         return {
@@ -300,10 +377,13 @@ class PagePool:
             "free_pages": self.free_pages,
             "in_use_pages": self.in_use_pages,
             "reserved_pages": self.reserved_pages,
+            "shared_pages": sum(1 for r in self._ref.values() if r > 1),
             "peak_in_use_pages": self.peak_in_use_pages,
             "peak_in_use_bytes": self.peak_in_use_pages * self.page_bytes,
             "total_allocs": self.total_allocs,
             "total_frees": self.total_frees,
+            "total_forks": self.total_forks,
+            "total_cow_copies": self.total_cow_copies,
         }
 
 
@@ -322,6 +402,159 @@ def page_shares(weights: Sequence[float], usable_pages: int) -> list[int]:
     base[order[: usable_pages - int(base.sum())]] += 1
     assert base.sum() == usable_pages
     return [int(v) for v in base]
+
+
+# ---------------------------------------------------------------------------
+# radix prefix index (CoW prefix sharing, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+class _TrieNode:
+    """One page-granular edge of the prefix trie: ``key`` is the tuple of
+    ``page_size`` token ids this node's page holds, ``page`` the physical
+    page id the index keeps one ``PagePool`` reference on."""
+
+    __slots__ = ("key", "page", "children", "parent", "last_used")
+
+    def __init__(self, key, page, parent):
+        self.key = key
+        self.page = page
+        self.children: Dict[tuple, "_TrieNode"] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+class PrefixIndex:
+    """Radix/trie prefix index keyed on token ids at page granularity
+    (DESIGN.md §7): admission matches the longest cached prefix of a
+    prompt against whole pages already resident in the paged-KV pool and
+    maps them into the new slot's page table at refcount+1 instead of
+    re-prefilling them.
+
+    Only FULL pages are indexed — a page is inserted when the prompt that
+    wrote it finishes prefill and covers the page end-to-end, so cached
+    content is immutable by construction (decode writes land strictly past
+    the prompt, never inside an indexed page) and CoW copies stay a
+    defensive guard rather than a steady-state cost. K/V rows depend only
+    on the token prefix and the absolute position (RoPE/window masks are
+    position-absolute), so identical token chunks at identical depths are
+    bitwise-shareable across slots; int8 pools share their scale pages
+    through the same physical index (DESIGN.md §8).
+
+    Every node holds exactly ONE pool reference on its page. ``evict_lru``
+    frees the least-recently-used leaf whose page has refcount 1 (cached
+    but borrowed by no live slot — interior nodes and borrowed pages are
+    pinned), feeding pages back to the admission budget.
+    """
+
+    def __init__(self, page_size: int):
+        if page_size < 1:
+            raise ValueError(page_size)
+        self.page_size = page_size
+        self.root = _TrieNode(None, 0, None)
+        self._clock = 0
+        self.lookups = 0
+        self.hit_tokens = 0
+        self.lookup_tokens = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        """Number of cached pages (trie nodes below the root)."""
+        n, stack = 0, [self.root]
+        while stack:
+            node = stack.pop()
+            n += len(node.children)
+            stack.extend(node.children.values())
+        return n
+
+    def _chunks(self, tokens, max_pages: int):
+        P = self.page_size
+        limit = min(max_pages, len(tokens) // P)
+        return [tuple(int(t) for t in tokens[i * P:(i + 1) * P])
+                for i in range(limit)]
+
+    def match(self, tokens, max_pages: int) -> list:
+        """Longest cached prefix of ``tokens``: physical page ids of the
+        leading whole-page chunks present in the trie (at most
+        ``max_pages`` — the scheduler caps at ``(prompt_len - 1) // P`` so
+        at least one suffix token is always left to prefill, which is what
+        produces the first generated token's logits). Bumps LRU clocks
+        along the matched path; the caller must ``PagePool.fork`` the
+        returned pages before anything else can evict them."""
+        self.lookups += 1
+        self.lookup_tokens += len(tokens)
+        node, pages = self.root, []
+        self._clock += 1
+        for key in self._chunks(tokens, max_pages):
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.last_used = self._clock
+            pages.append(child.page)
+            node = child
+        self.hit_tokens += len(pages) * self.page_size
+        return pages
+
+    def insert(self, tokens, pages: Sequence[int], pool: PagePool) -> int:
+        """Index the leading ``len(pages)`` whole-page chunks of ``tokens``
+        under their physical ``pages``, forking one pool reference per
+        NEWLY-created node (chunks already cached keep their existing page
+        — two requests racing the same prefix do not double-index). Returns
+        the number of pages newly indexed."""
+        node = self.root
+        self._clock += 1
+        added = 0
+        for key, page in zip(self._chunks(tokens, len(pages)), pages):
+            child = node.children.get(key)
+            if child is None:
+                pool.fork([page])
+                child = _TrieNode(key, page, node)
+                child.last_used = self._clock
+                node.children[key] = child
+                added += 1
+            node = child
+        return added
+
+    def evict_lru(self, pool: PagePool) -> bool:
+        """Release the least-recently-used evictable page back to the pool
+        (refcount-1 leaf: cached but borrowed by no slot and shadowing no
+        longer chain). False when nothing is evictable — the admission
+        loop's stop condition."""
+        best = None
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for child in node.children.values():
+                if not child.children and pool.refcount(child.page) == 1:
+                    if best is None or child.last_used < best.last_used:
+                        best = child
+                stack.append(child)
+        if best is None:
+            return False
+        pool.release([best.page])
+        del best.parent.children[best.key]
+        self.evictions += 1
+        return True
+
+    def clear(self, pool: PagePool) -> int:
+        """Drop every cached reference (leaf-first). Servers call this to
+        drain the cache so end-of-run leak checks see the whole pool."""
+        dropped = 0
+        while self.evict_lru(pool):
+            dropped += 1
+        # anything left is pinned by live borrowers; detach the index's
+        # references anyway only when unpinned — a non-empty remainder
+        # means slots still hold forks, which is not a leak.
+        return dropped
+
+    def stats(self) -> Dict[str, int]:
+        """Hit-rate counters the serving benchmark reports."""
+        return {
+            "cached_pages": len(self),
+            "lookups": self.lookups,
+            "hit_tokens": self.hit_tokens,
+            "lookup_tokens": self.lookup_tokens,
+            "evictions": self.evictions,
+        }
 
 
 def gathered_layer_bytes(d: int, f: int, e: int, *, glu: bool = True,

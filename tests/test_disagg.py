@@ -1,0 +1,171 @@
+"""Disaggregated prefill/decode serving tests (ISSUE 6, DESIGN.md §7).
+
+The split engine's contract has three parts, each pinned here against the
+single-loop PR-4 engine on the same pinned workloads:
+
+  * the page-table handoff is invisible in tokens — a sequence prefilled
+    on a prefill-role slot and decoded on a decode-role slot emits exactly
+    the single-loop stream (the KV never moves, only the table row and the
+    jitted per-slot metadata);
+  * role separation is strict — a decode-role slot never runs a prefill
+    chunk, a prefill-role slot never decodes (checked on the scheduler
+    trace, the observable schedule);
+  * the degenerate case really is degenerate — a uniform one-role-class
+    hetero plan derives "both" everywhere and replays the single-loop
+    scheduler trace event for event.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.configs.base import ModelConfig
+from repro.core import hetero as hetero_lib
+from repro.launch import serve
+from repro.models import lm
+from repro.parallel.sharding import ParallelConfig, split_tree
+
+CFG = ModelConfig(
+    name="disagg-smoke",
+    family="dense",
+    num_layers=1,
+    d_model=16,
+    num_heads=2,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=32,
+    vocab_size=32,
+    dtype="float32",
+)
+PCFG = ParallelConfig(blk=8)
+PAGE, MAXP = 4, 8
+
+_PARAMS: dict = {}
+
+
+def _params(cfg):
+    key = cfg.name
+    if key not in _PARAMS:
+        _PARAMS[key], _ = split_tree(
+            lm.init_params(jax.random.PRNGKey(0), cfg))
+    return _PARAMS[key]
+
+
+def _requests(cfg, n, seed=11):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(2, 12))
+        reqs.append(serve.Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=plen).astype(np.int32),
+            max_new=int(rng.integers(2, 6))))
+    return reqs
+
+
+def _run(cfg, reqs, *, num_slots=4, **kw):
+    srv = serve.PagedServer(
+        cfg, PCFG if cfg is CFG else kw.pop("pcfg"), None,
+        num_slots=num_slots, page_size=PAGE,
+        num_pages=1 + num_slots * MAXP, max_pages_per_slot=MAXP,
+        params=_params(cfg), prefill_chunk=4, **kw)
+    for r in reqs:
+        srv.submit(dataclasses.replace(r, out=[]))
+    done = srv.run()
+    assert len(done) == len(reqs)
+    srv.pool.assert_consistent()
+    assert srv.pool.free_pages == sum(srv.pool.shares)
+    return srv, {r.rid: r.out for r in done}
+
+
+def test_handoff_preserves_tokens():
+    """Half/half role split: every sequence crosses a page-table handoff
+    and still emits the single-loop engine's exact stream."""
+    reqs = _requests(CFG, 6)
+    srv_single, out_single = _run(CFG, reqs)
+    srv_disagg, out_disagg = _run(CFG, reqs, disagg=True)
+    assert out_disagg == out_single, "handoff changed tokens"
+    assert srv_disagg.transfers == len(reqs), (
+        "every request must hand off exactly once in a strict split")
+    assert srv_single.transfers == 0
+
+
+def test_roles_are_strict():
+    """Trace invariant: prefill chunks only on prefill-role slots, decode
+    steps only over decode-role slots, and each transfer moves
+    prefill -> decode."""
+    reqs = _requests(CFG, 6, seed=13)
+    srv, _ = _run(CFG, reqs, disagg=True)
+    roles = srv.roles
+    assert set(roles) == {"prefill", "decode"}
+    transferred = set()
+    for ev in srv.trace:
+        if ev[0] == "prefill_chunk":
+            assert roles[ev[2]] == "prefill", f"decode slot prefilled: {ev}"
+        elif ev[0] == "decode":
+            assert all(roles[s] == "decode" for s in ev[1]), (
+                f"prefill slot decoded: {ev}")
+        elif ev[0] == "transfer":
+            _, rid, src, dst = ev
+            assert roles[src] == "prefill" and roles[dst] == "decode"
+            transferred.add(rid)
+    assert transferred == {r.rid for r in reqs}
+
+
+def test_uniform_plan_reduces_to_single_loop():
+    """derive_roles on a uniform (or single-class) plan yields "both"
+    everywhere, and the disaggregated server replays the single-loop
+    scheduler trace event for event on a pinned workload."""
+    assert serve.derive_roles((3, 3)) == ["both", "both"]
+    assert serve.derive_roles((5,)) == ["both"]
+    assert serve.derive_roles((4, 2)) == ["prefill", "decode"]
+    assert serve.derive_roles((2, 4, 4)) == ["decode", "prefill", "prefill"]
+
+    plan = hetero_lib.make_hetero_plan((1.0, 1.0), global_batch=4)
+    reqs = _requests(CFG, 6, seed=17)
+    srv_single, out_single = _run(CFG, reqs, plan=plan)
+    srv_disagg, out_disagg = _run(CFG, reqs, plan=plan, disagg=True)
+    assert srv_disagg.roles == ["both"] * 4
+    assert out_disagg == out_single
+    assert srv_disagg.trace == srv_single.trace, (
+        "degenerate disagg scheduled differently from the PR-4 engine")
+    assert srv_disagg.transfers == 0
+
+
+def test_hetero_plan_assigns_roles():
+    """A skewed plan maps the fast class to prefill and the slow class to
+    decode, with the page budget still split per Eq. 1."""
+    plan = hetero_lib.make_hetero_plan((1.0, 2.0), global_batch=4)
+    reqs = _requests(CFG, 6, seed=19)
+    srv, out = _run(CFG, reqs, plan=plan, disagg=True)
+    # groups [0, 0, 1, 1]: class 0 (faster, larger token share) prefills
+    assert srv.roles == ["prefill", "prefill", "decode", "decode"]
+    assert srv.transfers == len(reqs)
+    _, out_single = _run(CFG, reqs, plan=plan)
+    assert out == out_single
+
+
+def test_handoff_moves_recurrent_state():
+    """Hybrid attn+mamba (jamba): the handoff step must move the per-slot
+    recurrent state rows, not just the page table — otherwise the decode
+    slot resumes from a zero conv/ssm state and the stream diverges."""
+    cfg = dataclasses.replace(
+        cfglib.get_smoke_config("jamba-1.5-large-398b"), dtype="float32")
+    assert any(cfg.layer_kind(i) != "attn" for i in range(cfg.period))
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    reqs = _requests(cfg, 4, seed=23)
+    srv_single, out_single = _run(cfg, reqs, pcfg=pcfg)
+    srv_disagg, out_disagg = _run(cfg, reqs, pcfg=pcfg, disagg=True)
+    assert srv_disagg.transfers == len(reqs)
+    assert out_disagg == out_single, "recurrent state lost in handoff"
+
+
+def test_disagg_validation():
+    with pytest.raises(ValueError, match=">= 2 slots"):
+        serve.PagedServer(
+            CFG, PCFG, None, num_slots=1, page_size=PAGE,
+            num_pages=1 + MAXP, max_pages_per_slot=MAXP,
+            params=_params(CFG), disagg=True)

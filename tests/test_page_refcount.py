@@ -1,0 +1,323 @@
+"""CoW refcount + radix-index property tests (ISSUE 6): the PagePool and
+PrefixIndex survive arbitrary admit/fork/write/insert/finish/evict
+interleavings with no leaked pages, no double-frees, and refcounts that
+exactly mirror who holds each page.
+
+The driver interprets a drawn op list against the real pool/index while
+maintaining an independent shadow model (per-holder page lists + a trie
+walk), so the oracle is structural: after EVERY op, each page's pool
+refcount must equal the number of slot holders plus trie nodes that map
+it, and ``assert_consistent`` must hold; at the end, draining every
+holder and the index returns the pool to exactly its initial budget.
+
+Like the other property modules, the hypothesis tests are skipped without
+the package and the same ``_check_*`` bodies are driven by pinned samples
+so minimal CI environments still execute every invariant.
+"""
+import pytest
+
+from repro.parallel.cache import PagePool, PrefixIndex
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+PAGE = 2          # tokens per page (tiny: collisions are the point)
+NUM_PAGES = 17    # 16 allocatable + sink
+N_FAMILIES = 3    # distinct prompt prefixes -> forced sharing
+
+
+def _prompt(family: int, n_pages: int) -> list:
+    """Deterministic token stream per family: equal families share every
+    leading chunk, so admissions collide in the trie by construction."""
+    return [family * 100 + j for j in range(n_pages * PAGE)]
+
+
+class _Driver:
+    """Interprets (op, seed) tuples against a real pool + index, keeping a
+    shadow model of every reference holder for the refcount oracle."""
+
+    def __init__(self, shares=None):
+        self.pool = PagePool(NUM_PAGES, shares=shares)
+        self.index = PrefixIndex(PAGE)
+        self.n_groups = len(self.pool.shares)
+        self.slots = {}          # sid -> holder dict
+        self._sid = 0
+
+    # -- ops ----------------------------------------------------------------
+
+    def admit(self, seed: int):
+        family = seed % N_FAMILIES
+        need = 1 + (seed // N_FAMILIES) % 4
+        group = (seed // 16) % self.n_groups
+        prompt = _prompt(family, need)
+        matched = self.index.match(prompt, (len(prompt) - 1) // PAGE)
+        if matched:
+            self.pool.fork(matched)
+        reserve_n = need - len(matched)
+        while not self.pool.try_reserve(reserve_n, group):
+            if not self.index.evict_lru(self.pool):
+                if matched:
+                    self.pool.release(matched)
+                return
+        self.slots[self._sid] = {
+            "group": group, "prompt": prompt, "pages": list(matched),
+            "need": need, "reserved": reserve_n, "allocated": 0,
+        }
+        self._sid += 1
+
+    def alloc(self, seed: int):
+        st_ = self._pick(seed)
+        if st_ is None or st_["allocated"] >= st_["reserved"]:
+            return
+        st_["pages"].append(self.pool.alloc(st_["group"]))
+        st_["allocated"] += 1
+
+    def write(self, seed: int):
+        """CoW trigger: writing a shared page converts a reservation into
+        a private copy; an exclusive page is written in place."""
+        st_ = self._pick(seed)
+        if st_ is None or not st_["pages"]:
+            return
+        j = seed % len(st_["pages"])
+        page = st_["pages"][j]
+        if self.pool.refcount(page) <= 1:
+            assert self.pool.cow(page, st_["group"]) == page
+            return
+        while not self.pool.try_reserve(1, st_["group"]):
+            if not self.index.evict_lru(self.pool):
+                return
+        st_["reserved"] += 1
+        st_["pages"][j] = self.pool.cow(page, st_["group"])
+        st_["allocated"] += 1
+
+    def insert(self, seed: int):
+        """Index the holder's fully-backed prompt pages (what the server
+        does at prefill completion)."""
+        st_ = self._pick(seed)
+        if st_ is None or len(st_["pages"]) < st_["need"]:
+            return
+        self.index.insert(st_["prompt"], st_["pages"][:st_["need"]],
+                          self.pool)
+
+    def finish(self, seed: int):
+        st_ = self._pick(seed)
+        if st_ is None:
+            return
+        self.pool.release(st_["pages"], st_["group"],
+                          unused_reserved=st_["reserved"] - st_["allocated"])
+        del self.slots[[k for k, v in self.slots.items() if v is st_][0]]
+
+    def evict(self, seed: int):
+        self.index.evict_lru(self.pool)
+
+    def _pick(self, seed: int):
+        if not self.slots:
+            return None
+        return self.slots[sorted(self.slots)[seed % len(self.slots)]]
+
+    # -- oracle -------------------------------------------------------------
+
+    def check(self):
+        self.pool.assert_consistent()
+        held = {}
+        for st_ in self.slots.values():
+            for p in st_["pages"]:
+                held[p] = held.get(p, 0) + 1
+        stack = [self.index.root]
+        while stack:
+            node = stack.pop()
+            for child in node.children.values():
+                held[child.page] = held.get(child.page, 0) + 1
+                stack.append(child)
+        for p in range(1, NUM_PAGES):
+            assert self.pool.refcount(p) == held.get(p, 0), (
+                f"page {p}: pool says {self.pool.refcount(p)}, "
+                f"holders say {held.get(p, 0)}")
+
+    def drain(self):
+        for seed in range(len(self.slots)):
+            self.finish(0)
+        self.index.clear(self.pool)
+        self.check()
+        assert len(self.index) == 0
+        assert self.pool.in_use_pages == 0
+        assert self.pool.reserved_pages == 0
+        assert self.pool.free_pages == sum(self.pool.shares)
+        assert self.pool.total_allocs == self.pool.total_frees
+
+
+OPS = ("admit", "alloc", "write", "insert", "finish", "evict")
+
+
+def _check_ops(ops, shares=None):
+    d = _Driver(shares)
+    for name, seed in ops:
+        getattr(d, name)(seed)
+        d.check()
+    d.drain()
+
+
+# Pinned samples: every op type, single-group and hetero-share pools,
+# including the sequences that exercise CoW and LRU-eviction backpressure.
+OPS_SAMPLES = [
+    # admit -> fill -> index -> re-admit same family (match+fork) -> CoW
+    [("admit", 0), ("alloc", 0), ("alloc", 0), ("insert", 0),
+     ("admit", 0), ("write", 0), ("write", 1), ("finish", 0),
+     ("finish", 0), ("evict", 0)],
+    # eviction pressure: families churn through a pool smaller than the sum
+    # of their worst cases, so admission must reclaim LRU trie pages
+    [("admit", 9), ("alloc", 0), ("alloc", 0), ("insert", 0), ("finish", 0),
+     ("admit", 10), ("alloc", 0), ("alloc", 0), ("insert", 0), ("finish", 0),
+     ("admit", 11), ("alloc", 0), ("alloc", 0), ("insert", 0), ("finish", 0),
+     ("admit", 9), ("admit", 10), ("admit", 11), ("finish", 0),
+     ("finish", 0), ("finish", 0)],
+    # interleaved: shared pages outlive their allocator
+    [("admit", 3), ("alloc", 0), ("insert", 0), ("admit", 3),
+     ("finish", 0), ("write", 0), ("alloc", 0), ("evict", 0),
+     ("insert", 0), ("finish", 0)],
+]
+SHARES_SAMPLES = [None, [10, 6]]
+
+
+@pytest.mark.parametrize("shares", SHARES_SAMPLES)
+@pytest.mark.parametrize("ops_i", range(len(OPS_SAMPLES)))
+def test_ops_pinned(ops_i, shares):
+    _check_ops(OPS_SAMPLES[ops_i], shares)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(
+        ops=st.lists(
+            st.tuples(st.sampled_from(OPS), st.integers(0, 127)),
+            min_size=1, max_size=40),
+        shares=st.sampled_from(SHARES_SAMPLES),
+    )
+    def test_ops_property(ops, shares):
+        _check_ops(ops, shares)
+
+
+def test_ops_fuzz_deterministic():
+    """200 seeded pseudo-random interleavings — the property keeps its
+    example count even on environments without hypothesis."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    for case in range(200):
+        n = int(rng.integers(1, 40))
+        ops = [(OPS[int(rng.integers(len(OPS)))], int(rng.integers(128)))
+               for _ in range(n)]
+        _check_ops(ops, SHARES_SAMPLES[case % len(SHARES_SAMPLES)])
+
+
+# --- explicit regression cases -------------------------------------------
+
+def _pool_with_page():
+    pool = PagePool(NUM_PAGES)
+    assert pool.try_reserve(2)
+    return pool, pool.alloc()
+
+
+def test_double_release_raises():
+    """The PR-4 pool silently corrupted its free list on a double release;
+    the refcount layer turns it into a RuntimeError."""
+    pool, page = _pool_with_page()
+    pool.release([page])
+    with pytest.raises(RuntimeError, match="double release"):
+        pool.release([page])
+    # the failed release must not have mutated anything
+    pool.release([], unused_reserved=1)
+    pool.assert_consistent()
+
+
+def test_fork_free_page_raises():
+    pool, page = _pool_with_page()
+    pool.release([page])
+    with pytest.raises(RuntimeError, match="fork of free page"):
+        pool.fork([page])
+    with pytest.raises(ValueError):
+        pool.fork([0])          # the sink is never forkable
+
+
+def test_cow_semantics():
+    pool, page = _pool_with_page()
+    # exclusive page: written in place, no new allocation
+    assert pool.cow(page) == page
+    pool.fork([page])
+    new = pool.cow(page)        # shared: converts the reservation
+    assert new != page
+    assert pool.refcount(page) == 1 and pool.refcount(new) == 1
+    assert pool.stats()["total_cow_copies"] == 1
+    pool.assert_consistent()
+    pool.release([page, new])
+    with pytest.raises(RuntimeError, match="cow on free page"):
+        pool.cow(page)
+
+
+def test_release_frees_only_at_refcount_zero():
+    pool, page = _pool_with_page()
+    pool.fork([page])
+    pool.release([page])
+    assert pool.refcount(page) == 1 and pool.in_use_pages == 1
+    pool.release([page], unused_reserved=1)
+    assert pool.refcount(page) == 0 and pool.in_use_pages == 0
+    assert pool.free_pages == NUM_PAGES - 1
+    pool.assert_consistent()
+
+
+def test_owner_group_credited_across_groups():
+    """A page forked into another holder stays charged to its allocator
+    group until the LAST reference dies — the documented budget pinning."""
+    pool = PagePool(NUM_PAGES, shares=[10, 6])
+    assert pool.try_reserve(1, 0)
+    page = pool.alloc(0)
+    pool.fork([page])           # e.g. group-1 slot borrows it
+    pool.release([page], group=0)   # allocator's reference dies first
+    assert pool.group_free(0) == 9  # still pinned to group 0
+    pool.release([page], group=1)
+    assert pool.group_free(0) == 10 and pool.group_free(1) == 6
+    pool.assert_consistent()
+
+
+def test_trie_match_fork_evict():
+    pool = PagePool(NUM_PAGES)
+    idx = PrefixIndex(PAGE)
+    prompt = _prompt(0, 3)
+    assert pool.try_reserve(3)
+    pages = [pool.alloc() for _ in range(3)]
+    assert idx.insert(prompt, pages, pool) == 3
+    # racing insert of the same prefix adds nothing
+    assert idx.insert(prompt, pages, pool) == 0
+    # match caps at max_pages and bumps nothing beyond it
+    assert idx.match(prompt, 2) == pages[:2]
+    # releasing the slot's references leaves the trie holding every page
+    pool.release(pages)
+    assert pool.in_use_pages == 3
+    # interior nodes never evict before their children
+    assert idx.evict_lru(pool)
+    assert len(idx) == 2 and pool.refcount(pages[2]) == 0
+    # a borrowed (refcount>1) page is pinned against eviction
+    pool.fork([pages[0]])
+    pool.fork([pages[1]])
+    assert idx.evict_lru(pool) is False
+    pool.release([pages[0]])
+    pool.release([pages[1]])
+    assert idx.clear(pool) == 2
+    assert pool.free_pages == NUM_PAGES - 1
+    pool.assert_consistent()
+
+
+def test_partial_page_never_indexed():
+    """Prompts shorter than a page contribute nothing to the index, so a
+    later write can never mutate cached content."""
+    pool = PagePool(NUM_PAGES)
+    idx = PrefixIndex(PAGE)
+    assert pool.try_reserve(1)
+    page = pool.alloc()
+    assert idx.insert([7], [page][: 1 // PAGE], pool) == 0
+    assert idx.match([7, 8], (2 - 1) // PAGE) == []
+    assert len(idx) == 0
+    pool.release([page])

@@ -308,6 +308,161 @@ def test_int8_kv_decode_parity_and_capacity():
     assert cap_q * pb_q * need <= budget + need * pb_q  # still within HBM
 
 
+# --- prefix-sharing rows (ISSUE 6) ---------------------------------------
+
+def _shared_prefix_requests(cfg, n, seed, *, shared_len=12):
+    """High-duplicate chat-style workload: every request opens with the
+    same ``shared_len``-token system prompt and appends a short unique
+    tail — the later admissions' prefixes are fully cached."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, size=shared_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(
+            0, cfg.vocab_size, size=int(rng.integers(1, 4))).astype(np.int32)
+        reqs.append(serve.Request(
+            rid=i, prompt=np.concatenate([shared, tail]),
+            max_new=int(rng.integers(2, 6))))
+    return reqs
+
+
+def _run_paged(cfg, pcfg, params, reqs, *, num_slots=NUM_SLOTS,
+               num_pages=None, **kw):
+    maxp = MAX_SEQ // 4
+    server = serve.PagedServer(
+        cfg, pcfg, None, num_slots=num_slots, page_size=4,
+        num_pages=num_pages or (1 + num_slots * maxp),
+        max_pages_per_slot=maxp, params=params, prefill_chunk=5, **kw)
+    for r in reqs:
+        server.submit(dataclasses.replace(r, out=[]))
+    done = server.run()
+    assert len(done) == len(reqs)
+    return server, {r.rid: r.out for r in done}
+
+
+def _assert_drained(server):
+    """The pool returns to its full budget once the index is dropped."""
+    server.drop_prefix_cache()
+    server.pool.assert_consistent()
+    assert server.pool.free_pages == sum(server.pool.shares)
+    assert (server.table == 0).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefix_cache_parity(arch):
+    """Prefix-cache ON is token-identical to OFF and to the batch-1 dense
+    reference on every config in the matrix, while actually sharing pages
+    (hits > 0, strictly fewer physical allocations)."""
+    cfg = _config(arch)
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    reqs = _shared_prefix_requests(cfg, N_REQ, seed=29)
+    refs = _reference_streams(cfg, pcfg, params, reqs, MAX_SEQ)
+
+    srv_on, out_on = _run_paged(cfg, pcfg, params, reqs, prefix_cache=True)
+    srv_off, out_off = _run_paged(cfg, pcfg, params, reqs)
+    assert out_on == out_off == refs, f"{arch}: prefix-cache changed tokens"
+    pf = srv_on.stats()["prefix"]
+    assert pf["hit_tokens"] > 0, f"{arch}: no prefix was ever shared"
+    assert srv_on.pool.total_allocs < srv_off.pool.total_allocs
+    assert srv_on.pool.total_forks > 0
+    _assert_drained(srv_on)
+
+
+def test_prefix_cache_int8_parity():
+    """Shared int8 pages share their scale rows through the same physical
+    index: int8 + prefix-cache stays token-identical to int8 alone."""
+    cfg = _config("qwen3-moe-30b-a3b")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    reqs = _shared_prefix_requests(cfg, N_REQ, seed=31)
+
+    srv_on, out_on = _run_paged(cfg, pcfg, params, reqs,
+                                kv_quant="int8", prefix_cache=True)
+    srv_off, out_off = _run_paged(cfg, pcfg, params, reqs, kv_quant="int8")
+    assert out_on == out_off, "int8 prefix-cache diverged from int8 alone"
+    assert srv_on.stats()["prefix"]["hit_tokens"] > 0
+    entry = srv_on.cache["layers"][0]
+    assert entry["k"].dtype == jnp.int8 and "k_scale" in entry
+    _assert_drained(srv_on)
+
+
+def test_prefix_cache_parity_under_eviction_pressure():
+    """A pool too small to keep every family cached forces mid-run LRU
+    evictions of trie pages during admission — the streams must not move
+    and the drained pool must still balance."""
+    cfg = _config("gemma-2b")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    # three distinct 8-token prefix families, revisited out of order
+    rng = np.random.default_rng(37)
+    fams = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+            for _ in range(3)]
+    reqs = []
+    for i, f in enumerate([0, 1, 2, 0, 1, 2, 2, 0]):
+        tail = rng.integers(0, cfg.vocab_size, size=2).astype(np.int32)
+        reqs.append(serve.Request(
+            rid=i, prompt=np.concatenate([fams[f], tail]), max_new=3))
+    refs = _reference_streams(cfg, pcfg, params, reqs, MAX_SEQ)
+
+    # worst case per request: ceil((10 + 3 - 1) / 4) = 3 pages; 2 slots
+    # need 6 of the 7 usable pages, but the three families want 6 cached
+    # pages between them -> admission must evict LRU trie pages
+    srv, out = _run_paged(cfg, pcfg, params, reqs, num_slots=2,
+                          num_pages=8, prefix_cache=True)
+    assert out == refs, "eviction pressure changed tokens"
+    pf = srv.stats()["prefix"]
+    assert pf["evictions"] > 0, "pool was never actually under pressure"
+    _assert_drained(srv)
+
+
+def test_prefix_cache_rejects_recurrent_stack():
+    """Recurrent layers keep per-slot state outside the pages, so a
+    skipped prefix would decode from zeros — the server refuses."""
+    cfg = dataclasses.replace(
+        cfglib.get_smoke_config("jamba-1.5-large-398b"), dtype="float32")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    with pytest.raises(ValueError, match="all-attention"):
+        serve.PagedServer(
+            cfg, pcfg, None, num_slots=2, page_size=4, num_pages=17,
+            max_pages_per_slot=8, params=params, prefix_cache=True)
+
+
+def test_sampled_stream_parity_across_engines():
+    """RNG plumbing (ISSUE 6): a sampled request's stream is a pure
+    function of (seed, step, logits) — dense server, paged server, and the
+    batch-1 reference all draw identical tokens, and the temperature
+    actually moves the stream off greedy."""
+    cfg = _config("gemma-2b")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    reqs = _requests(cfg, N_REQ, seed=41)
+    for r in reqs:
+        r.temperature, r.seed = 0.8, 1000 + r.rid
+    step = jax.jit(steps_lib.make_serve_step(
+        cfg, pcfg, None, (1, 1, cfg.d_model)))
+    refs = {r.rid: serve.reference_stream(
+        cfg, pcfg, None, params, r, max_seq=MAX_SEQ, step=step)
+        for r in reqs}
+    greedy = {r.rid: serve.greedy_reference(
+        cfg, pcfg, None, params, r.prompt, r.max_new,
+        max_seq=MAX_SEQ, step=step) for r in reqs}
+    assert any(refs[r.rid] != greedy[r.rid] for r in reqs), (
+        "temperature 0.8 never moved any token off argmax — the sampled "
+        "path is not exercised")
+
+    srv_p, out_paged = _run_paged(cfg, pcfg, params, reqs)
+    dense = serve.BatchedServer(
+        cfg, pcfg, None, num_slots=NUM_SLOTS, max_seq=MAX_SEQ,
+        params=params)
+    for r in reqs:
+        dense.submit(dataclasses.replace(r, out=[]))
+    out_dense = {r.rid: r.out for r in dense.run()}
+    assert out_paged == refs, "paged sampled stream diverged"
+    assert out_dense == refs, "dense sampled stream diverged"
+
+
 def test_prefill_chunk_size_is_invisible():
     """Chunked prefill is a scheduling choice, not a numerical one: chunk
     sizes 1/3/16 produce identical streams."""
