@@ -1,13 +1,20 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench bench-check docs-check ci
+.PHONY: test bench bench-check docs-check chaos ci
 
 test:
 	$(PY) -m pytest -x -q
 
 bench:
 	JAX_PLATFORMS=cpu $(PY) benchmarks/run.py --quick
+
+# Tier-2 chaos suite (DESIGN.md §9): seeded fault plans driven through the
+# real train/serve drivers, asserting bit-exact recovery — checkpoint
+# fallback past corruption, serving abort/retry/re-jit parity, elastic
+# shrink on device dropout.
+chaos:
+	JAX_PLATFORMS=cpu REPRO_PALLAS_INTERPRET=1 $(PY) scripts/chaos.py
 
 # Every `DESIGN.md §N` citation in src/ must resolve to a `## §N` heading,
 # and every public API in parallel/ + runtime/ + quant/ + launch/ must

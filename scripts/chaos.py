@@ -1,0 +1,232 @@
+#!/usr/bin/env python
+"""Scripted chaos scenarios (`make chaos`, DESIGN.md §9).
+
+Each scenario installs a seeded ``runtime.faults.FaultPlan`` and drives a
+real driver end-to-end, asserting BIT-EXACT recovery against an unfaulted
+reference — not merely survival:
+
+  training-fallback   step failure while the newest checkpoint is
+                      bit-flipped at commit -> fallback restore from the
+                      older valid checkpoint -> trajectory identical to
+                      the unfaulted run
+  serving-retry       mid-decode + mid-prefill injected failures and an
+                      engine-level re-jit -> every greedy stream
+                      token-identical to the no-fault reference, with the
+                      page-pool structural oracle audited every step
+  serving-shrink      injected device dropout -> live requests carried
+                      across ``PagedServer._shrink`` (pool reshared over
+                      the surviving class) -> reference-identical streams
+  train-elastic       subprocess with 8 fake devices: ``--elastic
+                      --fault-spec`` device dropout on a 2x2 MoE mesh ->
+                      ``choose_mesh_shape`` re-mesh over the survivors ->
+                      checkpoint restore -> run completes
+
+The same scenarios are pinned as tests in tests/test_chaos.py; this
+driver is the operator-facing entry point (tier-2, wired into
+scripts/ci.sh) and prints one PASS line per scenario.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs as cfglib  # noqa: E402
+from repro.core import hetero as hetero_lib  # noqa: E402
+from repro.launch import serve, steps as steps_lib  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.parallel.sharding import ParallelConfig, split_tree  # noqa: E402
+from repro.runtime import faults as faults_lib  # noqa: E402
+from repro.runtime import ft as ft_lib  # noqa: E402
+
+MAX_SEQ = 32
+
+
+# ---------------------------------------------------------------------------
+# training: corrupt newest checkpoint + step failure -> fallback restore
+# ---------------------------------------------------------------------------
+
+def _train_step(state, step):
+    faults_lib.inject("train.step")
+    return ({"x": state["x"] + jnp.float32(step + 1)},
+            {"loss": float(step)})
+
+
+def _train_run(ckpt_dir, steps=8):
+    ft = ft_lib.FTConfig(ckpt_dir=ckpt_dir, save_every=2, keep=3,
+                         backoff_base_s=0.0)
+    return ft_lib.run_with_recovery(
+        state={"x": jnp.float32(0.0)}, step_fn=_train_step, start_step=0,
+        num_steps=steps, ft=ft, sleep_fn=lambda s: None)
+
+
+def scenario_training_fallback() -> None:
+    with tempfile.TemporaryDirectory() as td:
+        ref_state, _ = _train_run(os.path.join(td, "ref"))
+        plan = faults_lib.FaultPlan([
+            faults_lib.Fault(site="ckpt.write", kind="bitflip", at=1,
+                             payload={"leaf": 0}),
+            faults_lib.Fault(site="train.step", kind="error", at=5),
+        ])
+        with faults_lib.scope(plan):
+            state, last = _train_run(os.path.join(td, "chaos"))
+        assert last == 8 and len(plan.fired) == 2, plan.fired
+        np.testing.assert_array_equal(np.asarray(state["x"]),
+                                      np.asarray(ref_state["x"]))
+
+
+# ---------------------------------------------------------------------------
+# serving scenarios
+# ---------------------------------------------------------------------------
+
+def _engine_setup():
+    cfg = dataclasses.replace(cfglib.get_smoke_config("gemma-2b"),
+                              dtype="float32")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, pcfg, params
+
+
+def _requests(cfg, specs, seed=5):
+    rng = np.random.default_rng(seed)
+    return [
+        serve.Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=plen).astype(
+                np.int32),
+            max_new=max_new)
+        for i, (plen, max_new) in enumerate(specs)
+    ]
+
+
+def _refs(cfg, pcfg, params, reqs):
+    step = jax.jit(steps_lib.make_serve_step(
+        cfg, pcfg, None, (1, 1, cfg.d_model)))
+    return {r.rid: serve.greedy_reference(
+        cfg, pcfg, None, params, r.prompt, r.max_new, max_seq=MAX_SEQ,
+        step=step) for r in reqs}
+
+
+def _check_streams(server, done, reqs, refs):
+    assert server.failed == [], [r.error for r in server.failed]
+    assert len(done) == len(reqs), (len(done), len(reqs))
+    for r in done:
+        assert r.out == refs[r.rid], f"rid={r.rid} diverged"
+    server.assert_page_invariants()
+    server.drop_prefix_cache()
+    assert server.pool.free_pages == sum(server.pool.shares)
+
+
+def scenario_serving_retry() -> None:
+    cfg, pcfg, params = _engine_setup()
+    reqs = _requests(cfg, [(6, 5), (9, 4), (7, 4), (11, 3), (6, 4)])
+    refs = _refs(cfg, pcfg, params, reqs)
+    plan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="serve.decode", kind="error", at=2,
+                         payload={"slot": 0}),
+        faults_lib.Fault(site="serve.prefill", kind="error", at=4,
+                         payload={"slot": 1}),
+        faults_lib.Fault(site="serve.decode", kind="error", at=9),
+    ])
+    maxp = MAX_SEQ // 4
+    srv = serve.PagedServer(
+        cfg, pcfg, None, num_slots=3, page_size=4, num_pages=1 + 3 * maxp,
+        max_pages_per_slot=maxp, params=params, prefill_chunk=5,
+        prefix_cache=True, audit=True)
+    for r in reqs:
+        srv.submit(dataclasses.replace(r, out=[]))
+    with faults_lib.scope(plan):
+        done = srv.run()
+    assert len(plan.fired) == 3, plan.fired
+    assert srv.aborts == 2 and srv.engine_recoveries == 1, srv.stats()
+    _check_streams(srv, done, reqs, refs)
+
+
+def scenario_serving_shrink() -> None:
+    cfg, pcfg, params = _engine_setup()
+    plan_h = hetero_lib.make_hetero_plan((1.0, 2.0), global_batch=4)
+    reqs = _requests(cfg, [(6, 4), (9, 3), (7, 4), (5, 5), (6, 3),
+                           (10, 4)])
+    refs = _refs(cfg, pcfg, params, reqs)
+    fplan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="serve.decode", kind="device_drop", at=3,
+                         payload={"survivors": [0]}),
+    ])
+    maxp = MAX_SEQ // 4
+    srv = serve.PagedServer(
+        cfg, pcfg, None, num_slots=4, page_size=4, num_pages=1 + 4 * maxp,
+        max_pages_per_slot=maxp, params=params, prefill_chunk=5,
+        plan=plan_h, prefix_cache=True, audit=True)
+    for r in reqs:
+        srv.submit(dataclasses.replace(r, out=[]))
+    with faults_lib.scope(fplan):
+        done = srv.run()
+    assert ("shrink", (0,)) in srv.trace
+    assert len(srv.pool.shares) == 1
+    _check_streams(srv, done, reqs, refs)
+
+
+# ---------------------------------------------------------------------------
+# training CLI: device dropout -> elastic re-mesh (subprocess, 8 devices)
+# ---------------------------------------------------------------------------
+
+def scenario_train_elastic() -> None:
+    spec = ('{"faults": [{"site": "train.step", "kind": "device_drop",'
+            ' "at": 3, "payload": {"survivors": 2}}]}')
+    with tempfile.TemporaryDirectory() as td:
+        code = f"""
+from repro.launch import train
+train.main([
+    "--arch", "qwen3-moe-30b-a3b", "--smoke",
+    "--steps", "6", "--global-batch", "4", "--seq-len", "16",
+    "--mesh", "2,2", "--elastic", "--save-every", "2",
+    "--ckpt-dir", {os.path.join(td, "ckpt")!r},
+    "--fault-spec", {spec!r},
+])
+"""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(ROOT, "src")
+        env["JAX_PLATFORMS"] = "cpu"
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        res = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, env=env,
+                             timeout=900)
+        assert res.returncode == 0, res.stderr[-3000:]
+        assert "[elastic] device loss -> re-mesh" in res.stdout, res.stdout
+        assert "[train] finished at step 6" in res.stdout, res.stdout
+
+
+SCENARIOS = {
+    "training-fallback": scenario_training_fallback,
+    "serving-retry": scenario_serving_retry,
+    "serving-shrink": scenario_serving_shrink,
+    "train-elastic": scenario_train_elastic,
+}
+
+
+def main(argv=None) -> int:
+    """Run the named chaos scenarios (default: all), one PASS line each."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", action="append", choices=sorted(SCENARIOS),
+                    help="run only these scenarios (repeatable)")
+    args = ap.parse_args(argv)
+    names = args.scenario or sorted(SCENARIOS)
+    for name in names:
+        SCENARIOS[name]()
+        print(f"[chaos] {name}: PASS")
+    print(f"[chaos] {len(names)}/{len(names)} scenarios passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 
+# Tier-2 chaos scenarios (DESIGN.md §9): deterministic fault plans through
+# the real drivers — checkpoint-fallback bit-exactness, serving
+# retry/re-jit stream parity, elastic shrink on device dropout.
+make chaos
+
 # Benchmark smoke: every paper-table module must at least run its quick grid
 # (JAX_PLATFORMS=cpu via the Makefile) and emit BENCH_kernels.json +
 # BENCH_hetero.json + BENCH_serve.json + BENCH_quant.json (the hetero suite

@@ -5,8 +5,9 @@
    ``src/`` must resolve to a ``## §N`` heading in DESIGN.md (dangling
    section numbers fail).
 2. **Docstring audit** — every public module, class, and top-level function
-   in ``src/repro/parallel/``, ``src/repro/runtime/``, ``src/repro/quant/``
-   and ``src/repro/launch/`` must carry a docstring; these are the layers
+   in ``src/repro/parallel/``, ``src/repro/runtime/``, ``src/repro/quant/``,
+   ``src/repro/launch/`` and ``src/repro/checkpoint/`` must carry a
+   docstring; these are the layers
    whose contracts the paper sections / DESIGN §§ define, so an
    undocumented public entry point is a review failure, not a style nit.
 """
@@ -19,7 +20,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 AUDITED_DIRS = ("src/repro/parallel", "src/repro/runtime", "src/repro/quant",
-                "src/repro/launch")
+                "src/repro/launch", "src/repro/checkpoint")
 
 
 def check_citations() -> list[str]:

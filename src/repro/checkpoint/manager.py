@@ -25,15 +25,44 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import zlib
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+from repro.runtime import faults as faults_lib
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (missing/short/flipped
+    leaf bytes, or no readable manifest). Raised by :func:`verify` and
+    :func:`restore`; ``runtime.ft`` treats it as "fall back to the next
+    older valid checkpoint", not as a training failure."""
 
 
 def _flatten(tree: Any):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+class _CRCWriter:
+    """File wrapper that crc32s and counts every byte as it is written,
+    so the manifest's integrity record is computed from the exact bytes
+    on disk (npy header included) with no second read pass."""
+
+    def __init__(self, f):
+        self._f = f
+        self.crc = 0
+        self.nbytes = 0
+
+    def write(self, data):
+        self.crc = zlib.crc32(data, self.crc)
+        self.nbytes += len(data)
+        return self._f.write(data)
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)
 
 
 def save(directory: str, step: int, tree: Any, meta: Optional[dict] = None) -> str:
@@ -62,6 +91,8 @@ def _write(directory, step, host_leaves, treedef, meta) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     names = []
+    crcs = []
+    nbytes = []
     for i, leaf in enumerate(host_leaves):
         name = f"a_{i:05d}.npy"
         arr = np.asarray(leaf)
@@ -69,8 +100,14 @@ def _write(directory, step, host_leaves, treedef, meta) -> str:
         view = _VIEW_DTYPES.get(str(arr.dtype))
         if view is not None:
             arr = arr.view(view)
-        _fsync_write(os.path.join(tmp, name),
-                     lambda f, a=arr: np.save(f, a))
+
+        def write_with_crc(f, a=arr):
+            w = _CRCWriter(f)
+            np.save(w, a)
+            crcs.append(w.crc)
+            nbytes.append(w.nbytes)
+
+        _fsync_write(os.path.join(tmp, name), write_with_crc)
         names.append(name)
     manifest = {
         "step": step,
@@ -83,6 +120,12 @@ def _write(directory, step, host_leaves, treedef, meta) -> str:
         # leaves, DESIGN.md §8) can never silently load into the wrong
         # leaf after a structural drift.
         "dtypes": [str(np.asarray(l).dtype) for l in host_leaves],
+        # Per-leaf integrity record over the exact file bytes: restore and
+        # ``verify`` recompute these, so a truncated or bit-flipped leaf is
+        # detected *before* it is handed to the model, and
+        # ``latest_valid_step`` can skip a damaged checkpoint entirely.
+        "crc32": crcs,
+        "nbytes": nbytes,
         "meta": meta,
         "process_index": jax.process_index(),
     }
@@ -99,6 +142,12 @@ def _write(directory, step, host_leaves, treedef, meta) -> str:
         os.fsync(dir_fd)
     finally:
         os.close(dir_fd)
+    # Chaos hook (DESIGN.md §9): "ckpt.write" faults model storage damage
+    # *after* the atomic commit — exactly the failure the crc32 record
+    # exists to catch — by corrupting a committed leaf file in place.
+    for f in faults_lib.inject("ckpt.write", step=step, path=final):
+        if f.kind in ("truncate", "bitflip"):
+            faults_lib.corrupt_checkpoint(final, f)
     return final
 
 
@@ -117,7 +166,12 @@ class AsyncSaver:
         self.last_path: Optional[str] = None
 
     def save(self, directory: str, step: int, tree: Any,
-             meta: Optional[dict] = None) -> None:
+             meta: Optional[dict] = None,
+             post: Optional[Callable[[str], None]] = None) -> None:
+        """Queue an async write. ``post(final_path)`` runs in the worker
+        thread only after the write commits — the ordering hook retention
+        GC needs: pruning against a listing that already contains the new
+        checkpoint, never racing the in-flight write."""
         self.wait()
         leaves, treedef = _flatten(tree)
         host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
@@ -126,6 +180,8 @@ class AsyncSaver:
             try:
                 self.last_path = _write(directory, step, host_leaves,
                                         treedef, meta or {})
+                if post is not None:
+                    post(self.last_path)
             except BaseException as exc:  # noqa: BLE001 — handed to wait()
                 self._error = exc
 
@@ -142,6 +198,9 @@ class AsyncSaver:
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest COMMITTED step on disk, integrity-unchecked — "what
+    exists", not "what is safe to load" (that is
+    :func:`latest_valid_step`)."""
     if not os.path.isdir(directory):
         return None
     steps = [
@@ -150,6 +209,68 @@ def latest_step(directory: str) -> Optional[int]:
         if d.startswith("step_") and not d.endswith(".tmp")
     ]
     return max(steps) if steps else None
+
+
+def verify(path: str) -> None:
+    """Integrity-check one committed checkpoint directory against its
+    manifest: every leaf file must exist with exactly the recorded byte
+    count and crc32. Raises :class:`CheckpointCorruptError` on any
+    mismatch; pre-integrity checkpoints (no ``crc32`` record) pass, so old
+    on-disk trees stay restorable."""
+    manifest_path = os.path.join(path, "manifest.json")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as exc:
+        raise CheckpointCorruptError(
+            f"{path}: unreadable manifest ({exc})") from exc
+    crcs = manifest.get("crc32")
+    nbytes = manifest.get("nbytes")
+    for i in range(manifest["num_leaves"]):
+        leaf_path = os.path.join(path, f"a_{i:05d}.npy")
+        try:
+            with open(leaf_path, "rb") as f:
+                data = f.read()
+        except OSError as exc:
+            raise CheckpointCorruptError(
+                f"{path}: missing leaf {i} ({exc})") from exc
+        if nbytes is not None and len(data) != nbytes[i]:
+            raise CheckpointCorruptError(
+                f"{path}: leaf {i} has {len(data)} bytes, "
+                f"manifest records {nbytes[i]} (truncated/partial write)")
+        if crcs is not None and zlib.crc32(data) != crcs[i]:
+            raise CheckpointCorruptError(
+                f"{path}: leaf {i} crc32 mismatch (corrupt bytes)")
+
+
+def valid_steps(directory: str) -> list[int]:
+    """Committed steps that pass :func:`verify`, newest first — the
+    fallback-restore walk order for ``runtime.ft.run_with_recovery``."""
+    if not os.path.isdir(directory):
+        return []
+    steps = sorted(
+        (
+            int(d.split("_")[1])
+            for d in os.listdir(directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        ),
+        reverse=True,
+    )
+    good = []
+    for s in steps:
+        try:
+            verify(os.path.join(directory, f"step_{s:08d}"))
+        except CheckpointCorruptError:
+            continue
+        good.append(s)
+    return good
+
+
+def latest_valid_step(directory: str) -> Optional[int]:
+    """Newest committed step that passes integrity verification, skipping
+    corrupt/partial checkpoints (None when no checkpoint loads)."""
+    good = valid_steps(directory)
+    return good[0] if good else None
 
 
 def restore(
@@ -162,6 +283,7 @@ def restore(
     tree) if given — this is where elastic re-sharding happens: the stored
     logical arrays are placed onto whatever mesh the new job runs."""
     path = os.path.join(directory, f"step_{step:08d}")
+    verify(path)  # crc32 + byte counts — refuse to restore damaged bytes
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     leaves, treedef = _flatten(like)

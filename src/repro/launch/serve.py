@@ -43,19 +43,35 @@ from repro.launch.mesh import make_mesh
 from repro.models import lm
 from repro.parallel.cache import PagePool, PrefixIndex, page_shares
 from repro.parallel.sharding import ParallelConfig, split_tree, tree_shardings
+from repro.runtime import faults as faults_lib
 
 
 @dataclass
 class Request:
     """One serving request: prompt tokens in, up to ``max_new`` generated
     tokens out, sampled greedily at ``temperature`` 0 (the default) or
-    categorically under the request's own ``seed``."""
+    categorically under the request's own ``seed``.
+
+    Robustness fields (DESIGN.md §9): ``priority`` orders preemption under
+    page exhaustion (lower preempts first); ``deadline_s`` bounds wall time
+    from submission; a faulted request retries up to the engine's
+    ``max_retries`` with ``aborts``/``preemptions`` counting the restarts.
+    A retry clears ``out`` and replays from the prompt — sampling keys
+    derive only from ``(seed, len(out))``, so the replayed stream is
+    token-identical to an unfaulted run. A permanently failed request
+    carries the reason in ``error``."""
     rid: int
     prompt: np.ndarray           # (S_prompt,)
     max_new: int
     out: list = field(default_factory=list)
     temperature: float = 0.0     # 0 = greedy argmax
     seed: int = 0                # per-request sampling seed
+    priority: int = 0            # higher admits over lower under pressure
+    deadline_s: Optional[float] = None   # wall-clock budget from submit
+    submit_t: float = 0.0        # stamped by submit() (engine clock)
+    aborts: int = 0              # fault/NaN retries consumed
+    preemptions: int = 0         # page-pressure evictions (not retries)
+    error: Optional[str] = None  # permanent failure reason
 
 
 def _greedy(logits) -> np.ndarray:
@@ -251,8 +267,13 @@ class PagedServer:
     def __init__(self, cfg, pcfg, mesh, *, num_slots: int, page_size: int,
                  num_pages: int, max_pages_per_slot: int, params,
                  prefill_chunk: int = 16, plan=None, kv_quant=None,
-                 prefix_cache: bool = False, disagg: bool = False):
+                 prefix_cache: bool = False, disagg: bool = False,
+                 max_retries: int = 2, audit: bool = False,
+                 clock=time.perf_counter):
         self.cfg, self.mesh = cfg, mesh
+        self.max_retries = max_retries
+        self.audit = audit
+        self.clock = clock
         self.kv_quant = None if kv_quant in (None, "none") else kv_quant
         # The plan's Eq. 1 shares are honored as page budgets (below), not
         # as masked tail rows — every slot is schedulable, so only the
@@ -282,6 +303,11 @@ class PagedServer:
                                                  kv_quant=self.kv_quant)
         shares = None
         self.groups = [0] * num_slots
+        # Per-class Eq. 1 weights, kept for elastic shrink: after a device
+        # dropout the surviving classes' weights re-derive the pool shares
+        # and roles (DESIGN.md §9).
+        self.class_weights = (list(plan.token_counts)
+                              if plan is not None else [1])
         if plan is not None:
             shares = page_shares(plan.token_counts, num_pages - 1)
             n_g = len(shares)
@@ -347,15 +373,7 @@ class PagedServer:
                     "hand off")
 
         self.table = np.zeros((num_slots, max_pages_per_slot), np.int32)
-        self.serve_step = jax.jit(steps_lib.make_paged_serve_step(
-            cfg, self.pcfg, mesh, (num_slots, 1, cfg.d_model), page_size))
-        self.prefill_step = jax.jit(steps_lib.make_paged_prefill_step(
-            cfg, self.pcfg, mesh, page_size))
-        # Handoff/CoW-copy steps are built lazily on first use: most runs
-        # never transfer a slot or copy a page, and tests monkeypatch the
-        # two eager steps above.
-        self._handoff_step = None
-        self._copy_step = None
+        self._build_steps()
         self.slots: list[Optional[_PagedSlot]] = [None] * num_slots
         self.queue: deque[Request] = deque()
         self.free = sorted(range(num_slots), reverse=True)
@@ -365,12 +383,35 @@ class PagedServer:
         self._order = 0
         # Scheduler trace: ("admit", rid, slot), ("prefill_chunk", rid,
         # slot, n), ("decode", (slots...)), ("transfer", rid, src, dst),
-        # ("finish", rid, slot) — the observable schedule the disagg
-        # invariants and degenerate-reduction tests pin.
+        # ("finish", rid, slot) — plus the recovery events ("abort", rid,
+        # slot, reason), ("preempt", rid, slot), ("recover",),
+        # ("shrink", survivors) — the observable schedule the disagg
+        # invariants, degenerate-reduction, and chaos tests pin.
         self.trace: list[tuple] = []
         self.ttft_s: dict[int, float] = {}   # rid -> first-token latency
         self.transfers = 0
+        self.failed: list[Request] = []      # permanently failed requests
+        self.aborts = 0                      # fault/NaN slot aborts
+        self.preemptions = 0                 # page-pressure evictions
+        self.engine_recoveries = 0           # step-fn rebuilds
         self._run_t0 = 0.0
+
+    def _build_steps(self):
+        """(Re)build the jitted decode/prefill steps. Called at
+        construction and by engine-level recovery (``_recover_engine``),
+        which re-jits after an injected step failure — the page tables,
+        pool, and cache are host/functional state that survives the
+        rebuild, so live requests resume where they were."""
+        self.serve_step = jax.jit(steps_lib.make_paged_serve_step(
+            self.cfg, self.pcfg, self.mesh,
+            (self.num_slots, 1, self.cfg.d_model), self.page_size))
+        self.prefill_step = jax.jit(steps_lib.make_paged_prefill_step(
+            self.cfg, self.pcfg, self.mesh, self.page_size))
+        # Handoff/CoW-copy steps are built lazily on first use: most runs
+        # never transfer a slot or copy a page, and tests monkeypatch the
+        # two eager steps above.
+        self._handoff_step = None
+        self._copy_step = None
 
     def _need_pages(self, req: Request) -> int:
         # cache rows written = prompt + fed-back outputs (the last
@@ -389,6 +430,7 @@ class PagedServer:
                 f"request {req.rid} needs {self._need_pages(req)} pages "
                 f"> largest group share {max(self.pool.shares)} — it could "
                 f"never admit (FIFO would deadlock behind it)")
+        req.submit_t = self.clock()
         self.queue.append(req)
 
     # -- scheduling ticks -----------------------------------------------------
@@ -436,6 +478,15 @@ class PagedServer:
             if slot is None:
                 if matched:
                     self.pool.release(matched)   # undo the admission forks
+                # Graceful degradation under page exhaustion (DESIGN.md
+                # §9): rather than stalling admission behind a full pool,
+                # evict the lowest-priority decoding request (strictly
+                # below the head's priority) back into the queue and retry
+                # the head. A preemption is not a fault: it does not
+                # consume the victim's retry budget, and the victim
+                # re-admits right behind the head.
+                if self._preempt_for(req):
+                    continue
                 return
             self.queue.popleft()
             self.free.remove(slot)
@@ -519,6 +570,185 @@ class PagedServer:
         self.free.append(slot)
         self.trace.append(("finish", st.req.rid, slot))
 
+    # -- failure handling (DESIGN.md §9) --------------------------------------
+
+    def _release_slot(self, slot: int, st: _PagedSlot):
+        """Return EVERYTHING a live slot holds to the pool: one reference
+        per non-reclaimed page (window-reclaimed entries are already 0)
+        plus the unconsumed tail of its admission reservation — the same
+        accounting as ``_finish``, so refcounts, owner-group budgets, and
+        the prefix trie stay consistent on every abort path (the
+        structural oracle in tests/test_page_refcount.py pins this)."""
+        self.pool.release([p for p in st.pages if p != 0], st.group,
+                          unused_reserved=st.reserved - st.allocated)
+        self.table[slot, :] = 0
+        self.slots[slot] = None
+        self.free.append(slot)
+
+    def _fail_request(self, req: Request, reason: str):
+        req.error = reason
+        req.out.clear()
+        self.failed.append(req)
+        self.trace.append(("fail", req.rid, reason))
+
+    def _abort_slot(self, slot: int, *, reason: str, requeue_at: int = 0,
+                    count_retry: bool = True):
+        """Tear a live request out of its slot: release all pages +
+        reservations, clear the generated stream (sampling keys depend
+        only on ``(seed, len(out))``, so the replay is token-identical),
+        and either re-enqueue at ``requeue_at`` or fail permanently once
+        the retry budget is spent. Re-admission goes through the prefix
+        cache, so a retry re-prefills only the uncached suffix."""
+        st = self.slots[slot]
+        req = st.req
+        self._release_slot(slot, st)
+        req.out.clear()
+        self.trace.append(("abort", req.rid, slot, reason))
+        if count_retry:
+            req.aborts += 1
+            self.aborts += 1
+            if req.aborts > self.max_retries:
+                self._fail_request(
+                    req, f"retries exhausted ({self.max_retries}) "
+                         f"after {reason}")
+                return
+        self.queue.insert(min(requeue_at, len(self.queue)), req)
+
+    def _preempt_for(self, head: Request) -> bool:
+        """Evict the lowest-priority (ties: youngest) decoding request
+        strictly below ``head.priority``, re-enqueueing it directly behind
+        the head — bounded by the strict-inequality rule, so equal-priority
+        traffic can never livelock-thrash. False when no victim exists."""
+        victims = [(st.req.priority, -st.order, slot, st)
+                   for slot, st in enumerate(self.slots)
+                   if st is not None and st.pos >= len(st.req.prompt)
+                   and st.req.priority < head.priority]
+        if not victims:
+            return False
+        _, _, slot, st = min(victims)
+        st.req.preemptions += 1
+        self.preemptions += 1
+        self.trace.append(("preempt", st.req.rid, slot))
+        self._abort_slot(slot, reason="preempted", requeue_at=1,
+                         count_retry=False)
+        return True
+
+    def _expire_deadlines(self):
+        """Permanently fail requests past their wall-clock deadline, both
+        queued and in-flight (their pages release like any abort)."""
+        now = self.clock()
+
+        def expired(req):
+            return (req.deadline_s is not None
+                    and now - req.submit_t > req.deadline_s)
+
+        for req in [r for r in self.queue if expired(r)]:
+            self.queue.remove(req)
+            self._fail_request(req, "deadline exceeded in queue")
+        for slot, st in enumerate(self.slots):
+            if st is not None and expired(st.req):
+                req = st.req
+                self._release_slot(slot, st)
+                self.trace.append(("abort", req.rid, slot, "deadline"))
+                self._fail_request(req, "deadline exceeded")
+
+    def _recover_engine(self):
+        """Engine-level recovery after an injected step failure: re-jit
+        the step fns and resume from the surviving page tables. Step fns
+        are functional (inputs are never donated), so a step that raised
+        left ``self.cache``/``self.table`` at the pre-step state, and
+        every tick is idempotent on retry."""
+        self.engine_recoveries += 1
+        self._build_steps()
+        self.trace.append(("recover",))
+
+    def _on_fault(self, err: faults_lib.FaultError):
+        """Route an injected fault: a ``{"slot": k}`` payload is a
+        request-level failure (abort + bounded retry of that request,
+        front of queue); anything else is engine-level
+        (``_recover_engine``)."""
+        payload = err.fault.payload if err.fault is not None else {}
+        slot = payload.get("slot")
+        if slot is not None and self.slots[slot] is not None:
+            self._abort_slot(slot, reason=f"injected fault: {err}")
+        else:
+            self._recover_engine()
+
+    def _shrink(self, survivors):
+        """Elastic shrink after device dropout (DESIGN.md §9): abort every
+        live slot back to the queue in admission order (no retry charge —
+        the device died, not the request), drain the prefix index, rebind
+        the pool's group shares to the surviving classes' Eq. 1 weights,
+        and re-derive slot groups + disagg roles. Live requests carry
+        across: their cleared streams replay token-identically on the
+        shrunken engine. Queued requests whose worst case no longer fits
+        any surviving share fail permanently (FIFO would deadlock behind
+        them)."""
+        survivors = sorted(survivors if survivors is not None
+                           else range(len(self.pool.shares) - 1))
+        if not survivors:
+            raise RuntimeError("device dropout left no survivors")
+        live = sorted(
+            (st.order, slot) for slot, st in enumerate(self.slots)
+            if st is not None)
+        for i, (_, slot) in enumerate(live):
+            self._abort_slot(slot, reason="device dropout",
+                             requeue_at=i, count_retry=False)
+        if self.index is not None:
+            self.index.clear(self.pool)
+        weights = [self.class_weights[g] for g in survivors]
+        self.class_weights = weights
+        n_g = len(weights)
+        shares = (page_shares(weights, self.pool.num_pages - 1)
+                  if n_g > 1 else None)
+        self.pool.reshare(shares if shares is not None
+                          else [self.pool.num_pages - 1])
+        self.groups = [s * n_g // self.num_slots
+                       for s in range(self.num_slots)]
+        if self.disagg:
+            group_roles = derive_roles(weights)
+            self.roles = [group_roles[self.groups[s]]
+                          for s in range(self.num_slots)]
+        self.trace.append(("shrink", tuple(survivors)))
+        for req in [r for r in self.queue
+                    if self._need_pages(r) > max(self.pool.shares)]:
+            self.queue.remove(req)
+            self._fail_request(
+                req, f"needs {self._need_pages(req)} pages > largest "
+                     f"surviving share {max(self.pool.shares)}")
+
+    def assert_page_invariants(self):
+        """Structural oracle (DESIGN.md §9): on top of the pool's own
+        conservation checks, every live page's refcount must equal its
+        holder count — slot page-table entries + prefix-trie nodes — and
+        every group's reserved balance must equal the unconsumed
+        reservations of its live slots. Run after every abort path when
+        ``audit=True`` (the chaos tests) and cheap enough to leave on."""
+        self.pool.assert_consistent()
+        holders: dict[int, int] = {}
+        for st in self.slots:
+            if st is None:
+                continue
+            for p in st.pages:
+                if p != 0:
+                    holders[p] = holders.get(p, 0) + 1
+        if self.index is not None:
+            for p in self.index.pages():
+                holders[p] = holders.get(p, 0) + 1
+        refs = {p: self.pool.refcount(p)
+                for p in range(1, self.pool.num_pages)
+                if self.pool.refcount(p) > 0}
+        assert refs == holders, (
+            f"refcount/holder mismatch (leak or dangler): "
+            f"{refs} vs {holders}")
+        per_group = [0] * len(self.pool.shares)
+        for st in self.slots:
+            if st is not None:
+                per_group[st.group] += st.reserved - st.allocated
+        for g, want in enumerate(per_group):
+            assert self.pool._reserved[g] == want, (
+                g, self.pool._reserved[g], want)
+
     def _index_prompt(self, st: _PagedSlot):
         """Insert the request's FULL prompt pages into the radix index at
         prefill completion. Only whole pages go in (a partial page would
@@ -540,6 +770,7 @@ class PagedServer:
                 and self.roles[slot] != "decode"]
         if not cand:
             return False
+        faults_lib.inject("serve.prefill")
         _, slot, st = min(cand)
         n = min(self.prefill_chunk, len(st.req.prompt) - st.pos)
         self._ensure_pages(slot, st, st.length + n)
@@ -560,6 +791,15 @@ class PagedServer:
         self.trace.append(("prefill_chunk", st.req.rid, slot, n))
         if st.pos == len(st.req.prompt):
             self._index_prompt(st)
+            last = np.asarray(last, np.float32)
+            for f in faults_lib.inject("serve.prefill_logits"):
+                if f.kind == "nan":
+                    last = np.full_like(last, np.nan)
+            # NaN watchdog: non-finite first-token logits fail THIS
+            # request (bounded retry), never the engine.
+            if not np.all(np.isfinite(last)):
+                self._abort_slot(slot, reason="non-finite prefill logits")
+                return True
             st.req.out.append(next_token(last, st.req))
             self.ttft_s[st.req.rid] = time.perf_counter() - self._run_t0
             if len(st.req.out) >= st.req.max_new:
@@ -614,6 +854,7 @@ class PagedServer:
                and self.roles[slot] != "prefill"]
         if not dec:
             return False
+        faults_lib.inject("serve.decode")
         tokens = np.zeros((self.num_slots, 1), np.int32)
         active = np.zeros((self.num_slots,), bool)
         for slot, st in dec:
@@ -630,10 +871,20 @@ class PagedServer:
              "active": jnp.asarray(active)},
             self.cache,
         )
-        nxt = np.asarray(logits)
+        nxt = np.array(logits, np.float32)  # owned copy: faults may poison
         self.decode_times_s.append(time.perf_counter() - t0)
         self.trace.append(("decode", tuple(slot for slot, _ in dec)))
+        for f in faults_lib.inject("serve.logits"):
+            if f.kind == "nan":
+                nxt[int(f.payload.get("slot", dec[0][0]))] = np.nan
         for slot, st in dec:
+            # NaN watchdog: a non-finite logits row fails (and retries)
+            # the offending request only — the batch-mates' rows are
+            # independent outputs of the same macro-step and their
+            # streams proceed untouched (pinned by tests/test_chaos.py).
+            if not np.all(np.isfinite(nxt[slot, -1])):
+                self._abort_slot(slot, reason="non-finite decode logits")
+                continue
             st.length += 1
             st.req.out.append(next_token(nxt[slot, -1], st.req))
             self._reclaim(slot, st)
@@ -642,15 +893,29 @@ class PagedServer:
         return True
 
     def run(self, max_steps: int = 100000) -> list[Request]:
+        """Drive admission + ticks to completion. Injected faults route
+        through ``_on_fault`` (request abort/retry or engine re-jit) and
+        ``_shrink`` (device dropout); permanently failed requests land in
+        ``self.failed`` with ``error`` set, never in the return value."""
         done: list[Request] = []
         steps = 0
         self._run_t0 = time.perf_counter()
         while (self.queue or any(s is not None for s in self.slots)) \
                 and steps < max_steps:
-            self._admit()
-            advanced = self._transfer_tick()
-            advanced |= self._prefill_tick(done)
-            advanced |= self._decode_tick(done)
+            try:
+                self._expire_deadlines()
+                self._admit()
+                advanced = self._transfer_tick()
+                advanced |= self._prefill_tick(done)
+                advanced |= self._decode_tick(done)
+            except faults_lib.DeviceLostError as e:
+                self._shrink(e.survivors)
+                advanced = True
+            except faults_lib.FaultError as e:
+                self._on_fault(e)
+                advanced = True
+            if self.audit:
+                self.assert_page_invariants()
             if not advanced and not self.queue:
                 break
             steps += 1
@@ -665,7 +930,10 @@ class PagedServer:
 
     def stats(self) -> dict:
         out = {**self.pool.stats(), "admissions": self.admissions,
-               "transfers": self.transfers}
+               "transfers": self.transfers, "aborts": self.aborts,
+               "preemptions": self.preemptions,
+               "engine_recoveries": self.engine_recoveries,
+               "failed": len(self.failed)}
         if self.index is not None:
             out["prefix"] = self.index.stats()
         return out
@@ -729,6 +997,15 @@ def main(argv=None):
                          "a CoW radix index — repeated prefixes admit at "
                          "refcount+1 and only prefill their uncached "
                          "suffix (--paged only, DESIGN.md §7)")
+    ap.add_argument("--fault-spec", default=None,
+                    help="chaos fault plan: inline JSON or a JSON file "
+                         "({'seed': 0, 'faults': [{'site', 'kind', ...}]},"
+                         " runtime.faults) — deterministic injection into "
+                         "the serving ticks (DESIGN.md §9)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the page-pool structural oracle "
+                         "(refcounts == slot holders + prefix-trie nodes) "
+                         "after every scheduler step")
     ap.add_argument("--disagg", action="store_true",
                     help="split slots into prefill and decode roles; "
                          "finished prefills hand off by page-table "
@@ -740,6 +1017,11 @@ def main(argv=None):
         ap.error("--kv-quant requires --paged")
     if (args.prefix_cache or args.disagg) and not args.paged:
         ap.error("--prefix-cache/--disagg require --paged")
+    if (args.fault_spec or args.audit) and not args.paged:
+        ap.error("--fault-spec/--audit require --paged (the recovery "
+                 "machinery lives in the paged engine)")
+    if args.fault_spec:
+        faults_lib.install(faults_lib.load_plan(args.fault_spec))
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -813,7 +1095,7 @@ def main(argv=None):
             max_pages_per_slot=cdiv(args.max_seq, args.page_size),
             params=params, prefill_chunk=args.prefill_chunk, plan=plan,
             kv_quant=args.kv_quant, prefix_cache=args.prefix_cache,
-            disagg=args.disagg,
+            disagg=args.disagg, audit=args.audit,
         )
     else:
         server = BatchedServer(cfg, pcfg, mesh, num_slots=num_slots,
@@ -845,6 +1127,12 @@ def main(argv=None):
               f"{st['num_pages'] - 1} allocatable; "
               f"{st['total_allocs']} allocs, leak-free="
               f"{server.pool.stats()['free_pages'] == st['num_pages'] - 1}")
+        if st["aborts"] or st["preemptions"] or st["engine_recoveries"] \
+                or st["failed"]:
+            print(f"[serve] recovery: {st['aborts']} aborts, "
+                  f"{st['preemptions']} preemptions, "
+                  f"{st['engine_recoveries']} engine recoveries, "
+                  f"{st['failed']} failed")
         if "prefix" in st:
             pf = st["prefix"]
             hit = pf["hit_tokens"] / max(pf["lookup_tokens"], 1)
@@ -856,6 +1144,7 @@ def main(argv=None):
                   f"{server.transfers} page-table handoffs")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
+    faults_lib.install(None)
     return done
 
 

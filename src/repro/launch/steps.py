@@ -404,3 +404,22 @@ def sharded_opt_state(abstract_params, opt_cfg: adamw.OptimizerConfig,
             abstract_params,
         )
     return state
+
+
+def wrap_step_with_faults(step_fn, site: str):
+    """Host-level chaos wrapper for a jitted step callable (DESIGN.md §9).
+
+    Fault injection cannot live *inside* a jitted function — the hook
+    would fire once at trace time and never again — so the drivers wrap
+    their compiled steps here: ``inject(site)`` runs before every call
+    (raising for ``error``/``device_drop`` kinds, sleeping for ``delay``)
+    and the wrapped fn is only entered if no fault fires. With no
+    installed plan the wrapper adds one attribute read per step."""
+    from repro.runtime import faults as faults_lib
+
+    @functools.wraps(step_fn)
+    def wrapped(*args, **kwargs):
+        faults_lib.inject(site)
+        return step_fn(*args, **kwargs)
+
+    return wrapped

@@ -41,6 +41,8 @@ from repro.models import lm
 from repro.parallel.cache import PlanCache
 from repro.optim import adamw
 from repro.parallel.sharding import ParallelConfig, split_tree, tree_shardings
+from repro.runtime import elastic as elastic_lib
+from repro.runtime import faults as faults_lib
 from repro.runtime import ft as ft_lib
 from repro.runtime.straggler import StragglerConfig, StragglerMonitor
 
@@ -122,7 +124,20 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--fault-spec", default=None,
+                    help="chaos fault plan: inline JSON or a JSON file "
+                         "(runtime.faults; sites train.step / train.loss / "
+                         "train.preempt / ckpt.write, DESIGN.md §9)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="on device dropout, re-mesh over the survivors "
+                         "(runtime.elastic.choose_mesh_shape), re-derive "
+                         "the hetero plan's token shares, and resume from "
+                         "the newest valid checkpoint (requires --mesh)")
     args = ap.parse_args(argv)
+    if args.elastic and not args.mesh:
+        ap.error("--elastic requires --mesh (nothing to re-mesh)")
+    if args.fault_spec:
+        faults_lib.install(faults_lib.load_plan(args.fault_spec))
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -208,16 +223,26 @@ def main(argv=None):
                      * hetero_plan.batch_capacity)
     shape3 = (eff_batch, args.seq_len, cfg.d_model)
     plan_cache = PlanCache(4)
+    # Single-element boxes: the replan loop and the elastic device-loss
+    # handler both swap the live mesh/shape/step without re-entering main.
+    mesh_box = [mesh]
+    shape_box = [shape3]
+    mesh_gen = [0]   # bumped per re-mesh so PlanCache keys can't collide
 
     def jit_step_for(plan):
         def build():
             pc = dataclasses.replace(pcfg, hetero_plan=plan)
             return jax.jit(
-                steps_lib.make_train_step(cfg, pc, mesh, opt_cfg, shape3),
+                steps_lib.make_train_step(
+                    cfg, pc, mesh_box[0], opt_cfg, shape_box[0]),
                 donate_argnums=(0, 1),
             )
-        key = None if plan is None else plan.key()
-        return plan_cache.fetch(key, build)
+        key = (mesh_gen[0], None if plan is None else plan.key())
+        # The compiled step gets the chaos wrapper OUTSIDE the cache:
+        # injection is host-level (inside jit it would fire at trace time
+        # only) and must not be memoized away with the trace.
+        return steps_lib.wrap_step_with_faults(
+            plan_cache.fetch(key, build), "train.step")
 
     cur_plan = [hetero_plan]
     jit_step_box = [jit_step_for(hetero_plan)]
@@ -225,7 +250,7 @@ def main(argv=None):
     start_step = 0
     state = {"params": params, "opt": opt_state}
     if args.resume:
-        last = ckpt.latest_step(args.ckpt_dir)
+        last = ckpt.latest_valid_step(args.ckpt_dir)
         if last is not None:
             state, meta = ckpt.restore(args.ckpt_dir, last, state)
             start_step = int(meta["step"])
@@ -315,13 +340,67 @@ def main(argv=None):
                   f"aux {m.get('aux_loss', 0):.4f} lr {m['lr']:.2e} "
                   f"({m['step_time_s']:.2f}s)")
 
+    on_device_loss = None
+    if args.elastic:
+        def on_device_loss(err):
+            """Elastic shrink (DESIGN.md §9): re-mesh over the survivors,
+            re-derive the plan's token shares (hidden_splits stay fixed —
+            they pad param shapes, and the checkpoint must still load),
+            swap in a freshly-jitted step, and hand ``run_with_recovery``
+            the template to restore the newest valid checkpoint into."""
+            nonlocal n_workers, monitor, sim_skew
+            survivors = err.survivors
+            devs = (list(jax.devices())[:int(survivors)]
+                    if isinstance(survivors, int)
+                    else [jax.devices()[int(i)] for i in survivors])
+            if not devs:
+                raise RuntimeError("device dropout left no devices") \
+                    from err
+            new_shape = elastic_lib.choose_mesh_shape(len(devs))
+            mesh_box[0] = elastic_lib.make_mesh(
+                new_shape, ("data", "model"), devices=devs)
+            mesh_gen[0] += 1
+            new_plan = cur_plan[0]
+            if (new_plan is not None and new_plan.token_counts is not None
+                    and not isinstance(survivors, int)):
+                # Re-derive ONLY the Eq. 1 token shares over the surviving
+                # classes; hidden_splits/expert_bits pad the param shapes
+                # and must stay fixed or the checkpoint could not load.
+                surv_lat = tuple(new_plan.proxy_latencies[int(i)]
+                                 for i in survivors)
+                tmp = hetero_lib.make_hetero_plan(
+                    surv_lat, global_batch=args.global_batch)
+                new_plan = dataclasses.replace(
+                    new_plan, proxy_latencies=tmp.proxy_latencies,
+                    token_counts=tmp.token_counts,
+                    token_capacity=tmp.token_capacity)
+                shape_box[0] = (
+                    len(new_plan.token_counts) * new_plan.batch_capacity,
+                    args.seq_len, cfg.d_model)
+            cur_plan[0] = new_plan
+            if new_plan is not None and new_plan.token_counts is not None:
+                n_workers = len(new_plan.token_counts)
+                monitor = StragglerMonitor(
+                    num_workers=n_workers, global_batch=args.global_batch,
+                    cfg=StragglerConfig(window=8,
+                                        min_steps_between_replans=8),
+                    plan=new_plan)
+                if sim_skew is not None and not isinstance(survivors, int):
+                    sim_skew = sim_skew[[int(i) for i in survivors]]
+            jit_step_box[0] = jit_step_for(new_plan)
+            print(f"[elastic] device loss -> re-mesh {new_shape} over "
+                  f"{len(devs)} survivors")
+            return state, None
+
     ft_cfg = ft_lib.FTConfig(
         ckpt_dir=args.ckpt_dir, save_every=args.save_every
     )
     state, last = ft_lib.run_with_recovery(
         state=state, step_fn=step_fn, start_step=start_step,
         num_steps=args.steps, ft=ft_cfg, on_metrics=on_metrics,
+        on_device_loss=on_device_loss,
     )
+    faults_lib.install(None)
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(metrics_log, f, indent=1)

@@ -352,6 +352,35 @@ class PagePool:
         call this after their warm-up workload)."""
         self.peak_in_use_pages = self.in_use_pages
 
+    def reshare(self, shares: Sequence[int]) -> None:
+        """Rebind the per-group share budgets — the elastic-shrink path
+        (DESIGN.md §9): after a device class drops out, the serving engine
+        re-derives ``page_shares`` over the survivors and rebinds the pool
+        to the new group set. Only legal on a fully **drained** pool (no
+        live or reserved pages): live pages are charged to their owner
+        group, and re-binning them across a changed group set would break
+        the per-group conservation invariant — the engine aborts live
+        slots back to the queue first, which is also what carries their
+        requests across the shrink."""
+        if self.in_use_pages or self.reserved_pages:
+            raise RuntimeError(
+                f"reshare on a non-drained pool ({self.in_use_pages} live, "
+                f"{self.reserved_pages} reserved pages)")
+        usable = self.num_pages - 1
+        shares = list(shares)
+        if any(s < 0 for s in shares):
+            raise ValueError(f"negative page share: {shares}")
+        if sum(shares) > usable:
+            raise ValueError(
+                f"shares {shares} exceed {usable} allocatable pages")
+        self.shares = shares
+        g = len(shares)
+        self._free = list(shares)
+        self._reserved = [0] * g
+        self._in_use = [0] * g
+        self._free_list = list(range(self.num_pages - 1, 0, -1))
+        self.assert_consistent()
+
     def assert_consistent(self) -> None:
         for g, share in enumerate(self.shares):
             total = self._free[g] + self._reserved[g] + self._in_use[g]
@@ -534,6 +563,18 @@ class PrefixIndex:
         del best.parent.children[best.key]
         self.evictions += 1
         return True
+
+    def pages(self):
+        """Yield the physical page id of every trie node — one pool
+        reference each. The serving engine's structural audit
+        (``PagedServer.assert_page_invariants``, DESIGN.md §9) recomputes
+        refcounts as slot holders + these."""
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for child in node.children.values():
+                yield child.page
+                stack.append(child)
 
     def clear(self, pool: PagePool) -> int:
         """Drop every cached reference (leaf-first). Servers call this to

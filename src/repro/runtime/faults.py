@@ -1,0 +1,237 @@
+"""Deterministic fault injection: the chaos substrate (DESIGN.md §9).
+
+Every recovery mechanism in this repo — checkpoint fallback
+(``runtime.ft``), elastic re-mesh (``runtime.elastic``), and the paged
+serving engine's retry/preemption paths (``launch.serve``) — is driven by
+failures that production makes plentiful and a test environment makes
+rare. This module makes them plentiful *and* reproducible: a
+``FaultPlan`` is a seedable script of faults keyed to named injection
+**sites** threaded through the drivers behind no-op-when-disabled hooks
+(``inject(site)`` is a dict lookup + counter bump when no plan is
+installed — nothing else).
+
+Sites (the convention, not a closed set):
+
+  ``train.step``      before a training step executes (via
+                      ``launch.steps.wrap_step_with_faults``)
+  ``train.preempt``   polled once per step by ``ft.run_with_recovery``
+  ``train.loss``      after a step — ``nan`` poisons the reported loss
+  ``serve.decode``    before a paged decode macro-step
+  ``serve.prefill``   before a paged prefill chunk
+  ``serve.logits``    after a decode step — ``nan`` poisons one slot's row
+  ``serve.prefill_logits``  after a prefill chunk — same, for the
+                      first-token logits
+  ``ckpt.write``      after a checkpoint directory commits — ``truncate``
+                      / ``bitflip`` corrupt a committed leaf file, the
+                      storage failure ``checkpoint.manager.verify`` and
+                      ``latest_valid_step`` exist to catch
+
+Fault kinds and how sites interpret them:
+
+  ``error``        raise ``FaultError`` (device-error analogue). With a
+                   ``{"slot": k}`` payload the serving engine treats it as
+                   a request-level failure (abort + retry slot ``k``);
+                   without one it is engine-level (rebuild step fns,
+                   resume from the surviving page tables).
+  ``device_drop``  raise ``DeviceLostError`` carrying
+                   ``payload["survivors"]`` — the elastic-shrink trigger.
+  ``delay``        sleep ``payload["delay_s"]`` (straggler spike).
+  ``nan``          returned to the site, which poisons the named value.
+  ``preempt``      returned to the site (``ft`` sets the SIGTERM flag).
+  ``truncate`` / ``bitflip``  returned to the ``ckpt.write`` site, which
+                   applies :func:`corrupt_checkpoint`.
+
+Determinism: matching is by per-site call counters (``at`` = 0-based call
+index, ``every`` = periodic) with an optional seeded ``prob``; the plan's
+RNG is the only randomness and is owned by the plan, so the same plan
+against the same driver fires identically every run — which is what lets
+the chaos scenarios (`make chaos`, tests/test_chaos.py) assert bit-exact
+recovery instead of "it didn't crash".
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class FaultError(RuntimeError):
+    """An injected device-error-style step failure. ``fault`` carries the
+    spec that fired so recovery code can read its payload (e.g. which
+    slot a serving failure poisons)."""
+
+    def __init__(self, message: str, fault: Optional["Fault"] = None):
+        super().__init__(message)
+        self.fault = fault
+
+
+class DeviceLostError(FaultError):
+    """An injected device dropout. ``survivors`` names what is left —
+    an int count (training device pool) or a sequence of surviving
+    device-class/group ids (serving page-pool groups)."""
+
+    def __init__(self, message: str, fault: Optional["Fault"] = None,
+                 survivors: Any = None):
+        super().__init__(message, fault)
+        self.survivors = survivors
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scripted fault: fire at ``site`` when the site's call counter
+    matches ``at`` (0-based), or every ``every`` calls, or with
+    probability ``prob`` under the plan's seeded RNG; at most ``times``
+    firings. ``payload`` is interpreted per (site, kind) — see module
+    docstring."""
+
+    site: str
+    kind: str
+    at: Optional[int] = None
+    every: Optional[int] = None
+    prob: float = 0.0
+    times: int = 1
+    payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def matches(self, call: int, rng: np.random.Generator) -> bool:
+        """Does this fault fire on the site's ``call``-th invocation?"""
+        if self.at is not None:
+            return call == self.at
+        if self.every is not None:
+            return call % self.every == 0 and call > 0
+        if self.prob > 0.0:
+            return bool(rng.random() < self.prob)
+        return False
+
+
+class FaultPlan:
+    """A seeded, scriptable set of :class:`Fault` specs plus the per-site
+    call counters that make firing deterministic. ``fired`` logs every
+    firing as ``(site, call_index, kind)`` so tests can assert exactly
+    which faults a scenario exercised."""
+
+    def __init__(self, faults: Sequence[Fault] = (), seed: int = 0):
+        self.faults: List[List[Any]] = [[f, f.times] for f in faults]
+        self.rng = np.random.default_rng(seed)
+        self.calls: Dict[str, int] = {}
+        self.fired: List[tuple] = []
+
+    @classmethod
+    def from_spec(cls, spec: Dict[str, Any]) -> "FaultPlan":
+        """Build from a JSON-able dict:
+        ``{"seed": 0, "faults": [{"site": ..., "kind": ..., ...}, ...]}``.
+        """
+        faults = [Fault(**f) for f in spec.get("faults", ())]
+        return cls(faults, seed=int(spec.get("seed", 0)))
+
+    def fire(self, site: str, **ctx) -> List[Fault]:
+        """Advance ``site``'s call counter and return the faults that fire
+        on this call (decrementing their remaining ``times``)."""
+        call = self.calls.get(site, 0)
+        self.calls[site] = call + 1
+        out = []
+        for entry in self.faults:
+            f, remaining = entry
+            if f.site != site or remaining <= 0:
+                continue
+            if f.matches(call, self.rng):
+                entry[1] -= 1
+                self.fired.append((site, call, f.kind))
+                out.append(f)
+        return out
+
+
+def load_plan(spec: str) -> FaultPlan:
+    """Parse a fault plan from inline JSON (leading ``{``) or a JSON file
+    path — the ``--fault-spec`` CLI contract."""
+    text = spec
+    if not spec.lstrip().startswith("{"):
+        with open(spec) as fh:
+            text = fh.read()
+    return FaultPlan.from_spec(json.loads(text))
+
+
+_ACTIVE: Optional[FaultPlan] = None
+
+
+def install(plan: Optional[FaultPlan]) -> None:
+    """Install ``plan`` as the process-wide active plan (None disables)."""
+    global _ACTIVE
+    _ACTIVE = plan
+
+
+def active() -> Optional[FaultPlan]:
+    """The currently installed plan, or None."""
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def scope(plan: Optional[FaultPlan]):
+    """Install ``plan`` for the duration of a with-block (tests)."""
+    prev = _ACTIVE
+    install(plan)
+    try:
+        yield plan
+    finally:
+        install(prev)
+
+
+def inject(site: str, **ctx) -> List[Fault]:
+    """The no-op-when-disabled hook every instrumented site calls.
+
+    Raises for ``error``/``device_drop`` kinds, sleeps for ``delay``, and
+    returns the remaining fired faults (``nan``/``preempt``/``truncate``/
+    ``bitflip``) for the site to interpret. With no installed plan this is
+    a single attribute read."""
+    plan = _ACTIVE
+    if plan is None:
+        return []
+    fired = plan.fire(site, **ctx)
+    passthrough = []
+    for f in fired:
+        if f.kind == "device_drop":
+            raise DeviceLostError(
+                f"injected device loss at {site} "
+                f"(call {plan.calls[site] - 1})",
+                fault=f, survivors=f.payload.get("survivors"))
+        if f.kind == "error":
+            raise FaultError(
+                f"injected fault at {site} (call {plan.calls[site] - 1})",
+                fault=f)
+        if f.kind == "delay":
+            time.sleep(float(f.payload.get("delay_s", 0.01)))
+        else:
+            passthrough.append(f)
+    return passthrough
+
+
+# ---------------------------------------------------------------------------
+# checkpoint corruption (the ``ckpt.write`` site's payload interpreter)
+# ---------------------------------------------------------------------------
+
+def corrupt_checkpoint(path: str, fault: Fault) -> str:
+    """Damage one committed leaf file under checkpoint directory ``path``:
+    ``truncate`` drops the trailing half of its bytes (a partial write the
+    rename ordering can no longer protect against once injected *after*
+    the commit), ``bitflip`` flips one bit mid-file (silent media
+    corruption). Returns the damaged file's path. Both are exactly what
+    ``checkpoint.manager.verify``'s byte counts and crc32 exist to catch.
+    """
+    leaf = int(fault.payload.get("leaf", 0))
+    target = os.path.join(path, f"a_{leaf:05d}.npy")
+    with open(target, "rb") as fh:
+        data = bytearray(fh.read())
+    if fault.kind == "truncate":
+        data = data[: max(1, len(data) // 2)]
+    elif fault.kind == "bitflip":
+        pos = int(fault.payload.get("offset", len(data) // 2))
+        data[pos] ^= 0x40
+    else:
+        raise ValueError(f"unknown corruption kind {fault.kind!r}")
+    with open(target, "wb") as fh:
+        fh.write(bytes(data))
+    return target

@@ -2,17 +2,30 @@
 
 The training driver wraps its step loop in ``run_with_recovery``:
 
-  * periodic async checkpoints (every ``save_every`` steps),
+  * periodic async checkpoints (every ``save_every`` steps), with
+    retention GC ordered *after* each write lands (the GC callback runs
+    in the saver's worker thread post-commit, so retention is computed
+    against a listing that contains the new checkpoint and can never
+    race the in-flight write),
   * a SIGTERM/SIGINT handler that requests an immediate checkpoint and a
-    clean exit (TPU preemption notice),
-  * on step failure (device error, NaN-loss watchdog): restore the latest
-    checkpoint and continue, up to ``max_failures`` times — the
-    single-controller analogue of a coordinated multi-host restart,
+    clean exit (TPU preemption notice) — installed for exactly the
+    lifetime of the loop (try/finally), so no raise path leaves the
+    process's signal handlers hijacked,
+  * on step failure (device error, NaN-loss watchdog): restore the newest
+    checkpoint **that passes integrity verification** (corrupt/partial
+    checkpoints are skipped — ``checkpoint.manager.valid_steps``) and
+    continue, governed by a sliding-window failure budget with
+    exponential backoff + deterministic jitter,
+  * on ``faults.DeviceLostError`` (device dropout): hand the error to the
+    caller's ``on_device_loss`` hook, which re-meshes via
+    ``runtime.elastic``, re-derives the plan, and returns the new state
+    template + shardings to restore under (DESIGN.md §9),
   * deterministic data resume: the data pipeline is a pure function of the
     step counter, so restore(step) replays the exact remaining stream.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import signal
 import time
@@ -22,17 +35,72 @@ import jax
 import numpy as np
 
 from repro.checkpoint import manager as ckpt
+from repro.runtime import faults as faults_lib
 
 
 @dataclasses.dataclass
 class FTConfig:
     """Fault-tolerance policy: checkpoint cadence/retention and the
-    failure budget of the retry loop (``run_with_recovery``)."""
+    failure budget of the retry loop (``run_with_recovery``).
+
+    The budget is a **sliding window**: at most ``max_failures`` failures
+    within the trailing ``failure_window_s`` seconds — a lifetime counter
+    would eventually kill any long job with a nonzero background failure
+    rate, while a window distinguishes a crash loop from sparse noise.
+    Each failure inside the window backs off ``backoff_base_s * 2**(n-1)``
+    seconds (capped at ``backoff_max_s``) plus deterministic jitter from
+    ``seed``."""
     ckpt_dir: str = "checkpoints"
     save_every: int = 100
     keep: int = 3
     max_failures: int = 3
+    failure_window_s: float = 300.0
+    backoff_base_s: float = 0.05
+    backoff_max_s: float = 5.0
+    seed: int = 0
     nan_is_failure: bool = True
+
+
+class FailureBudget:
+    """Sliding-window failure accounting with exponential backoff.
+
+    ``record()`` stamps a failure and returns the backoff to sleep before
+    retrying; ``exhausted`` is True once more than ``max_failures``
+    failures landed within the trailing window. ``clock`` is injectable so
+    tests can drive the window without real time passing; jitter comes
+    from a generator seeded by ``seed`` — two runs of the same scenario
+    back off identically (the chaos harness asserts on it)."""
+
+    def __init__(self, max_failures: int, window_s: float, *,
+                 base_s: float = 0.05, max_s: float = 5.0, seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.max_failures = max_failures
+        self.window_s = window_s
+        self.base_s = base_s
+        self.max_s = max_s
+        self.clock = clock
+        self.rng = np.random.default_rng(seed)
+        self.stamps: collections.deque = collections.deque()
+
+    def _prune(self, now: float) -> None:
+        while self.stamps and now - self.stamps[0] > self.window_s:
+            self.stamps.popleft()
+
+    def record(self) -> float:
+        """Stamp a failure; return the backoff sleep (seconds)."""
+        now = self.clock()
+        self._prune(now)
+        self.stamps.append(now)
+        n = len(self.stamps)
+        backoff = min(self.base_s * 2 ** (n - 1), self.max_s)
+        jitter = float(self.rng.uniform(0.0, 0.25)) * backoff
+        return backoff + jitter
+
+    @property
+    def exhausted(self) -> bool:
+        """More than ``max_failures`` failures inside the window?"""
+        self._prune(self.clock())
+        return len(self.stamps) > self.max_failures
 
 
 class PreemptionFlag:
@@ -55,6 +123,22 @@ class PreemptionFlag:
             signal.signal(sig, h)
 
 
+def _restore_latest_valid(ft, template, shardings):
+    """Walk committed checkpoints newest→oldest, returning the first that
+    verifies AND loads into ``template`` — the fallback path for a newest
+    checkpoint that is corrupt, partial, or shape-incompatible."""
+    for s in ckpt.valid_steps(ft.ckpt_dir):
+        try:
+            state, meta = ckpt.restore(ft.ckpt_dir, s, template, shardings)
+        except (ckpt.CheckpointCorruptError, AssertionError,
+                ValueError, OSError) as exc:
+            print(f"[ft] checkpoint step {s} unusable ({exc!r}); "
+                  f"trying older")
+            continue
+        return state, meta, s
+    return None
+
+
 def run_with_recovery(
     *,
     state: Any,
@@ -64,48 +148,95 @@ def run_with_recovery(
     ft: FTConfig,
     shardings: Optional[Any] = None,
     on_metrics: Optional[Callable[[int, dict], None]] = None,
+    on_device_loss: Optional[
+        Callable[[faults_lib.DeviceLostError], tuple[Any, Any]]
+    ] = None,
+    sleep_fn: Callable[[float], None] = time.sleep,
+    clock: Callable[[], float] = time.monotonic,
 ) -> tuple[Any, int]:
     """Run ``step_fn(state, step) -> (state, metrics)`` with checkpointing
-    and restore-on-failure. Returns (final_state, last_step)."""
+    and restore-on-failure. Returns (final_state, last_step).
+
+    ``on_device_loss(err) -> (state_template, shardings)`` is the elastic
+    hook: on an injected/real device dropout it must rebuild the mesh and
+    step fn (mutating whatever closure ``step_fn`` reads) and return the
+    new state template + shardings to restore the checkpoint under; with
+    no hook, device loss is fatal. ``sleep_fn``/``clock`` are injectable
+    for deterministic tests."""
     saver = ckpt.AsyncSaver()
     preempt = PreemptionFlag()
-    failures = 0
+    budget = FailureBudget(
+        ft.max_failures, ft.failure_window_s, base_s=ft.backoff_base_s,
+        max_s=ft.backoff_max_s, seed=ft.seed, clock=clock)
     step = start_step
 
     def save(sync=False):
-        saver.save(ft.ckpt_dir, step, state, meta={"step": step})
+        # GC runs in the saver thread after the write commits: retention
+        # sees the new checkpoint and never prunes under an in-flight one.
+        saver.save(ft.ckpt_dir, step, state, meta={"step": step},
+                   post=lambda _path: ckpt.gc_old(ft.ckpt_dir, ft.keep))
         if sync:
             saver.wait()
-        ckpt.gc_old(ft.ckpt_dir, ft.keep)
 
-    while step < num_steps:
+    def recover(err) -> None:
+        nonlocal state, step
+        backoff = budget.record()
+        if budget.exhausted:
+            raise err
         try:
-            new_state, metrics = step_fn(state, step)
-            if ft.nan_is_failure and "loss" in metrics:
-                if not np.isfinite(float(metrics["loss"])):
-                    raise FloatingPointError(f"non-finite loss at {step}")
-            state = new_state
-            step += 1
-            if on_metrics:
-                on_metrics(step, metrics)
-            if step % ft.save_every == 0:
-                save()
-            if preempt.flag:
-                save(sync=True)
-                break
-        except Exception as e:  # noqa: BLE001 — any step failure
-            failures += 1
-            if failures > ft.max_failures:
-                raise
-            last = ckpt.latest_step(ft.ckpt_dir)
-            if last is None:
-                raise RuntimeError("failure before first checkpoint") from e
-            saver.wait()
-            state, meta = ckpt.restore(ft.ckpt_dir, last, state, shardings)
-            step = int(meta["step"])
-            print(f"[ft] step failure ({e!r}); restored step {step}, "
-                  f"failure {failures}/{ft.max_failures}")
+            saver.wait()  # settle the in-flight write before reading
+        except Exception as werr:  # noqa: BLE001 — a failed save is
+            # logged, not fatal: the restore walk below only trusts
+            # checkpoints that verify.
+            print(f"[ft] async save failed during recovery: {werr!r}")
+        got = _restore_latest_valid(ft, state, shardings)
+        if got is None:
+            raise RuntimeError("failure before first valid checkpoint") \
+                from err
+        state, meta, restored = got
+        step = int(meta["step"])
+        sleep_fn(backoff)
+        print(f"[ft] step failure ({err!r}); restored step {step} "
+              f"(ckpt {restored}), {len(budget.stamps)} failures in "
+              f"window, backoff {backoff:.3f}s")
 
+    try:
+        while step < num_steps:
+            try:
+                for f in faults_lib.inject("train.preempt", step=step):
+                    if f.kind == "preempt":
+                        preempt.flag = True
+                new_state, metrics = step_fn(state, step)
+                for f in faults_lib.inject("train.loss", step=step):
+                    if f.kind == "nan" and "loss" in metrics:
+                        metrics = dict(metrics, loss=float("nan"))
+                if ft.nan_is_failure and "loss" in metrics:
+                    if not np.isfinite(float(metrics["loss"])):
+                        raise FloatingPointError(
+                            f"non-finite loss at {step}")
+                state = new_state
+                step += 1
+                if on_metrics:
+                    on_metrics(step, metrics)
+                if step % ft.save_every == 0:
+                    save()
+                if preempt.flag:
+                    save(sync=True)
+                    break
+            except faults_lib.DeviceLostError as e:
+                if on_device_loss is None:
+                    raise
+                # Elastic shrink: the hook re-meshes over the survivors
+                # and hands back the template/shardings for the new
+                # topology; the checkpoint's LOGICAL arrays then restore
+                # onto the smaller mesh (DESIGN.md §9).
+                template, shardings = on_device_loss(e)
+                state = template
+                recover(e)
+                print(f"[ft] resumed on shrunken mesh at step {step}")
+            except Exception as e:  # noqa: BLE001 — any step failure
+                recover(e)
+    finally:
+        preempt.restore_handlers()
     saver.wait()
-    preempt.restore_handlers()
     return state, step

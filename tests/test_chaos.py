@@ -1,0 +1,383 @@
+"""End-to-end chaos scenarios (ISSUE 7 acceptance): scripted fault plans
+drive every recovery path and the outcome is asserted BIT-EXACT against
+an unfaulted reference, never just "it didn't crash".
+
+  (a) training — injected step failure while the newest checkpoint is
+      corrupt: fallback restore from the older valid one, bit-exact
+      resume vs the unfaulted trajectory;
+  (b) serving — injected mid-decode/mid-prefill failures, an engine-level
+      step failure, NaN logits, deadline expiry, and a forced priority
+      preemption all recover with greedy streams token-identical to the
+      no-fault reference, with the page-pool structural oracle
+      (refcounts == slot holders + trie) audited after every step;
+  (c) elastic — injected device dropout re-meshes over the survivors
+      (serving: ``_shrink``; training CLI: ``choose_mesh_shape`` in a
+      subprocess with 8 fake devices) and the run completes.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.checkpoint import manager as ckpt
+from repro.core import hetero as hetero_lib
+from repro.launch import serve, steps as steps_lib
+from repro.models import lm
+from repro.parallel.sharding import ParallelConfig, split_tree
+from repro.runtime import faults as faults_lib
+from repro.runtime import ft as ft_lib
+
+MAX_SEQ = 32
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    """One cheap all-attention config (prefix-cache capable) shared by
+    every serving scenario; f32 keeps greedy margins wide."""
+    cfg = dataclasses.replace(cfglib.get_smoke_config("gemma-2b"),
+                              dtype="float32")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, pcfg, params
+
+
+def _mk_requests(cfg, specs, seed=5):
+    """Deterministic requests from (plen, max_new) specs — fixed shapes so
+    the fault plans' call indices line up with known slots."""
+    rng = np.random.default_rng(seed)
+    return [
+        serve.Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=plen).astype(
+                np.int32),
+            max_new=max_new,
+        )
+        for i, (plen, max_new) in enumerate(specs)
+    ]
+
+
+def _refs(cfg, pcfg, params, reqs):
+    step = jax.jit(steps_lib.make_serve_step(
+        cfg, pcfg, None, (1, 1, cfg.d_model)))
+    return {
+        r.rid: serve.greedy_reference(
+            cfg, pcfg, None, params, r.prompt, r.max_new,
+            max_seq=MAX_SEQ, step=step)
+        for r in reqs
+    }
+
+
+def _server(cfg, pcfg, params, **kw):
+    maxp = MAX_SEQ // 4
+    base = dict(num_slots=3, page_size=4, num_pages=1 + 3 * maxp,
+                max_pages_per_slot=maxp, params=params, prefill_chunk=5,
+                audit=True)
+    base.update(kw)
+    return serve.PagedServer(cfg, pcfg, None, **base)
+
+
+def _run_all(server, reqs):
+    for r in reqs:
+        server.submit(dataclasses.replace(r, out=[]))
+    return server.run()
+
+
+def _assert_drained(server):
+    """Leak check: after flushing the prefix cache's retained pages, the
+    pool must be exactly full again."""
+    server.assert_page_invariants()
+    server.drop_prefix_cache()
+    server.pool.assert_consistent()
+    assert server.pool.free_pages == sum(server.pool.shares)
+    assert (server.table == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# (b) serving recovery
+# ---------------------------------------------------------------------------
+
+def test_mid_decode_fault_retries_through_prefix_cache(engine_setup):
+    """A mid-decode injected device error aborts only the poisoned slot;
+    the retry re-admits through the prefix cache (only the uncached
+    suffix re-prefills) and every stream ends token-identical to the
+    no-fault reference. A second, mid-prefill fault rides along."""
+    cfg, pcfg, params = engine_setup
+    reqs = _mk_requests(cfg, [(6, 5), (9, 4), (7, 4), (11, 3), (6, 4)])
+    refs = _refs(cfg, pcfg, params, reqs)
+
+    plan = faults_lib.FaultPlan([
+        # decode call 2: slot 0 (rid 0, FIFO-first admit) is mid-stream
+        faults_lib.Fault(site="serve.decode", kind="error", at=2,
+                         payload={"slot": 0}),
+        faults_lib.Fault(site="serve.prefill", kind="error", at=4,
+                         payload={"slot": 1}),
+    ])
+    srv = _server(cfg, pcfg, params, prefix_cache=True)
+    with faults_lib.scope(plan):
+        done = _run_all(srv, reqs)
+
+    assert len(plan.fired) == 2
+    assert srv.failed == []
+    assert len(done) == len(reqs)
+    for r in done:
+        assert r.out == refs[r.rid], f"rid={r.rid} diverged after retry"
+    # both faults turned into request-level aborts (slots were live)
+    assert srv.aborts == 2
+    assert [t for t in srv.trace if t[0] == "abort"]
+    # rid 0 finished prefill before its abort, so its full prompt page was
+    # indexed — the retry's admission match reused it (>= one page's worth)
+    assert srv.index.hit_tokens >= srv.page_size
+    _assert_drained(srv)
+
+
+def test_engine_level_fault_rejits_and_streams_survive(engine_setup):
+    """A step failure with no slot payload is engine-level: the step fns
+    are rebuilt and the live page tables carry every request across —
+    zero aborts, zero failed, reference-identical streams."""
+    cfg, pcfg, params = engine_setup
+    reqs = _mk_requests(cfg, [(6, 4), (9, 3), (7, 5), (5, 4)])
+    refs = _refs(cfg, pcfg, params, reqs)
+
+    plan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="serve.decode", kind="error", at=1),
+    ])
+    srv = _server(cfg, pcfg, params)
+    with faults_lib.scope(plan):
+        done = _run_all(srv, reqs)
+
+    assert plan.fired == [("serve.decode", 1, "error")]
+    assert srv.engine_recoveries == 1 and ("recover",) in srv.trace
+    assert srv.aborts == 0 and srv.failed == []
+    assert len(done) == len(reqs)
+    for r in done:
+        assert r.out == refs[r.rid], f"rid={r.rid} diverged across re-jit"
+    _assert_drained(srv)
+
+
+def test_nan_watchdog_fails_request_not_engine(engine_setup):
+    """NaN logits in one slot's row fail THAT request only (satellite c):
+    with the retry budget at zero it lands in ``failed``, while its
+    same-macro-step batchmates' streams stay reference-identical and the
+    engine keeps serving."""
+    cfg, pcfg, params = engine_setup
+    reqs = _mk_requests(cfg, [(6, 4), (9, 4), (7, 5), (5, 3)])
+    refs = _refs(cfg, pcfg, params, reqs)
+
+    plan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="serve.logits", kind="nan", at=1,
+                         payload={"slot": 0}),
+    ])
+    srv = _server(cfg, pcfg, params, max_retries=0)
+    with faults_lib.scope(plan):
+        done = _run_all(srv, reqs)
+
+    assert plan.fired == [("serve.logits", 1, "nan")]
+    assert srv.engine_recoveries == 0          # the engine never flinched
+    assert len(srv.failed) == 1
+    assert srv.failed[0].rid == 0
+    assert "non-finite decode logits" in srv.failed[0].error
+    assert srv.failed[0].out == []             # no poisoned tokens leak out
+    assert {r.rid for r in done} == {1, 2, 3}
+    for r in done:
+        assert r.out == refs[r.rid], f"batchmate rid={r.rid} was perturbed"
+    _assert_drained(srv)
+
+
+def test_priority_preemption_replays_token_identical(engine_setup):
+    """Page exhaustion + a higher-priority head: the youngest decoding
+    low-priority request is preempted (pages released, stream cleared),
+    re-admits right behind the head, and replays token-identically —
+    preemption never consumes its retry budget."""
+    cfg, pcfg, params = engine_setup
+    low1, low2 = _mk_requests(cfg, [(8, 8), (8, 8)], seed=3)
+    (high,) = _mk_requests(cfg, [(4, 2)], seed=9)
+    high = dataclasses.replace(high, rid=2, priority=5)
+    reqs = [low1, low2, high]
+    refs = _refs(cfg, pcfg, params, reqs)
+
+    # a free slot but no pages: the two low-priority requests reserve the
+    # whole pool (4 each), so the high-priority head has a slot to enter
+    # yet can only reserve by preempting.
+    srv = _server(cfg, pcfg, params, num_slots=3, num_pages=1 + 8,
+                  max_pages_per_slot=4, prefix_cache=True)
+    done = _run_all(srv, reqs)
+
+    assert srv.preemptions == 1
+    preempts = [t for t in srv.trace if t[0] == "preempt"]
+    assert preempts == [("preempt", 0, 0)]     # rid 0 was the victim
+    assert srv.failed == [] and srv.aborts == 0   # no retry budget spent
+    assert len(done) == 3
+    for r in done:
+        assert r.out == refs[r.rid], f"rid={r.rid} diverged after preempt"
+    victim = next(r for r in done if r.rid == 0)
+    assert victim.preemptions == 1
+    # its re-admission went through the radix index (prefix pages reused)
+    assert srv.index.hit_tokens >= srv.page_size
+    _assert_drained(srv)
+
+
+class _TickClock:
+    """Deterministic wall clock: +1 per reading."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def test_deadline_expiry_queued_and_in_flight(engine_setup):
+    cfg, pcfg, params = engine_setup
+    # single slot: r0 occupies it, r1's tiny deadline expires in queue
+    r0, r1 = _mk_requests(cfg, [(6, 3), (6, 3)])
+    r1 = dataclasses.replace(r1, deadline_s=2.0)
+    srv = _server(cfg, pcfg, params, num_slots=1, num_pages=1 + 8,
+                  max_pages_per_slot=8, clock=_TickClock())
+    done = _run_all(srv, [r0, r1])
+    assert [r.rid for r in done] == [0]
+    assert done[0].out == _refs(cfg, pcfg, params, [r0])[0]
+    assert len(srv.failed) == 1
+    assert srv.failed[0].error == "deadline exceeded in queue"
+    _assert_drained(srv)
+
+    # in-flight expiry: admitted and decoding, but max_new is far beyond
+    # what the deadline allows — pages release like any abort
+    (r2,) = _mk_requests(cfg, [(6, 20)], seed=7)
+    r2 = dataclasses.replace(r2, deadline_s=10.0)
+    srv2 = _server(cfg, pcfg, params, num_slots=1, num_pages=1 + 8,
+                   max_pages_per_slot=8, clock=_TickClock())
+    done2 = _run_all(srv2, [r2])
+    assert done2 == []
+    assert len(srv2.failed) == 1
+    assert srv2.failed[0].error == "deadline exceeded"   # not "... in queue"
+    assert any(t[:1] == ("abort",) and t[3] == "deadline"
+               for t in srv2.trace)
+    _assert_drained(srv2)
+
+
+def test_device_dropout_shrinks_pool_and_carries_requests(engine_setup):
+    """(c, serving half) An injected device dropout mid-run: live slots
+    are aborted back to the queue (no retry charge), the prefix index is
+    drained, the pool reshares over the surviving class's weight, and
+    every request still ends reference-identical on the shrunken pool."""
+    cfg, pcfg, params = engine_setup
+    plan_h = hetero_lib.make_hetero_plan((1.0, 2.0), global_batch=4)
+    reqs = _mk_requests(cfg, [(6, 4), (9, 3), (7, 4), (5, 5), (6, 3),
+                              (10, 4)])
+    refs = _refs(cfg, pcfg, params, reqs)
+
+    fplan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="serve.decode", kind="device_drop", at=3,
+                         payload={"survivors": [0]}),
+    ])
+    maxp = MAX_SEQ // 4
+    srv = _server(cfg, pcfg, params, num_slots=4,
+                  num_pages=1 + 4 * maxp, plan=plan_h, prefix_cache=True)
+    assert len(srv.pool.shares) == 2           # two device classes pre-drop
+    with faults_lib.scope(fplan):
+        done = _run_all(srv, reqs)
+
+    assert fplan.fired == [("serve.decode", 3, "device_drop")]
+    assert ("shrink", (0,)) in srv.trace
+    assert len(srv.pool.shares) == 1           # one surviving class
+    assert set(srv.groups) == {0}
+    assert srv.failed == []                    # everything fit + finished
+    assert len(done) == len(reqs)
+    for r in done:
+        assert r.out == refs[r.rid], f"rid={r.rid} diverged across shrink"
+    _assert_drained(srv)
+
+
+# ---------------------------------------------------------------------------
+# (a) training: step failure + corrupt newest checkpoint, fault-plan-driven
+# ---------------------------------------------------------------------------
+
+def _train_step(state, step):
+    faults_lib.inject("train.step")
+    return ({"x": state["x"] + jnp.float32(step + 1)},
+            {"loss": float(step)})
+
+
+def _train_run(tmp_path, steps=8):
+    ft = ft_lib.FTConfig(ckpt_dir=str(tmp_path), save_every=2, keep=3,
+                         max_failures=3, backoff_base_s=0.0)
+    return ft_lib.run_with_recovery(
+        state={"x": jnp.float32(0.0)}, step_fn=_train_step, start_step=0,
+        num_steps=steps, ft=ft, sleep_fn=lambda s: None)
+
+
+def test_training_chaos_corrupt_newest_plus_step_failure(tmp_path, capsys):
+    """The full scenario (a) driven end-to-end by one fault plan: the
+    step-4 checkpoint is bit-flipped as it commits (``ckpt.write``), then
+    step 5 hits an injected device error — recovery must skip the corrupt
+    newest checkpoint, restore step 2, and replay to a final state
+    bit-exact with the unfaulted run."""
+    ref_state, _ = _train_run(tmp_path / "ref")
+
+    plan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="ckpt.write", kind="bitflip", at=1,
+                         payload={"leaf": 0}),        # 2nd write = step 4
+        faults_lib.Fault(site="train.step", kind="error", at=5),
+    ])
+    d = tmp_path / "chaos"
+    with faults_lib.scope(plan):
+        state, last = _train_run(d)
+
+    assert last == 8
+    assert set(plan.fired) == {("ckpt.write", 1, "bitflip"),
+                               ("train.step", 5, "error")}
+    np.testing.assert_array_equal(np.asarray(state["x"]),
+                                  np.asarray(ref_state["x"]))
+    # the fallback really happened: the corrupt step-4 checkpoint was
+    # skipped by the verification walk and step 2 restored instead
+    out = capsys.readouterr().out
+    assert "restored step 2" in out
+    # the replay re-saved step 4 over the damaged directory, so by the end
+    # the newest retained checkpoints all verify
+    assert ckpt.latest_valid_step(str(d)) == ckpt.latest_step(str(d)) == 8
+
+
+# ---------------------------------------------------------------------------
+# (c) training CLI: device dropout -> choose_mesh_shape re-mesh -> resume
+# ---------------------------------------------------------------------------
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_train_cli_elastic_device_dropout(tmp_path):
+    """Subprocess with 8 fake devices: ``--elastic --fault-spec`` injects
+    a device dropout at step 3 of a 2x2-mesh MoE run; the driver must
+    re-mesh over the 2 survivors, restore the step-2 checkpoint onto the
+    shrunken mesh, and finish all 6 steps."""
+    spec = ('{"faults": [{"site": "train.step", "kind": "device_drop",'
+            ' "at": 3, "payload": {"survivors": 2}}]}')
+    code = f"""
+from repro.launch import train
+train.main([
+    "--arch", "qwen3-moe-30b-a3b", "--smoke",
+    "--steps", "6", "--global-batch", "4", "--seq-len", "16",
+    "--mesh", "2,2", "--elastic", "--save-every", "2",
+    "--ckpt-dir", {str(tmp_path / "ckpt")!r},
+    "--fault-spec", {spec!r},
+])
+print("RESULT-OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "[elastic] device loss -> re-mesh (2, 1) over 2 survivors" \
+        in res.stdout
+    assert "[ft] resumed on shrunken mesh" in res.stdout
+    assert "[train] finished at step 6" in res.stdout
+    assert "RESULT-OK" in res.stdout

@@ -166,3 +166,124 @@ def test_manifest_is_valid_json(tmp_path):
         m = json.load(f)
     assert m["step"] == 4 and m["num_leaves"] == 5 and m["meta"] == {
         "note": "hi"}
+
+
+# ---------------------------------------------------------------------------
+# integrity: crc32/nbytes manifest record, verify, latest_valid_step (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+from repro.runtime import faults as faults_lib  # noqa: E402
+
+
+def _corrupt(path, leaf=0, mode="bitflip"):
+    f = path / f"a_{leaf:05d}.npy"
+    data = bytearray(f.read_bytes())
+    if mode == "bitflip":
+        data[len(data) // 2] ^= 0x40
+    else:
+        data = data[: len(data) // 2]
+    f.write_bytes(bytes(data))
+
+
+def test_manifest_records_crc_and_bytes(tmp_path):
+    manager.save(str(tmp_path), 1, _tree())
+    with open(tmp_path / "step_00000001" / "manifest.json") as f:
+        m = json.load(f)
+    assert len(m["crc32"]) == m["num_leaves"]
+    assert len(m["nbytes"]) == m["num_leaves"]
+    # the recorded counts are the exact on-disk file sizes
+    for i, n in enumerate(m["nbytes"]):
+        assert (tmp_path / "step_00000001" / f"a_{i:05d}.npy"
+                ).stat().st_size == n
+    manager.verify(str(tmp_path / "step_00000001"))  # clean -> no raise
+
+
+def test_verify_catches_bitflip_and_truncation(tmp_path):
+    manager.save(str(tmp_path), 1, _tree())
+    p = tmp_path / "step_00000001"
+    _corrupt(p, leaf=2, mode="bitflip")
+    with pytest.raises(manager.CheckpointCorruptError, match="crc32"):
+        manager.verify(str(p))
+    manager.save(str(tmp_path), 2, _tree())
+    p2 = tmp_path / "step_00000002"
+    _corrupt(p2, leaf=0, mode="truncate")
+    with pytest.raises(manager.CheckpointCorruptError, match="truncated"):
+        manager.verify(str(p2))
+
+
+def test_restore_refuses_corrupt_checkpoint(tmp_path):
+    tree = _tree()
+    manager.save(str(tmp_path), 1, tree)
+    _corrupt(tmp_path / "step_00000001")
+    with pytest.raises(manager.CheckpointCorruptError):
+        manager.restore(str(tmp_path), 1, tree)
+
+
+def test_latest_valid_step_skips_corrupt(tmp_path):
+    """The fallback-restore contract: the newest checkpoint is damaged, so
+    latest_valid_step must return the older intact one (latest_step still
+    reports the damaged newest — that asymmetry IS the feature)."""
+    tree = _tree()
+    manager.save(str(tmp_path), 1, tree)
+    manager.save(str(tmp_path), 2, tree)
+    _corrupt(tmp_path / "step_00000002", mode="truncate")
+    assert manager.latest_step(str(tmp_path)) == 2
+    assert manager.latest_valid_step(str(tmp_path)) == 1
+    assert manager.valid_steps(str(tmp_path)) == [1]
+    # missing leaf file is also invalid
+    manager.save(str(tmp_path), 3, tree)
+    os.remove(tmp_path / "step_00000003" / "a_00000.npy")
+    assert manager.latest_valid_step(str(tmp_path)) == 1
+    # unreadable manifest is also invalid
+    manager.save(str(tmp_path), 4, tree)
+    (tmp_path / "step_00000004" / "manifest.json").write_text("{broken")
+    assert manager.latest_valid_step(str(tmp_path)) == 1
+
+
+def test_pre_integrity_checkpoints_still_verify(tmp_path):
+    """Checkpoints written before the crc32 record existed must keep
+    loading (manifest without crc32/nbytes passes verification)."""
+    manager.save(str(tmp_path), 1, _tree())
+    mpath = tmp_path / "step_00000001" / "manifest.json"
+    m = json.loads(mpath.read_text())
+    del m["crc32"], m["nbytes"]
+    mpath.write_text(json.dumps(m))
+    manager.verify(str(tmp_path / "step_00000001"))
+    restored, _ = manager.restore(str(tmp_path), 1, _tree())
+    _assert_trees_equal(_tree(), restored)
+
+
+def test_async_post_hook_runs_after_commit(tmp_path):
+    """The GC-ordering contract: post() sees the committed checkpoint."""
+    seen = []
+    saver = manager.AsyncSaver()
+    saver.save(str(tmp_path), 5, _tree(),
+               post=lambda p: seen.append(
+                   (p, manager.latest_step(str(tmp_path)))))
+    saver.wait()
+    assert seen and seen[0][0].endswith("step_00000005")
+    assert seen[0][1] == 5
+    # a failing write never runs post
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("occupied")
+    saver.save(str(blocker), 6, _tree(), post=lambda p: seen.append("bad"))
+    with pytest.raises(OSError):
+        saver.wait()
+    assert "bad" not in seen
+
+
+def test_ckpt_write_fault_site_corrupts_after_commit(tmp_path):
+    """The chaos hook: a scripted truncate fault at ckpt.write damages the
+    committed checkpoint exactly the way verify detects."""
+    plan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="ckpt.write", kind="truncate", at=1,
+                         payload={"leaf": 0}),
+    ])
+    with faults_lib.scope(plan):
+        manager.save(str(tmp_path), 1, _tree())   # call 0: intact
+        manager.save(str(tmp_path), 2, _tree())   # call 1: corrupted
+    assert plan.fired == [("ckpt.write", 1, "truncate")]
+    manager.verify(str(tmp_path / "step_00000001"))
+    with pytest.raises(manager.CheckpointCorruptError):
+        manager.verify(str(tmp_path / "step_00000002"))
+    assert manager.latest_valid_step(str(tmp_path)) == 1

@@ -1,0 +1,83 @@
+"""Direct unit coverage for runtime/elastic.py (ISSUE 7 satellite):
+``choose_mesh_shape`` divisibility fallback, HBM-driven min_model
+doubling, degenerate pools, and ``make_mesh`` over a shrunken device
+list — previously only reachable through the end-to-end elastic path."""
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime import elastic
+
+
+def test_choose_mesh_shape_basic_factorisations():
+    assert elastic.choose_mesh_shape(8) == (8, 1)
+    assert elastic.choose_mesh_shape(8, min_model=2) == (4, 2)
+    assert elastic.choose_mesh_shape(8, min_model=8) == (1, 8)
+    assert elastic.choose_mesh_shape(1) == (1, 1)
+
+
+def test_choose_mesh_shape_divisibility_fallback():
+    """When min_model does not divide the pool, the model axis walks up to
+    the next divisor (data * model must cover every surviving device)."""
+    data, model = elastic.choose_mesh_shape(6, min_model=4)
+    assert (data, model) == (1, 6)        # 4,5 rejected; 6 divides
+    data, model = elastic.choose_mesh_shape(12, min_model=5)
+    assert (data, model) == (2, 6)
+    for n in (2, 3, 5, 6, 7, 12):
+        for mm in (1, 2, 3, 4, n):
+            d, m = elastic.choose_mesh_shape(n, min_model=mm)
+            assert d * m == n, (n, mm, d, m)
+
+
+def test_choose_mesh_shape_prime_survivor_count():
+    """A prime pool (the classic 'one host died' shape) still yields a
+    full-cover mesh."""
+    d, m = elastic.choose_mesh_shape(7, min_model=2)
+    assert d * m == 7
+
+
+def test_choose_mesh_shape_hbm_doubles_min_model():
+    gib = 2**30
+    # 24 GiB of params on 16 GiB chips: one TP shard must hold <= 8 GiB,
+    # so min_model doubles 1 -> 2 -> 4 (24/2 = 12 > 8, 24/4 = 6 <= 8).
+    d, m = elastic.choose_mesh_shape(8, param_bytes=24 * gib,
+                                     hbm_bytes=16 * gib)
+    assert (d, m) == (2, 4)
+    # small model: HBM imposes nothing
+    assert elastic.choose_mesh_shape(8, param_bytes=1 * gib,
+                                     hbm_bytes=16 * gib) == (8, 1)
+
+
+def test_choose_mesh_shape_max_model_caps():
+    d, m = elastic.choose_mesh_shape(8, min_model=3, max_model=2)
+    assert m <= 2
+
+
+def test_choose_mesh_shape_degenerate_pool():
+    """A pool too small for the HBM-driven min_model still returns a
+    usable (possibly memory-oversubscribed) mesh rather than failing —
+    min_model stops doubling at the pool size."""
+    gib = 2**30
+    d, m = elastic.choose_mesh_shape(2, param_bytes=1000 * gib,
+                                     hbm_bytes=16 * gib)
+    assert d * m == 2 and m == 2
+
+
+def test_make_mesh_over_shrunken_device_list():
+    """The elastic-shrink call pattern: re-mesh over an explicit survivor
+    subset (devices= the ones that did not drop)."""
+    devs = jax.devices()
+    mesh = elastic.make_mesh((1, 1), ("data", "model"), devices=devs[:1])
+    assert mesh.devices.shape == (1, 1)
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices[0, 0] == devs[0]
+    # default path uses the global pool
+    mesh2 = elastic.make_mesh((1,), ("data",))
+    assert mesh2.devices.shape == (1,)
+
+
+def test_choose_then_make_roundtrip():
+    n = len(jax.devices())
+    shape = elastic.choose_mesh_shape(n)
+    mesh = elastic.make_mesh(shape, ("data", "model"))
+    assert int(np.prod(mesh.devices.shape)) == n

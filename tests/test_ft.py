@@ -1,0 +1,234 @@
+"""runtime/ft.py unit tests (ISSUE 7): sliding-window failure budget with
+deterministic backoff, signal-handler restoration on every exit path,
+GC-after-write ordering, fallback restore past corrupt checkpoints, and the
+train.loss / train.preempt fault sites."""
+import os
+import signal
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.runtime import faults as faults_lib
+from repro.runtime import ft as ft_lib
+
+
+# ---------------------------------------------------------------------------
+# FailureBudget
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_failure_budget_sliding_window():
+    clk = _Clock()
+    b = ft_lib.FailureBudget(2, window_s=100.0, clock=clk)
+    b.record()
+    clk.t = 10.0
+    b.record()
+    assert not b.exhausted          # 2 failures == budget, not over it
+    clk.t = 20.0
+    b.record()
+    assert b.exhausted              # 3 in 20s > 2
+    # the window slides: the first two age out, only one recent remains
+    clk.t = 115.0
+    assert not b.exhausted
+    assert len(b.stamps) == 1
+
+
+def test_failure_budget_lifetime_failures_do_not_accumulate():
+    """The old lifetime counter killed any long job with sparse noise; the
+    window must tolerate arbitrarily many failures if they are spread out."""
+    clk = _Clock()
+    b = ft_lib.FailureBudget(2, window_s=10.0, clock=clk)
+    for i in range(50):
+        clk.t = i * 100.0
+        b.record()
+        assert not b.exhausted
+
+
+def test_failure_budget_backoff_exponential_and_deterministic():
+    clk = _Clock()
+    b1 = ft_lib.FailureBudget(10, 1e9, base_s=0.1, max_s=1.0, seed=7,
+                              clock=clk)
+    b2 = ft_lib.FailureBudget(10, 1e9, base_s=0.1, max_s=1.0, seed=7,
+                              clock=clk)
+    seq1 = [b1.record() for _ in range(6)]
+    seq2 = [b2.record() for _ in range(6)]
+    assert seq1 == seq2             # deterministic jitter: same seed, same run
+    # exponential base under the jitter (jitter is in [0, 0.25) * backoff)
+    for n, got in enumerate(seq1, start=1):
+        base = min(0.1 * 2 ** (n - 1), 1.0)
+        assert base <= got < base * 1.25
+    assert seq1[-1] < 1.0 * 1.25    # capped at max_s
+
+
+# ---------------------------------------------------------------------------
+# run_with_recovery
+# ---------------------------------------------------------------------------
+
+def _step_fn(state, step):
+    """Deterministic synthetic step: resume-from-checkpoint replays the
+    exact same trajectory (x' = x + step + 1)."""
+    return ({"x": state["x"] + jnp.float32(step + 1)},
+            {"loss": float(step)})
+
+
+def _run(tmp_path, *, step_fn=_step_fn, steps=6, save_every=2, keep=3,
+         state=None, start=0, **kw):
+    ft = ft_lib.FTConfig(ckpt_dir=str(tmp_path), save_every=save_every,
+                         keep=keep, max_failures=3, backoff_base_s=0.0)
+    return ft_lib.run_with_recovery(
+        state=state if state is not None else {"x": jnp.float32(0.0)},
+        step_fn=step_fn, start_step=start, num_steps=steps, ft=ft,
+        sleep_fn=lambda s: None, **kw)
+
+
+def test_run_to_completion_and_gc_after_write(tmp_path):
+    state, last = _run(tmp_path, steps=10, save_every=1, keep=2)
+    assert last == 10
+    assert float(state["x"]) == sum(range(1, 11))
+    # GC ordered after each write lands: exactly `keep` checkpoints
+    # remain and they are the NEWEST two (the old pre-write GC raced the
+    # async save and computed retention against a stale listing).
+    left = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert left == ["step_00000009", "step_00000010"]
+
+
+def test_signal_handlers_restored_on_every_exit_path(tmp_path):
+    orig_term = signal.getsignal(signal.SIGTERM)
+    orig_int = signal.getsignal(signal.SIGINT)
+    _run(tmp_path)                                      # clean exit
+    assert signal.getsignal(signal.SIGTERM) is orig_term
+
+    def bad(state, step):
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError):                   # raise exit
+        _run(tmp_path / "b", step_fn=bad)
+    assert signal.getsignal(signal.SIGTERM) is orig_term
+    assert signal.getsignal(signal.SIGINT) is orig_int
+
+
+def test_restore_on_failure_resumes_bit_exact(tmp_path):
+    ref_state, _ = _run(tmp_path / "ref", steps=8, save_every=2)
+
+    fails = {"n": 0}
+
+    def flaky(state, step):
+        if step == 5 and fails["n"] < 2:
+            fails["n"] += 1
+            raise RuntimeError("injected device error")
+        return _step_fn(state, step)
+
+    state, last = _run(tmp_path / "chaos", step_fn=flaky, steps=8,
+                       save_every=2)
+    assert last == 8 and fails["n"] == 2
+    np.testing.assert_array_equal(np.asarray(state["x"]),
+                                  np.asarray(ref_state["x"]))
+
+
+def test_fallback_restore_skips_corrupt_newest(tmp_path):
+    """The acceptance scenario in miniature: the newest checkpoint is
+    corrupt when a failure hits, so recovery must fall back to the older
+    valid one and still converge to the unfaulted trajectory."""
+    ref_state, _ = _run(tmp_path / "ref", steps=8, save_every=2)
+
+    d = tmp_path / "chaos"
+    corrupted = {"done": False}
+
+    def flaky(state, step):
+        if step == 5 and not corrupted["done"]:
+            corrupted["done"] = True
+            # newest checkpoint (step 4) is damaged at failure time
+            p = d / "step_00000004" / "a_00000.npy"
+            p.write_bytes(p.read_bytes()[: 8])
+            raise RuntimeError("injected device error")
+        return _step_fn(state, step)
+
+    state, last = _run(d, step_fn=flaky, steps=8, save_every=2)
+    assert last == 8
+    np.testing.assert_array_equal(np.asarray(state["x"]),
+                                  np.asarray(ref_state["x"]))
+    # it really did restore from step 2, not the corrupt step 4
+    assert ckpt.latest_valid_step(str(d)) is not None
+
+
+def test_budget_exhaustion_reraises(tmp_path):
+    def always_bad(state, step):
+        raise RuntimeError("permafail")
+
+    with pytest.raises(RuntimeError, match="first valid checkpoint"):
+        _run(tmp_path, step_fn=always_bad)
+
+
+def test_nan_loss_fault_site_triggers_restore(tmp_path):
+    plan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="train.loss", kind="nan", at=5),
+    ])
+    with faults_lib.scope(plan):
+        state, last = _run(tmp_path, steps=8, save_every=2)
+    assert last == 8
+    assert plan.fired == [("train.loss", 5, "nan")]
+    ref_state, _ = _run(tmp_path / "ref", steps=8, save_every=2)
+    np.testing.assert_array_equal(np.asarray(state["x"]),
+                                  np.asarray(ref_state["x"]))
+
+
+def test_preempt_fault_site_saves_and_exits(tmp_path):
+    plan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="train.preempt", kind="preempt", at=3),
+    ])
+    with faults_lib.scope(plan):
+        state, last = _run(tmp_path, steps=100, save_every=50)
+    assert last == 4                # stopped right after the flagged step
+    # the preemption checkpoint landed and is restorable
+    s = ckpt.latest_valid_step(str(tmp_path))
+    restored, meta = ckpt.restore(str(tmp_path), s, state)
+    assert int(meta["step"]) == 4
+    np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                  np.asarray(state["x"]))
+
+
+def test_device_loss_routes_to_elastic_handler(tmp_path):
+    plan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="train.step", kind="device_drop", at=5,
+                         payload={"survivors": 2}),
+    ])
+    calls = []
+
+    def flaky(state, step):
+        faults_lib.inject("train.step")
+        return _step_fn(state, step)
+
+    def on_loss(err):
+        calls.append(err.survivors)
+        return {"x": jnp.float32(0.0)}, None
+
+    with faults_lib.scope(plan):
+        state, last = _run(tmp_path, step_fn=flaky, steps=8, save_every=2,
+                           on_device_loss=on_loss)
+    assert calls == [2] and last == 8
+    ref_state, _ = _run(tmp_path / "ref", steps=8, save_every=2)
+    np.testing.assert_array_equal(np.asarray(state["x"]),
+                                  np.asarray(ref_state["x"]))
+
+
+def test_device_loss_without_handler_is_fatal(tmp_path):
+    plan = faults_lib.FaultPlan([
+        faults_lib.Fault(site="train.step", kind="device_drop", at=1),
+    ])
+
+    def flaky(state, step):
+        faults_lib.inject("train.step")
+        return _step_fn(state, step)
+
+    with faults_lib.scope(plan), \
+            pytest.raises(faults_lib.DeviceLostError):
+        _run(tmp_path, step_fn=flaky)

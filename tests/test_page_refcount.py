@@ -110,6 +110,21 @@ class _Driver:
                           unused_reserved=st_["reserved"] - st_["allocated"])
         del self.slots[[k for k, v in self.slots.items() if v is st_][0]]
 
+    def abort(self, seed: int):
+        """The ISSUE-7 abort path: a faulted/preempted/timed-out request
+        releases EVERYTHING it holds mid-flight — partially-allocated
+        reservation, matched forks, CoW copies — exactly like ``_finish``,
+        then immediately re-admits through the prefix cache (the retry).
+        The oracle must hold at both points."""
+        st_ = self._pick(seed)
+        if st_ is None:
+            return
+        self.pool.release(st_["pages"], st_["group"],
+                          unused_reserved=st_["reserved"] - st_["allocated"])
+        del self.slots[[k for k, v in self.slots.items() if v is st_][0]]
+        self.check()
+        self.admit(seed)         # retry re-enters via match+fork+reserve
+
     def evict(self, seed: int):
         self.index.evict_lru(self.pool)
 
@@ -149,7 +164,7 @@ class _Driver:
         assert self.pool.total_allocs == self.pool.total_frees
 
 
-OPS = ("admit", "alloc", "write", "insert", "finish", "evict")
+OPS = ("admit", "alloc", "write", "insert", "finish", "evict", "abort")
 
 
 def _check_ops(ops, shares=None):
@@ -178,6 +193,15 @@ OPS_SAMPLES = [
     [("admit", 3), ("alloc", 0), ("insert", 0), ("admit", 3),
      ("finish", 0), ("write", 0), ("alloc", 0), ("evict", 0),
      ("insert", 0), ("finish", 0)],
+    # abort paths (ISSUE 7): mid-prefill abort (reservation partially
+    # consumed), abort of a slot borrowing indexed pages, abort after a
+    # CoW write, back-to-back abort/retry churn under share pressure
+    [("admit", 0), ("alloc", 0), ("abort", 0), ("alloc", 0),
+     ("insert", 0), ("admit", 0), ("abort", 1), ("abort", 0),
+     ("finish", 0), ("evict", 0)],
+    [("admit", 9), ("alloc", 0), ("alloc", 0), ("insert", 0),
+     ("admit", 9), ("write", 0), ("abort", 1), ("abort", 0),
+     ("admit", 10), ("abort", 0), ("evict", 0), ("finish", 0)],
 ]
 SHARES_SAMPLES = [None, [10, 6]]
 
