@@ -1,10 +1,21 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench bench-check docs-check chaos ci
+.PHONY: test test-tier1 test-multihost bench bench-check docs-check chaos ci
 
 test:
 	$(PY) -m pytest -x -q
+
+# The two test tiers (tests/conftest.py markers): tier1 = fast in-process
+# tests; multihost = subprocess tests driving an
+# --xla_force_host_platform_device_count fake-device mesh (hierarchical
+# dispatch parity, SPMD hetero execution, elastic CLI). `make test` runs
+# both in one invocation.
+test-tier1:
+	$(PY) -m pytest -x -q -m "not multihost"
+
+test-multihost:
+	$(PY) -m pytest -x -q -m multihost
 
 bench:
 	JAX_PLATFORMS=cpu $(PY) benchmarks/run.py --quick
@@ -36,6 +47,8 @@ bench-check:
 		--require serve/dense/tokens_per_s \
 		--require serve/prefix/hit_rate \
 		--require quant/esffn/bytes \
+		--require hetero/topology/flat \
+		--lt hetero/topology/hier:hetero/topology/flat \
 		--lt serve/paged/kv_cache_bytes:serve/dense/kv_cache_bytes \
 		--lt serve/prefix/ttft/cached:serve/prefix/ttft/uncached \
 		--lt quant/esffn/bytes/int8:quant/esffn/bytes/bf16 \

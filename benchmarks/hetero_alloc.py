@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_fn
 from repro.core.hetero import (
     DeviceProfile,
     make_hetero_plan,
@@ -33,6 +33,11 @@ from repro.core.hetero import (
     proportional_split,
     step_latency_model,
     uniform_counterpart,
+)
+from repro.parallel.autotune import (
+    Topology,
+    dispatch_inter_bytes,
+    moe_coll_bytes,
 )
 from repro.parallel.hetero_exec import HeteroExecutor
 
@@ -94,6 +99,7 @@ def run(quick: bool = True):
         if abs(t0 - t1) > 1:
             assert gain > 10, case
     run_executed(quick=quick)
+    run_topology(quick=quick)
     return rows
 
 
@@ -165,6 +171,55 @@ def run_executed(quick: bool = True) -> None:
              f"proportional_vs_uniform={speedup:.2f}x")
         assert steps["proportional"] <= steps["uniform"] * margin, (
             mode, steps)
+
+
+def run_topology(quick: bool = True) -> None:
+    """Two-level fabric rows (DESIGN.md §10): step latency of one MoE layer
+    under the flat vs hierarchical collective schedule on a 16-device
+    2-nodes-per-4 fabric.
+
+    The compute term is MEASURED on this host (one device's expert-FFN
+    shard); the communication term prices each schedule's per-device byte
+    volumes (``moe_coll_bytes`` + the top-k dispatch crossings of
+    ``dispatch_inter_bytes``) at the topology's per-level bandwidths — the
+    same model ``layer_latency`` uses, so the pinned ``hier < flat`` row
+    (Makefile ``bench-check --lt``) tracks exactly what the runtime chooser
+    believes. Numerical parity of the two schedules is pinned separately in
+    tests/test_hier_dispatch.py on a real fake-device mesh."""
+    tokens, d, f, e, k = (8192 if quick else 65536), 1024, 4096, 16, 2
+    n_dev = 16
+    topo = Topology(intra_bw=50e9, inter_bw=12.5e9, node_size=4)
+
+    # measured per-device compute: this device's shard of the expert FFN
+    # (tokens/n_dev rows through a gate+down pair at the layer's shapes)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    xs = jax.random.normal(ks[0], (tokens // n_dev, d), jnp.float32)
+    w1 = jax.random.normal(ks[1], (d, f), jnp.float32) * 0.1
+    w2 = jax.random.normal(ks[2], (f, d), jnp.float32) * 0.1
+    comp_us = time_fn(jax.jit(lambda a: jax.nn.silu(a @ w1) @ w2), xs,
+                      iters=3 if quick else 7)
+
+    steps = {}
+    for name, hier in (("flat", False), ("hier", True)):
+        comm_s, parts = 0.0, []
+        for mode in ("model_centric", "data_centric"):
+            intra, inter = moe_coll_bytes(mode, tokens, d, f, e, k,
+                                          n_dev=n_dev, topology=topo,
+                                          hierarchical=hier)
+            comm_s += intra / topo.intra_bw + inter / topo.inter_bw
+            parts.append(f"{mode}:intra={intra / 1e6:.1f}MB,"
+                         f"inter={inter / 1e6:.1f}MB")
+        disp = dispatch_inter_bytes(tokens, d, k, n_dev=n_dev,
+                                    node_size=topo.node_size,
+                                    hierarchical=hier)
+        comm_s += disp / topo.inter_bw
+        steps[name] = comp_us + comm_s * 1e6
+        emit(f"hetero/topology/{name}", steps[name],
+             f"comp_us={comp_us:.1f};dispatch_inter={disp / 1e6:.1f}MB;"
+             + ";".join(parts))
+    # node-local combine + per-node weight staging strictly cut cross-node
+    # bytes whenever the group spans >1 node — the schedule must pay off
+    assert steps["hier"] < steps["flat"], steps
 
 
 if __name__ == "__main__":

@@ -6,13 +6,25 @@ cd "$(dirname "$0")/.."
 
 python -m pip install -r requirements.txt
 
+# Hygiene: compiled bytecode must never be tracked (it churns every commit
+# and is machine-specific).
+if git ls-files '*.pyc' '**/__pycache__/*' | grep -q .; then
+    echo "ERROR: tracked bytecode files:" >&2
+    git ls-files '*.pyc' '**/__pycache__/*' >&2
+    exit 1
+fi
+
 # Tier-1 on CPU; Pallas kernels run in interpret mode off-TPU (this is the
 # default in repro.common.pallas_interpret_default, forced here for clarity).
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export REPRO_PALLAS_INTERPRET=1
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+# Two test tiers (tests/conftest.py markers): tier-1 fast in-process tests
+# first for quick failure, then the multihost tier (subprocess fake-device
+# meshes: hierarchical dispatch parity, SPMD hetero execution, elastic CLI).
+make test-tier1
+make test-multihost
 
 # Tier-2 chaos scenarios (DESIGN.md §9): deterministic fault plans through
 # the real drivers — checkpoint-fallback bit-exactness, serving

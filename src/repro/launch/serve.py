@@ -39,7 +39,7 @@ from repro import configs as cfglib
 from repro.common import cdiv, tree_bytes
 from repro.core import hetero as hetero_lib
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, split_model_axis
 from repro.models import lm
 from repro.parallel.cache import PagePool, PrefixIndex, page_shares
 from repro.parallel.sharding import ParallelConfig, split_tree, tree_shardings
@@ -964,6 +964,12 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--topology", default=None,
+                    help="intra_bw:inter_bw:node_size — two-level "
+                         "interconnect (DESIGN.md §10): prices the auto "
+                         "chooser per level and, on a mesh whose model "
+                         "extent spans multiple nodes, serves with the "
+                         "hierarchical dispatch schedule")
     ap.add_argument("--mode", default="auto",
                     choices=["hybrid", "model_centric", "data_centric",
                              "auto", "ep"],
@@ -1025,10 +1031,20 @@ def main(argv=None):
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
+    topo = None
+    if args.topology:
+        from repro.parallel.autotune import Topology
+        try:
+            topo = Topology.parse(args.topology)
+        except (ValueError, TypeError) as e:
+            ap.error(f"--topology: {e}")
     mesh = None
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
-        mesh = make_mesh(dims, ("pod", "data", "model")[-len(dims):])
+        axes = ("pod", "data", "model")[-len(dims):]
+        if topo is not None:
+            dims, axes = split_model_axis(dims, axes, topo.node_size)
+        mesh = make_mesh(dims, axes)
 
     plan = None
     num_slots, valid_slots = args.slots, None
@@ -1067,6 +1083,7 @@ def main(argv=None):
         # auto-mode roofline prices the served weight width (the island
         # itself skips QAT fake-quant when the params carry true payloads)
         quant=args.quant,
+        topology=topo,
     )
 
     params, specs = split_tree(

@@ -36,7 +36,7 @@ from repro.configs.base import ShapeConfig
 from repro.core import hetero as hetero_lib
 from repro.data.pipeline import DataConfig, Prefetcher, TokenSource
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, split_model_axis
 from repro.models import lm
 from repro.parallel.cache import PlanCache
 from repro.optim import adamw
@@ -115,6 +115,22 @@ def main(argv=None):
                          "int8/fp8 fake-quant inside the MoE islands "
                          "(straight-through grads; routers/dense layers "
                          "stay full precision — DESIGN.md §8)")
+    ap.add_argument("--topology", default=None,
+                    help="intra_bw:inter_bw:node_size (e.g. 50e9:12.5e9:4) "
+                         "— two-level interconnect (DESIGN.md §10). Prices "
+                         "the auto chooser's collectives per level, and "
+                         "when the mesh's model extent spans multiple "
+                         "nodes, splits it into ('node','model') and runs "
+                         "the MoE islands' hierarchical dispatch "
+                         "(node-local combine before the cross-node "
+                         "exchange)")
+    ap.add_argument("--overlap-dispatch", action="store_true",
+                    help="overlap the NEXT MoE layer's expert collectives "
+                         "with the current layer's compute: the "
+                         "pipeline-shared prefetcher gathers data-centric "
+                         "layers' full expert weights (fsdp AND tp factor) "
+                         "a period ahead (DESIGN.md §10). Requires "
+                         "--cache-layers > 0 and --mode auto")
     ap.add_argument("--impl", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--warmup", type=int, default=20)
@@ -145,10 +161,23 @@ def main(argv=None):
         # widen the smoke vocab if the tokenizer stream needs it
         pass
 
+    topo = None
+    if args.topology:
+        from repro.parallel.autotune import Topology
+        try:
+            topo = Topology.parse(args.topology)
+        except (ValueError, TypeError) as e:
+            ap.error(f"--topology: {e}")
+    if args.overlap_dispatch and args.cache_layers <= 0:
+        ap.error("--overlap-dispatch requires --cache-layers > 0 (the "
+                 "prefetcher lives in the pipeline-shared cache)")
+
     mesh = None
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
         axes = ("pod", "data", "model")[-len(dims):]
+        if topo is not None:
+            dims, axes = split_model_axis(dims, axes, topo.node_size)
         mesh = make_mesh(dims, axes)
 
     latencies = None
@@ -171,6 +200,8 @@ def main(argv=None):
         impl=args.impl,
         blk=min(128, max(16, args.seq_len // 4)),
         quant=args.quant,
+        topology=topo,
+        overlap_dispatch=args.overlap_dispatch,
     )
 
     def parse_lat(s, flag):

@@ -515,14 +515,57 @@ def run_layers(layers, x, ctx: Ctx, cache_layers):
             )
             pcache = PipelineSharedCache(pcfg.cache_layers)
 
-            def gather_period(pp):
-                return {
-                    pos: gather_ffn_params(
-                        jax.tree.map(lambda v: v[pp], layers[pos]["ffn"]),
-                        pcfg, ctx.mesh,
+            # Overlap schedule (DESIGN.md §10): with overlap_dispatch, the
+            # prefetcher gathers the data-centric layers' FULL expert
+            # weights (fsdp AND tp factor) one period ahead, so the next
+            # layer's expert collectives — not just its fsdp gather —
+            # overlap the current layer's compute. The per-position level
+            # is resolved ONCE with the island's own chooser
+            # (moe_parallel._auto_layer_mode), so prefetcher and island can
+            # never disagree: an "all"-gathered layer is exactly a layer
+            # the island would have run data-centric, and the gathered
+            # values equal the in-island gather's — bit-identical schedule.
+            levels = {pos: "fsdp" for pos in moe_positions}
+            if pcfg.overlap_dispatch and pcfg.mode == "auto":
+                import types
+
+                from repro.parallel.moe_parallel import (
+                    MoEStatic,
+                    _auto_layer_mode,
+                )
+
+                def _sds(v):
+                    return (None if v is None
+                            else jax.ShapeDtypeStruct(v.shape[1:], v.dtype))
+
+                tokens = x.shape[0] * x.shape[1]
+                for pos in moe_positions:
+                    ffn = layers[pos]["ffn"]
+                    stub = types.SimpleNamespace(
+                        w_gate=_sds(ffn.get("w_gate")),
+                        w1=_sds(ffn.get("w1")),
                     )
-                    for pos in moe_positions
-                }
+                    ms = MoEStatic(
+                        num_experts=cfg.moe.num_experts,
+                        top_k=cfg.moe.top_k,
+                    )
+                    mode_pos = _auto_layer_mode(
+                        stub, ms, pcfg, ctx.mesh, tokens, pos
+                    )
+                    if mode_pos == "data_centric":
+                        levels[pos] = "all"
+
+            def gather_period(pp):
+                out = {}
+                for pos in moe_positions:
+                    g = gather_ffn_params(
+                        jax.tree.map(lambda v: v[pp], layers[pos]["ffn"]),
+                        pcfg, ctx.mesh, collectives=levels[pos],
+                    )
+                    if levels[pos] == "all":
+                        g["__collectives__"] = "all"
+                    out[pos] = g
+                return out
 
         carry = (x, zero, zero)
         outs = []

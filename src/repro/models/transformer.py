@@ -201,9 +201,11 @@ def apply_moe_ffn(p: dict, x: jax.Array, ctx: Ctx,
                   gathered: Optional[dict] = None):
     """Returns (y, aux_loss, z_loss). x: (B, S, D).
 
-    ``gathered``: fsdp-pregathered weight leaves from the pipeline-shared
-    cache (parallel.cache); they replace the sharded ones and the island
-    skips its internal fsdp all-gather."""
+    ``gathered``: pregathered weight leaves from the pipeline-shared cache
+    (parallel.cache); they replace the sharded ones and the island skips
+    the matching in-island gathers. The reserved ``"__collectives__"`` key
+    carries the gather level — "fsdp" (default) or "all" (the overlap
+    schedule: fsdp AND the data-centric tp factor, DESIGN.md §10)."""
     m = ctx.cfg.moe
     ms = MoEStatic(
         num_experts=m.num_experts,
@@ -214,8 +216,11 @@ def apply_moe_ffn(p: dict, x: jax.Array, ctx: Ctx,
         softmax_after_topk=m.softmax_after_topk,
     )
     src = dict(p)
+    pregathered: Any = False
     if gathered is not None:
-        src.update({k: v for k, v in gathered.items() if v is not None})
+        pregathered = gathered.get("__collectives__", "fsdp")
+        src.update({k: v for k, v in gathered.items()
+                    if v is not None and k != "__collectives__"})
     mp = MoEParams(
         router=src["router"],
         w_gate=src.get("w_gate"),
@@ -233,7 +238,7 @@ def apply_moe_ffn(p: dict, x: jax.Array, ctx: Ctx,
     )
     return moe_layer(
         x, mp, ms, ctx.pcfg, ctx.mesh, x_spec=ctx.x_spec, noise_rng=ctx.rng,
-        layer_idx=ctx.layer_idx, pregathered=gathered is not None,
+        layer_idx=ctx.layer_idx, pregathered=pregathered,
     )
 
 
@@ -287,7 +292,10 @@ def apply_attention(
     tp_size = 1
     if ctx.mesh is not None:
         tp_axis = ctx.pcfg.axes(ctx.mesh)["tp"]
-        tp_size = ctx.mesh.shape[tp_axis] if tp_axis else 1
+        # Two-level meshes span TP over ("node", "model") (DESIGN.md §10).
+        for a in ((tp_axis if isinstance(tp_axis, tuple) else (tp_axis,))
+                  if tp_axis else ()):
+            tp_size *= ctx.mesh.shape[a]
     heads_shardable = hq % tp_size == 0 and hkv % tp_size == 0
     seq_parallel_attn = ctx.mode != "decode" and not heads_shardable
 

@@ -35,20 +35,175 @@ asserts.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
+class Topology:
+    """Two-level interconnect (DESIGN.md §10): fast links inside a node of
+    ``node_size`` devices (``intra_bw`` bytes/s per link), slow links across
+    nodes (``inter_bw``). ``n_nodes(n) <= 1`` degenerates to a flat fabric:
+    every price is computed with the *same expression* as the topology-less
+    roofline, so a flat ``Topology(intra_bw=hw.link_bw, ...)`` is
+    bitwise-identical to today's model (pinned by tests/test_topology.py)."""
+    intra_bw: float = 50e9
+    inter_bw: float = 12.5e9
+    node_size: int = 4
+
+    def __post_init__(self):
+        if self.intra_bw <= 0 or self.inter_bw <= 0:
+            raise ValueError("topology bandwidths must be positive")
+        if self.node_size < 1:
+            raise ValueError("node_size must be >= 1")
+
+    def n_nodes(self, n_dev: float) -> int:
+        """Number of nodes an ``n_dev``-wide group spans (ceil division)."""
+        return int(math.ceil(float(n_dev) / self.node_size))
+
+    def is_flat(self, n_dev: float) -> bool:
+        """True when the group fits inside one node (single-level fabric)."""
+        return self.n_nodes(n_dev) <= 1
+
+    @staticmethod
+    def parse(spec: str) -> "Topology":
+        """Parse the CLI form ``intra:inter:node_size`` (bytes/s, e.g.
+        ``50e9:12.5e9:4``)."""
+        parts = spec.split(":")
+        if len(parts) != 3:
+            raise ValueError(
+                f"--topology expects intra_bw:inter_bw:node_size, got {spec!r}")
+        return Topology(intra_bw=float(parts[0]), inter_bw=float(parts[1]),
+                        node_size=int(parts[2]))
+
+
+@dataclasses.dataclass(frozen=True)
 class HardwareProfile:
-    """Per-device roofline constants (bytes/s, FLOP/s)."""
+    """Per-device roofline constants (bytes/s, FLOP/s).
+
+    ``topology`` (DESIGN.md §10): optional two-level interconnect; ``None``
+    keeps the flat single-bandwidth fabric priced at ``link_bw``."""
     peak_flops: float = 197e12   # bf16 MXU peak (v5e)
     hbm_bw: float = 819e9        # HBM bytes/s (v5e)
     link_bw: float = 50e9        # ICI per-link bytes/s (v5e)
+    topology: Optional[Topology] = None
 
 
 V5E = HardwareProfile()
+
+
+def _token_coll_cost(tok_bytes: float, n_dev: float, hw: HardwareProfile) -> float:
+    """Link time of model-centric's token collectives (AG in + RS out).
+
+    Token shards and the node-combined partial sums are *distinct* bytes per
+    device, so the inter-node term stays per-device: the hierarchical credit
+    is exactly the node-local combine collapsing ``node_size`` partial-sum
+    copies into one before the cross-node exchange — ``(nn-1)/nn`` instead of
+    ``(n-1)/n`` per direction (DESIGN.md §10)."""
+    topo = hw.topology
+    if topo is None:
+        return (tok_bytes + tok_bytes) / hw.link_bw
+    if topo.is_flat(n_dev):
+        return (tok_bytes + tok_bytes) / topo.intra_bw
+    ns = min(topo.node_size, max(int(n_dev), 1))
+    nn = topo.n_nodes(n_dev)
+    intra = 2 * tok_bytes * (ns - 1) / ns / topo.intra_bw
+    inter = 2 * tok_bytes * (nn - 1) / nn / topo.inter_bw
+    return intra + inter
+
+
+def _weight_coll_cost(w_bytes: float, n_dev: float, hw: HardwareProfile) -> float:
+    """Link time of data-centric's expert-weight all-gather.
+
+    Weights are *identical* bytes for every consumer, so the hierarchical
+    gather lands each byte on a node exactly once over the slow fabric
+    (per-NIC share ``1/node_size``) and fans out over the fast intra links —
+    the staging that makes data-centric relatively cheaper as
+    ``inter_bw/intra_bw`` shrinks (DESIGN.md §10 worked example)."""
+    topo = hw.topology
+    if topo is None:
+        return w_bytes * (n_dev - 1) / n_dev / hw.link_bw
+    if topo.is_flat(n_dev):
+        return w_bytes * (n_dev - 1) / n_dev / topo.intra_bw
+    ns = min(topo.node_size, max(int(n_dev), 1))
+    nn = topo.n_nodes(n_dev)
+    intra = w_bytes * (ns - 1) / ns / topo.intra_bw
+    inter = w_bytes * (nn - 1) / nn / (ns * topo.inter_bw)
+    return intra + inter
+
+
+def dispatch_inter_bytes(
+    tokens: int,
+    d: int,
+    k: int,
+    *,
+    n_dev: int,
+    node_size: int,
+    itemsize: int = 2,
+    hierarchical: bool = True,
+) -> float:
+    """Expected inter-node bytes of a top-k expert all-to-all dispatch.
+
+    Flat dispatch sends each of a token's ``k`` expert copies to its owner
+    device: ``k * (nn-1)/nn`` copies cross nodes in expectation (uniform
+    routing). Hierarchical dispatch (DESIGN.md §10) sends a token to a remote
+    node ONCE if >= 1 of its k experts lives there and replicates over the
+    fast intra links: ``(nn-1) * (1 - (1 - 1/nn)**k)`` expected crossings —
+    the local top-k overlap factor. Bernoulli gives hierarchical <= flat for
+    every (k, node_size), which tests/test_topology.py samples."""
+    nn = int(math.ceil(n_dev / max(node_size, 1)))
+    if nn <= 1:
+        return 0.0
+    per_tok = float(tokens) * d * itemsize
+    if not hierarchical:
+        return per_tok * k * (nn - 1) / nn
+    return per_tok * (nn - 1) * (1.0 - (1.0 - 1.0 / nn) ** k)
+
+
+def moe_coll_bytes(
+    mode: str,
+    tokens: int,
+    d: int,
+    f: int,
+    e: int,
+    k: int,
+    *,
+    n_dev: int,
+    topology: Topology,
+    hierarchical: bool = True,
+    weight_bits: int = 16,
+) -> Tuple[float, float]:
+    """(intra_bytes, inter_bytes) one MoE layer's collectives move per device
+    on a two-level fabric, under the flat vs hierarchical schedule.
+
+    The flat schedule's ring spans nodes, so its whole per-device volume is
+    paced by (and billed to) the inter level; the hierarchical schedule
+    splits per DESIGN.md §10 — this is what ``benchmarks/hetero_alloc.py``
+    feeds the simulated per-link latencies to pin hier <= flat."""
+    tok_bytes = float(tokens) * d * 2
+    w_bytes = float(e) * 2 * d * f * (weight_bits / 8)
+    n = max(int(n_dev), 1)
+    ns = min(topology.node_size, n)
+    nn = topology.n_nodes(n)
+    if mode == "model_centric":
+        vol = 2 * tok_bytes * (n - 1) / n
+        if nn <= 1:
+            return (vol, 0.0)
+        if not hierarchical:
+            return (0.0, vol)
+        return (2 * tok_bytes * (ns - 1) / ns,
+                2 * tok_bytes * (nn - 1) / nn)
+    if mode == "data_centric":
+        vol = w_bytes * (n - 1) / n
+        if nn <= 1:
+            return (vol, 0.0)
+        if not hierarchical:
+            return (0.0, vol)
+        return (w_bytes * (ns - 1) / ns,
+                w_bytes * (nn - 1) / nn / ns)
+    raise ValueError(mode)
 
 #: Modes the runtime chooser may return, in tie-break preference order:
 #: when the roofline says equal (usually both compute-bound), prefer
@@ -104,14 +259,14 @@ def layer_latency(
             # every device holds the whole group's gathered tokens; the
             # hidden is TP-sharded over F.
             mem += (srt_bytes + hid_bytes / n_dev) / hw.hbm_bw
-        coll = (tok_bytes + tok_bytes) / hw.link_bw  # AG tokens + RS outputs
+        coll = _token_coll_cost(tok_bytes, n_dev, hw)  # AG tokens + RS outputs
     elif mode == "data_centric":
         compute = flops / n_dev / hw.peak_flops   # tokens/n per device
         mem = (w_bytes + tok_bytes / n_dev) / hw.hbm_bw
         if not fused_ffn:
             # tokens (and therefore both round-trips) are split over devices.
             mem += (srt_bytes + hid_bytes) / n_dev / hw.hbm_bw
-        coll = w_bytes * (n_dev - 1) / n_dev / hw.link_bw  # AG weights
+        coll = _weight_coll_cost(w_bytes, n_dev, hw)  # AG weights
     else:
         raise ValueError(mode)
     return max(compute, mem, coll)
@@ -185,13 +340,13 @@ def layer_latency_uneven(
             mem = (w_bytes * hid_frac[i] + tok_bytes) / hbm
             if not fused_ffn:
                 mem += (srt_bytes + hid_bytes * hid_frac[i]) / hbm
-            coll = (tok_bytes + tok_bytes) / hw.link_bw
+            coll = _token_coll_cost(tok_bytes, n, hw)
         elif mode == "data_centric":
             compute = flops * tok_frac[i] / peak
             mem = (w_bytes + tok_bytes * tok_frac[i]) / hbm
             if not fused_ffn:
                 mem += (srt_bytes + hid_bytes) * tok_frac[i] / hbm
-            coll = w_bytes * (n - 1) / n / hw.link_bw
+            coll = _weight_coll_cost(w_bytes, n, hw)
         else:
             raise ValueError(mode)
         worst = max(worst, max(compute, mem, coll))
@@ -342,11 +497,19 @@ def serve_decode_attn_latency(
 # ---------------------------------------------------------------------------
 
 def _tp_group_size(cfg, mesh) -> int:
-    """TP group extent under the given config/mesh (1 without a mesh)."""
+    """TP group extent under the given config/mesh (1 without a mesh).
+
+    A two-level mesh (DESIGN.md §10) spreads the TP group over a
+    ("node", "model") axis tuple; the group size is the product."""
     if mesh is None or not getattr(mesh, "axis_names", ()):
         return 1
     tp = cfg.axes(mesh)["tp"]
-    return int(mesh.shape[tp]) if tp else 1
+    if not tp:
+        return 1
+    size = 1
+    for ax in (tp if isinstance(tp, tuple) else (tp,)):
+        size *= int(mesh.shape[ax])
+    return size
 
 
 def resolve_layer_mode(
@@ -374,6 +537,10 @@ def resolve_layer_mode(
     Weight bytes are priced at the quantized width (DESIGN.md §8): the
     plan's per-class ``expert_bits`` when it carries them, else 8 bits
     under ``cfg.quant`` int8/fp8, else 16.
+    With a ``cfg.topology`` (DESIGN.md §10) both rooflines price the token
+    and weight collectives per interconnect level (intra-node vs
+    inter-node), so a slow cross-node fabric pulls the crossover toward
+    data-centric — the per-node weight staging amortises the slow links.
     """
     if cfg.forced_layer_mode is not None:
         return cfg.forced_layer_mode
@@ -383,6 +550,8 @@ def resolve_layer_mode(
             return planned
     from repro.quant.core import quant_bits
 
+    topo = getattr(cfg, "topology", None)
+    hw = V5E if topo is None else dataclasses.replace(V5E, topology=topo)
     n_dev = float(_tp_group_size(cfg, mesh))
     fused = getattr(cfg, "fused_ffn", None)
     bits = quant_bits(getattr(cfg, "quant", "none"))
@@ -401,7 +570,7 @@ def resolve_layer_mode(
         costs = {
             m: layer_latency_uneven(
                 m, tokens, d, f, e, k, lat,
-                token_shares=inv, hidden_shares=hs,
+                token_shares=inv, hidden_shares=hs, hw=hw,
                 fused_ffn=fused is not False, weight_bits=wb,
             )
             for m in CHOOSABLE_MODES
@@ -418,7 +587,7 @@ def resolve_layer_mode(
         else:
             n_dev = n_dev * effective_devices(lat) / len(lat)
     return choose_mode(
-        tokens, d, f, e, k, n_dev=n_dev, fused_ffn=fused is not False,
+        tokens, d, f, e, k, n_dev=n_dev, hw=hw, fused_ffn=fused is not False,
         weight_bits=bits,
     )
 

@@ -134,37 +134,50 @@ class PlanCache(PipelineSharedCache):
 # the gather the cache holds
 # ---------------------------------------------------------------------------
 
-def _drop_fsdp(logical: tuple) -> tuple:
+def _drop_axes(logical: tuple, which=("fsdp",)) -> tuple:
     out = []
     for entry in logical:
-        if entry == "fsdp":
+        if entry in which:
             out.append(None)
         elif isinstance(entry, tuple):
-            kept = tuple(a for a in entry if a != "fsdp")
+            kept = tuple(a for a in entry if a not in which)
             out.append(kept if kept else None)
         else:
             out.append(entry)
     return tuple(out)
 
 
-def gather_ffn_params(ffn: dict, cfg, mesh) -> dict:
+def _drop_fsdp(logical: tuple) -> tuple:
+    return _drop_axes(logical, ("fsdp",))
+
+
+def gather_ffn_params(ffn: dict, cfg, mesh, *, collectives: str = "fsdp") -> dict:
     """All-gather the fsdp factor of every MoE FFN weight leaf.
 
     Expressed as a sharding constraint (GSPMD inserts the all-gather), so it
     composes with jit/scan and is a no-op without a mesh. The router stays
     replicated; TP factors stay sharded — per-layer data-centric dispatch
     gathers those inside the island (see moe_parallel).
+
+    ``collectives="all"`` (the overlap schedule, DESIGN.md §10) gathers the
+    tp factor too: the unrolled layer loop prefetches the NEXT data-centric
+    layer's full expert weights while the current layer computes —
+    generalizing this cache's double buffering from fsdp gathers to the MoE
+    expert collectives themselves. The gathered values are exactly the ones
+    the in-island gather would produce, so the overlap schedule is
+    bit-identical to the eager one.
     """
     from repro.parallel.moe_parallel import MOE_PARAM_LOGICAL
     from repro.parallel.sharding import constrain
 
+    drop = ("fsdp", "tp") if collectives == "all" else ("fsdp",)
     out = {}
     for name, v in ffn.items():
         logical = MOE_PARAM_LOGICAL.get(name)
         if v is None or logical is None or name == "router":
             out[name] = v
             continue
-        out[name] = constrain(v, _drop_fsdp(logical), cfg, mesh)
+        out[name] = constrain(v, _drop_axes(logical, drop), cfg, mesh)
     return out
 
 

@@ -114,6 +114,60 @@ def _ag(x, axes, dim):
     return lax.all_gather(x, axes, axis=dim, tiled=True)
 
 
+def _ag_hier(x, axes, dim, hier: bool):
+    """Tiled all-gather, optionally phased per interconnect level.
+
+    Hierarchical (DESIGN.md §10): gather the minor (intra-node, fast) axis
+    first, then the major (inter-node, slow) one — after the intra phase the
+    cross-node exchange moves each node's already-assembled shard once. The
+    phased gather concatenates in exactly the tuple axis order, so its
+    result is bitwise-identical to the single flat gather; only the
+    collective decomposition (and therefore the per-link traffic) differs."""
+    if not axes:
+        return x
+    if hier and isinstance(axes, tuple) and len(axes) > 1:
+        for ax in reversed(axes):
+            x = lax.all_gather(x, ax, axis=dim, tiled=True)
+        return x
+    return lax.all_gather(x, axes, axis=dim, tiled=True)
+
+
+def _axis_size(mesh, axes) -> int:
+    """Extent of a (possibly tuple) mesh axis group."""
+    if not axes:
+        return 1
+    size = 1
+    for ax in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[ax]
+    return int(size)
+
+
+def _hier_schedule(cfg: ParallelConfig, mesh, tp) -> bool:
+    """True when the island should run the two-level collective schedule:
+    a topology is attached AND the TP group spans a real "node" axis
+    (DESIGN.md §10). Everything else — no topology, no node axis, or a
+    single-node mesh — short-circuits to the flat single-level collectives,
+    so those configs compile to HLO bitwise-identical to the pre-topology
+    path."""
+    return (
+        getattr(cfg, "topology", None) is not None
+        and isinstance(tp, tuple)
+        and len(tp) == 2
+        and int(mesh.shape[tp[0]]) > 1
+    )
+
+
+def _psum_hier(y, axes, hier: bool):
+    """All-reduce, phased per level when hierarchical: the intra-node psum
+    (node-local combine) runs first so only node-combined partial sums cross
+    the slow inter-node fabric (DESIGN.md §10)."""
+    if hier and isinstance(axes, tuple) and len(axes) > 1:
+        for ax in reversed(axes):
+            y = lax.psum(y, ax)
+        return y
+    return lax.psum(y, axes)
+
+
 def _mask_rank0(b, tp_axis):
     """Keep a partial-sum bias on TP rank 0 only (avoids k_tp-fold bias)."""
     if b is None or tp_axis is None:
@@ -132,7 +186,7 @@ def hexa_moe_island(
     tokens_sharded_tp: bool,
     noise_rng: Optional[jax.Array] = None,
     layer_mode: Optional[str] = None,
-    pregathered: bool = False,
+    pregathered=False,
     token_valid: Optional[jax.Array] = None,
 ):
     """Body of the shard_map island: local tokens x (N_l, D) -> (y, aux, z).
@@ -142,12 +196,21 @@ def hexa_moe_island(
     ``layer_mode``: per-layer dispatch under ``cfg.mode == "auto"`` —
     "data_centric" gathers the weights' TP factor and keeps tokens (and the
     output) local; "model_centric"/None keeps the TP compute split and moves
-    tokens. ``pregathered``: the fsdp factor of the weights was already
-    gathered outside the island (pipeline-shared cache), skip it here.
+    tokens. ``pregathered``: which weight collectives already ran outside
+    the island (pipeline-shared cache): False = none, True/"fsdp" = the
+    fsdp factor, "all" = fsdp AND the data-centric tp factor (the overlap
+    schedule, DESIGN.md §10) — skip the corresponding in-island gathers.
     ``token_valid``: optional (N_l,) bool — heterogeneous-plan (Eq. 1) tail
     mask (DESIGN.md §6): invalid rows route with gate 0, produce exactly-zero
     output rows and exactly-zero weight gradients, and are excluded from the
     aux losses. Travels through the same TP gather as the tokens.
+
+    With ``cfg.topology`` on a two-level ("node", "model") mesh the
+    collectives run the hierarchical schedule (DESIGN.md §10): token and
+    weight gathers are phased intra-node -> inter-node (bitwise-identical
+    values), and the output combine reduces node-locally BEFORE the
+    cross-node exchange, shrinking inter-node partial-sum traffic by the
+    node size. Flat/uniform meshes short-circuit to the single-level path.
     """
     axes = cfg.axes(mesh)
     fsdp, tp = axes["fsdp"], axes["tp"]
@@ -155,11 +218,12 @@ def hexa_moe_island(
         fsdp = ()
     dc = layer_mode == "data_centric" and tp is not None
     gather_tokens = tp is not None and tokens_sharded_tp and not dc
+    hier = _hier_schedule(cfg, mesh, tp)
 
     if gather_tokens:
-        x = _ag(x, tp, 0)
+        x = _ag_hier(x, tp, 0, hier)
         if token_valid is not None:
-            token_valid = _ag(token_valid, tp, 0)
+            token_valid = _ag_hier(token_valid, tp, 0, hier)
 
     r = route(
         x, p.router, ms.top_k,
@@ -190,12 +254,18 @@ def hexa_moe_island(
         from repro.quant.core import fake_quant
         return fake_quant(w, cfg.quant, cfg.quant_tile)
 
-    tp_w = tp if dc else None  # data-centric: gather the weights' TP factor
+    # data-centric: gather the weights' TP factor (unless the overlap
+    # schedule already gathered it outside the island, pregathered="all").
+    tp_w = tp if dc and pregathered != "all" else None
     name = checkpoint_name  # pipeline-shared cache tagging
+
+    def ag_w(w, dim):
+        return _ag_hier(w, tp_w, dim, hier)
+
     if ms.glu:
-        wg = name(maybe_fq(_ag(_ag(p.w_gate, fsdp, 1), tp_w, 2)), "gathered_w")
-        wu = name(maybe_fq(_ag(_ag(p.w_up, fsdp, 1), tp_w, 2)), "gathered_w")
-        wd = name(maybe_fq(_ag(_ag(p.w_down, fsdp, 2), tp_w, 1)), "gathered_w")
+        wg = name(maybe_fq(ag_w(_ag(p.w_gate, fsdp, 1), 2)), "gathered_w")
+        wu = name(maybe_fq(ag_w(_ag(p.w_up, fsdp, 1), 2)), "gathered_w")
+        wd = name(maybe_fq(ag_w(_ag(p.w_down, fsdp, 2), 1)), "gathered_w")
         scales = ((p.w_gate_scale, p.w_up_scale, p.w_down_scale)
                   if quantized else None)
         y = espec.moe_glu(
@@ -203,10 +273,10 @@ def hexa_moe_island(
             fused=cfg.fused_ffn,
         )
     else:
-        w1 = name(maybe_fq(_ag(_ag(p.w1, fsdp, 1), tp_w, 2)), "gathered_w")
-        w2 = name(maybe_fq(_ag(_ag(p.w2, fsdp, 2), tp_w, 1)), "gathered_w")
+        w1 = name(maybe_fq(ag_w(_ag(p.w1, fsdp, 1), 2)), "gathered_w")
+        w2 = name(maybe_fq(ag_w(_ag(p.w2, fsdp, 2), 1)), "gathered_w")
         # (E, F_l) bias: local TP slice adds locally; dc gathers it full.
-        b1 = _ag(p.b1, tp_w, 1)
+        b1 = ag_w(p.b1, 1)
         b2 = _ag(p.b2, fsdp, 1)
         if not dc:
             b2 = _mask_rank0(b2, tp)
@@ -219,14 +289,29 @@ def hexa_moe_island(
     if tp is not None and not dc:
         # Partial products over the TP-sharded contraction dim.
         if gather_tokens and cfg.collective_schedule == "ag_rs":
-            y = lax.psum_scatter(y, tp, scatter_dimension=0, tiled=True)
+            if hier:
+                # Node-local combine BEFORE the cross-node exchange
+                # (DESIGN.md §10): the intra-node reduce collapses node_size
+                # partial sums into one, so only the combined rows cross the
+                # slow fabric; the final slice keeps this rank's chunk of
+                # its node's scatter share — same row ownership as the flat
+                # reduce-scatter over the ("node", "model") tuple.
+                node_ax, model_ax = tp
+                y = lax.psum(y, model_ax)
+                y = lax.psum_scatter(
+                    y, node_ax, scatter_dimension=0, tiled=True)
+                nl = y.shape[0] // mesh.shape[model_ax]
+                y = lax.dynamic_slice_in_dim(
+                    y, lax.axis_index(model_ax) * nl, nl, 0)
+            else:
+                y = lax.psum_scatter(y, tp, scatter_dimension=0, tiled=True)
         elif gather_tokens:
             # Paper-faithful ag_ar: all-reduce, then keep own token chunk.
-            y = lax.psum(y, tp)
-            nl = y.shape[0] // mesh.shape[tp]
+            y = _psum_hier(y, tp, hier)
+            nl = y.shape[0] // _axis_size(mesh, tp)
             y = lax.dynamic_slice_in_dim(y, lax.axis_index(tp) * nl, nl, 0)
         else:
-            y = lax.psum(y, tp)
+            y = _psum_hier(y, tp, hier)
 
     # Per-device aux losses; mean over the data axes happens in the caller
     # after the island returns (values are replicated within TP).
@@ -258,6 +343,11 @@ def ep_moe_island(
             "the EP baseline does not support quantized expert weights"
         )
     tp = cfg.axes(mesh)["tp"]
+    if isinstance(tp, tuple):
+        raise NotImplementedError(
+            "the EP baseline does not support two-level (node) meshes; use "
+            "the hexa modes for hierarchical dispatch (DESIGN.md §10)"
+        )
     ep = mesh.shape[tp] if tp else 1
     e, k = ms.num_experts, ms.top_k
     assert e % max(ep, 1) == 0, "EP baseline needs num_experts % ep == 0"
@@ -386,13 +476,16 @@ def moe_layer(
     x_spec: P,                       # how (B, S, D) is sharded
     noise_rng: Optional[jax.Array] = None,
     layer_idx: Optional[int] = None,
-    pregathered: bool = False,
+    pregathered=False,
 ):
     """Distributed MoE FFN over a (B, S, D) activation. Returns
     (y, aux_loss, z_loss) with y sharded like x.
 
-    ``layer_idx`` feeds the auto-mode plan lookup; ``pregathered`` marks the
-    weights' fsdp factor as already gathered (pipeline-shared cache path).
+    ``layer_idx`` feeds the auto-mode plan lookup; ``pregathered`` marks
+    which weight collectives already ran outside (pipeline-shared cache
+    path): True/"fsdp" = the fsdp factor, "all" = fsdp AND the tp factor
+    (the overlap schedule, DESIGN.md §10 — the layer then necessarily runs
+    data-centric dispatch, which is what the overlap prefetcher resolved).
 
     ``cfg.hetero_plan`` (DESIGN.md §6): when the plan's Eq. 1 ``token_counts``
     are uneven, each batch-group member masks its shard's tail batch rows
@@ -403,7 +496,11 @@ def moe_layer(
     island = ep_moe_island if cfg.mode == "ep" else hexa_moe_island
     if island is hexa_moe_island:
         layer_mode = None
-        if cfg.mode == "auto":
+        if pregathered == "all":
+            # The overlap prefetcher already gathered the weights' tp
+            # factor for this layer — it necessarily runs data-centric.
+            layer_mode = "data_centric"
+        elif cfg.mode == "auto":
             layer_mode = _auto_layer_mode(p, ms, cfg, mesh, b * s, layer_idx)
         island = functools.partial(
             island, layer_mode=layer_mode, pregathered=pregathered
@@ -471,26 +568,31 @@ def moe_layer(
 
 
 def _param_specs(p: MoEParams, ms: MoEStatic, cfg: ParallelConfig, mesh: Mesh,
-                 *, pregathered: bool = False):
+                 *, pregathered=False):
     """Physical specs for MoEParams matching parallel.sharding's resolution.
 
     ``pregathered``: weight leaves arrive with their fsdp factor already
-    gathered (parallel.cache.gather_ffn_params), so drop "fsdp" from their
-    logical specs before resolving. Logical specs come from the same
-    MOE_PARAM_LOGICAL / EP_PARAM_LOGICAL tables the init/gather paths use,
-    so the three can never drift apart."""
-    from repro.parallel.cache import _drop_fsdp
+    gathered (parallel.cache.gather_ffn_params) — drop "fsdp" from their
+    logical specs before resolving; ``"all"`` (the overlap schedule,
+    DESIGN.md §10) additionally drops "tp" (the expert collectives were
+    prefetched too). Logical specs come from the same MOE_PARAM_LOGICAL /
+    EP_PARAM_LOGICAL tables the init/gather paths use, so the three can
+    never drift apart."""
+    from repro.parallel.cache import _drop_axes
     from repro.parallel.sharding import divisible_spec, resolve_spec
 
     table = EP_PARAM_LOGICAL if cfg.mode == "ep" else MOE_PARAM_LOGICAL
+    drop = ()
+    if pregathered:
+        drop = ("fsdp", "tp") if pregathered == "all" else ("fsdp",)
 
     def spec_of(name):
         v = getattr(p, name)
         if v is None:
             return None
         logical = table[name]
-        if pregathered and name != "router":
-            logical = _drop_fsdp(logical)
+        if drop and name != "router":
+            logical = _drop_axes(logical, drop)
         phys = resolve_spec(logical, cfg, mesh)
         return divisible_spec(v.shape, phys, mesh)
 

@@ -141,18 +141,39 @@ class ParallelConfig:
     hetero_plan: Optional[Any] = None  # core.hetero.HeteroPlan
     quant: str = "none"           # expert-weight QAT: none | int8 | fp8
     quant_tile: int = 128         # block size of the per-(expert,tile) scales
+    # Two-level interconnect (DESIGN.md §10): an ``autotune.Topology``
+    # prices the chooser's collectives per level, and on a mesh carrying a
+    # "node" axis switches the MoE islands to the hierarchical schedule
+    # (two-phase gathers; node-local combine before the cross-node
+    # exchange). None, or a mesh without a "node" axis, keeps the flat
+    # single-level collectives — bitwise-identical HLO to the pre-topology
+    # path.
+    topology: Optional[Any] = None  # autotune.Topology
+    # Overlap the NEXT layer's expert collectives with the current layer's
+    # compute: extends the pipeline-shared cache's double buffering
+    # (cache_layers) from fsdp gathers to the data-centric weights' tp
+    # factor as well (DESIGN.md §10). Requires cache_layers > 0 and the
+    # unrolled layer loop; values are bit-identical to the eager schedule.
+    overlap_dispatch: bool = False
 
     def axes(self, mesh: Mesh) -> dict:
         names = list(mesh.axis_names)
         dp = tuple(n for n in ("pod", "data") if n in names)
-        tp = "model" if "model" in names else None
+        # A two-level mesh (DESIGN.md §10) carries a "node" axis: the TP
+        # group spans ("node", "model") — node-major, so the flattened rank
+        # order (and therefore every gather's concat order) matches the
+        # equivalent flat mesh exactly.
+        tp: Any = "model" if "model" in names else None
+        if tp is not None and "node" in names:
+            tp = ("node", "model")
         if self.mode == "model_centric":
             return {"fsdp": (), "tp": tp, "dp": dp, "sp": tp}
         if self.mode == "data_centric":
             # paper §4.3: PURE data parallelism — every device computes its
             # own batch shard; params are sharded over the whole mesh and
             # gathered at use (pipeline-shared cache bounds residency).
-            all_axes = dp + ((tp,) if tp else ())
+            tp_axes = tp if isinstance(tp, tuple) else ((tp,) if tp else ())
+            all_axes = dp + tp_axes
             return {"fsdp": all_axes, "tp": None, "dp": all_axes, "sp": None}
         if self.mode in ("hybrid", "ep", "auto"):
             # "auto" uses the hybrid physical layout — the superset both

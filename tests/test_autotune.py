@@ -164,6 +164,16 @@ def test_unrolled_cache_path_bitwise_equals_uncached():
     assert st is not None
     assert st["peak_resident_layers"] <= 2
     assert st["hits"] > 0  # prefetch made every later fetch a hit
+    # overlap_dispatch (DESIGN.md §10): prefetching the MoE positions'
+    # expert collectives alongside the fsdp gathers must stay bitwise
+    # equal with the same residency bound.
+    overlap = _fwd(cfg, params, toks, ParallelConfig(
+        mode="auto", blk=16, scan_layers=False, cache_layers=2,
+        overlap_dispatch=True),
+        mode="prefill")
+    assert np.array_equal(base, overlap)
+    st = lm.LAST_PIPELINE_CACHE_STATS
+    assert st is not None and st["peak_resident_layers"] <= 2
 
 
 def test_cache_skipped_under_remat_train_and_rejected_with_scan():
@@ -185,6 +195,7 @@ def test_cache_skipped_under_remat_train_and_rejected_with_scan():
             mode="prefill")
 
 
+@pytest.mark.multihost
 def test_auto_mode_on_mesh_bitwise_equals_forced():
     """8 fake CPU devices (subprocess, same idiom as test_distributed):
     mode="auto" on a (4,2) mesh must equal the forced layer mode bitwise and

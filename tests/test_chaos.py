@@ -36,6 +36,7 @@ from repro.runtime import ft as ft_lib
 MAX_SEQ = 32
 
 
+
 @pytest.fixture(scope="module")
 def engine_setup():
     """One cheap all-attention config (prefix-cache capable) shared by
@@ -351,6 +352,7 @@ def test_training_chaos_corrupt_newest_plus_step_failure(tmp_path, capsys):
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.multihost
 def test_train_cli_elastic_device_dropout(tmp_path):
     """Subprocess with 8 fake devices: ``--elastic --fault-spec`` injects
     a device dropout at step 3 of a 2x2-mesh MoE run; the driver must

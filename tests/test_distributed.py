@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.multihost  # subprocess fake-device mesh tier
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

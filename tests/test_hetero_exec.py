@@ -38,6 +38,7 @@ from repro.parallel.cache import PlanCache
 from repro.parallel.hetero_exec import HeteroExecutor
 from repro.runtime.straggler import StragglerConfig, StragglerMonitor
 
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -390,6 +391,7 @@ def run_sub(code: str, timeout: int = 900) -> dict:
     return json.loads(line[-1][len("RESULT"):])
 
 
+@pytest.mark.multihost
 def test_spmd_uniform_plan_bitwise_and_skewed_plan_exact():
     out = run_sub(r"""
 import json
@@ -470,6 +472,7 @@ print("RESULT" + json.dumps(res))
     assert out["grad_finite"] and out["grad_masks_row"]
 
 
+@pytest.mark.multihost
 def test_spmd_train_step_and_serve_decode_under_plan():
     out = run_sub(r"""
 import json, dataclasses

@@ -463,6 +463,90 @@ def test_sampled_stream_parity_across_engines():
     assert out_dense == refs, "dense sampled stream diverged"
 
 
+# --- hierarchical topology row (DESIGN.md §10) ---------------------------
+
+@pytest.mark.multihost
+def test_hier_topology_serving_token_identical():
+    """Paged serving on a two-level mesh (2 nodes x 2 devices of a 4-wide TP
+    group, node-local combine before the cross-node exchange) must stream
+    token-for-token what the flat 4-wide mesh streams, both for the paged
+    engine (slot refill, chunked prefill) and for the batch-1 greedy
+    reference on the same meshes — the topology reshapes the collectives,
+    never the tokens. The comparisons are mesh-to-mesh (same batch layout,
+    same sharded reductions, only the schedule differs); a sharded run is
+    not token-comparable to the single-device oracle, greedy argmax sits on
+    reassociated f32 sums there. Subprocess: needs 8 fake devices."""
+    import json as _json
+    import os as _os
+    import subprocess as _sp
+    import sys as _sys
+
+    code = r"""
+import dataclasses, json
+import jax
+import numpy as np
+from repro import configs as cfglib
+from repro.launch import serve
+from repro.launch.mesh import make_mesh, split_model_axis
+from repro.models import lm
+from repro.parallel.autotune import Topology
+from repro.parallel.sharding import ParallelConfig, split_tree, tree_shardings
+
+cfg = dataclasses.replace(
+    cfglib.get_smoke_config("qwen3-moe-30b-a3b"), dtype="float32")
+rng = np.random.default_rng(11)
+reqs = []
+for i in range(6):
+    plen = int(rng.integers(2, 14))
+    reqs.append(serve.Request(
+        rid=i,
+        prompt=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+        max_new=int(rng.integers(1, 6))))
+
+def run(mesh, pcfg):
+    params, specs = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    params = jax.tree.map(jax.device_put, params,
+                          tree_shardings(params, specs, pcfg, mesh))
+    maxp = 32 // 4
+    server = serve.PagedServer(
+        cfg, pcfg, mesh, num_slots=4, page_size=4,
+        num_pages=1 + 4 * maxp, max_pages_per_slot=maxp,
+        params=params, prefill_chunk=5)
+    for r in reqs:
+        server.submit(dataclasses.replace(r, out=[]))
+    done = server.run()
+    server.pool.assert_consistent()
+    refs = {str(r.rid): serve.greedy_reference(
+        cfg, pcfg, mesh, params, r.prompt, r.max_new, max_seq=32)
+        for r in reqs}
+    return {str(r.rid): r.out for r in done}, refs
+
+flat, flat_ref = run(make_mesh((2, 4), ("data", "model")),
+                     ParallelConfig(blk=8))
+topo = Topology(intra_bw=50e9, inter_bw=12.5e9, node_size=2)
+dims, axes = split_model_axis((2, 4), ("data", "model"), topo.node_size)
+hier, hier_ref = run(make_mesh(dims, axes),
+                     ParallelConfig(blk=8, topology=topo))
+print("RESULT" + json.dumps({"flat": flat, "hier": hier,
+                             "flat_ref": flat_ref, "hier_ref": hier_ref}))
+"""
+    root = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+    env = dict(_os.environ)
+    env["PYTHONPATH"] = _os.path.join(root, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    res = _sp.run([_sys.executable, "-c", code], capture_output=True,
+                  text=True, env=env, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT")]
+    assert line, res.stdout[-2000:]
+    out = _json.loads(line[-1][len("RESULT"):])
+    assert out["hier"] == out["flat"], (
+        "hierarchical paged serving changed the token stream")
+    assert out["hier_ref"] == out["flat_ref"], (
+        "hierarchical batch-1 greedy reference changed the token stream")
+
+
 def test_prefill_chunk_size_is_invisible():
     """Chunked prefill is a scheduling choice, not a numerical one: chunk
     sizes 1/3/16 produce identical streams."""
