@@ -46,11 +46,14 @@ bench-check:
 		--require serve/paged/tokens_per_s \
 		--require serve/dense/tokens_per_s \
 		--require serve/prefix/hit_rate \
+		--require serve/spec/on/tokens_per_s \
+		--require serve/spec/acceptance \
 		--require quant/esffn/bytes \
 		--require hetero/topology/flat \
 		--lt hetero/topology/hier:hetero/topology/flat \
 		--lt serve/paged/kv_cache_bytes:serve/dense/kv_cache_bytes \
 		--lt serve/prefix/ttft/cached:serve/prefix/ttft/uncached \
+		--lt serve/spec/on/tokens_per_s:serve/spec/off/tokens_per_s \
 		--lt quant/esffn/bytes/int8:quant/esffn/bytes/bf16 \
 		--lt quant/crossover/tokens/int8:quant/crossover/tokens/bf16 \
 		--lt quant/kv/admitted/fp:quant/kv/admitted/int8

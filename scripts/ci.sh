@@ -38,7 +38,9 @@ make chaos
 # under simulated skew; the serve suite runs the mixed-length workload
 # through the dense and paged drivers and asserts paged uses less peak KV
 # cache with no tokens/s regression, then the high-duplicate prefix
-# workload and asserts prefix-cached TTFT < uncached at a real hit-rate;
+# workload and asserts prefix-cached TTFT < uncached at a real hit-rate,
+# then the speculative suite on a batch-1 repetitive workload and asserts
+# spec-on decode tokens/s > 1.5x spec-off with token-identical output;
 # the quant suite asserts int8 fused-FFN
 # bytes < bf16, the crossover shift, and the equal-HBM paged-KV admission
 # gain), so the harness and the machine-readable perf trajectory can't

@@ -74,21 +74,44 @@ class Request:
     error: Optional[str] = None  # permanent failure reason
 
 
+def argmax_token(logits_row) -> int:
+    """THE engine-wide greedy convention (DESIGN.md §11): upcast the row
+    to f32 FIRST, then argmax; ties resolve to the LOWEST index (first
+    occurrence — ``np.argmax`` and ``jnp.argmax`` both guarantee this, so
+    the host-side argmax here and the batched device argmax in
+    ``_greedy`` agree on every row). Every greedy selection —
+    ``next_token``, the batch ``_greedy`` helper, and the draft-side
+    greedy in ``launch.spec`` — routes through this one convention, so
+    draft-vs-target acceptance and reference replay can never diverge on
+    a row where bf16 downcasting manufactures a tie the f32 original
+    breaks (regression-pinned in tests/test_spec.py). Host-side on
+    purpose: the speculative verify loop calls this per accepted row, and
+    a device dispatch per row would eat the speedup it exists to measure."""
+    row = np.asarray(logits_row, np.float32).reshape(-1)
+    return int(np.argmax(row))
+
+
 def _greedy(logits) -> np.ndarray:
-    return np.asarray(jnp.argmax(logits[..., -1, :], axis=-1)).reshape(-1)
+    # batch form of argmax_token: f32 upcast BEFORE the device argmax,
+    # lowest index on ties — one convention across all engines.
+    rows = jnp.asarray(logits)[..., -1, :].astype(jnp.float32)
+    return np.asarray(jnp.argmax(rows, axis=-1)).reshape(-1)
 
 
 def next_token(logits_row, req: Request) -> int:
     """Engine-independent next-token selection: greedy argmax at
-    ``temperature <= 0``, else categorical sampling at a key derived ONLY
-    from ``(req.seed, len(req.out))`` — the same seed threading in
-    ``BatchedServer``, ``PagedServer``, and the batch-1 reference, so a
-    request's sampled stream is a pure function of its own logits and
-    seed, never of its batch-mates, slot id, or engine
+    ``temperature <= 0`` (``argmax_token`` — the shared f32-upcast device
+    convention), else categorical sampling at a key derived ONLY from
+    ``(req.seed, len(req.out))`` — the same seed threading in
+    ``BatchedServer``, ``PagedServer``, the batch-1 reference, and the
+    speculative verify loop (which appends each accepted token before
+    sampling the next, so its keys advance identically), so a request's
+    sampled stream is a pure function of its own logits and seed, never
+    of its batch-mates, slot id, or engine
     (tests/test_serve_parity.py pins this)."""
-    row = np.asarray(logits_row, np.float32).reshape(-1)
     if req.temperature <= 0.0:
-        return int(np.argmax(row))
+        return argmax_token(logits_row)
+    row = np.asarray(logits_row, np.float32).reshape(-1)
     key = jax.random.fold_in(
         jax.random.PRNGKey(req.seed), len(req.out))
     return int(jax.random.categorical(
@@ -372,6 +395,11 @@ class PagedServer:
                     "decode-capable slot — finished prefills could never "
                     "hand off")
 
+        # Speculative decoding (DESIGN.md §11): constructing a
+        # launch.spec.SpecDecoder over this server attaches itself here;
+        # when set, _decode_tick delegates whole verify rounds to it.
+        self.spec = None
+
         self.table = np.zeros((num_slots, max_pages_per_slot), np.int32)
         self._build_steps()
         self.slots: list[Optional[_PagedSlot]] = [None] * num_slots
@@ -412,6 +440,11 @@ class PagedServer:
         # two eager steps above.
         self._handoff_step = None
         self._copy_step = None
+        # the speculative score step lives on the SpecDecoder; drop it so
+        # engine recovery re-jits it too
+        spec = getattr(self, "spec", None)
+        if spec is not None:
+            spec.reset_steps()
 
     def _need_pages(self, req: Request) -> int:
         # cache rows written = prompt + fed-back outputs (the last
@@ -561,6 +594,45 @@ class PagedServer:
             self.table[slot, j] = 0
             st.reclaimed += 1
 
+    def _rollback(self, slot: int, n: int):
+        """Un-write the last ``n`` speculative cache rows by truncation
+        only (DESIGN.md §11): shrink the slot's device ``len`` (paged
+        attention masks every row at and past it — ``lm.rollback_slot``),
+        pop now-unbacked tail pages back to the request's own admission
+        RESERVATION (``PagePool.rollback``, never the free budget: the
+        request is still live and must re-grow grant-by-grant), and zero
+        their table entries. The popped pages are strictly decode-region
+        — past any prefix-matched prompt page — so they are always
+        refcount-1; a shared page here trips the pool's hard error rather
+        than corrupting a CoW sibling. The sampling key needs no explicit
+        re-derivation: keys are a pure function of ``(seed, len(out))``
+        and rejected tokens were never appended to ``out``."""
+        st = self.slots[slot]
+        if n <= 0:
+            return
+        new_len = st.length - n
+        assert new_len >= len(st.req.prompt), (new_len, len(st.req.prompt))
+        if self.reclaim_window is not None and st.reclaimed:
+            # reclamation must only ever have run at committed lengths
+            # (the spec tick reclaims AFTER rollback), so no reclaimed
+            # page can re-enter the rolled-back window
+            assert st.reclaimed * self.page_size <= max(
+                new_len - self.reclaim_window, 0), \
+                "rollback would rewind into window-reclaimed pages"
+        keep = cdiv(new_len, self.page_size)
+        dropped = []
+        while len(st.pages) > keep:
+            p = st.pages.pop()
+            self.table[slot, len(st.pages)] = 0
+            if p != 0:
+                dropped.append(p)
+        if dropped:
+            self.pool.rollback(dropped, st.group)
+            st.allocated -= len(dropped)
+        self.cache = lm.rollback_slot(self.cfg, self.cache, slot, new_len)
+        st.length = new_len
+        self.trace.append(("rollback", st.req.rid, slot, n))
+
     def _finish(self, slot: int, st: _PagedSlot, done: list):
         done.append(st.req)
         self.pool.release([p for p in st.pages if p != 0], st.group,
@@ -568,6 +640,8 @@ class PagedServer:
         self.table[slot, :] = 0
         self.slots[slot] = None
         self.free.append(slot)
+        if self.spec is not None:
+            self.spec.forget(st.req.rid)
         self.trace.append(("finish", st.req.rid, slot))
 
     # -- failure handling (DESIGN.md §9) --------------------------------------
@@ -584,6 +658,8 @@ class PagedServer:
         self.table[slot, :] = 0
         self.slots[slot] = None
         self.free.append(slot)
+        if self.spec is not None:
+            self.spec.forget(st.req.rid)
 
     def _fail_request(self, req: Request, reason: str):
         req.error = reason
@@ -848,7 +924,11 @@ class PagedServer:
 
     def _decode_tick(self, done: list) -> bool:
         """One decode macro-step over every decode-capable slot past
-        prefill (a strict prefill-role slot waits for _transfer_tick)."""
+        prefill (a strict prefill-role slot waits for _transfer_tick).
+        With a SpecDecoder attached the whole tick is a speculative
+        draft/verify round instead (DESIGN.md §11)."""
+        if self.spec is not None:
+            return self.spec.decode_tick(done)
         dec = [(slot, st) for slot, st in enumerate(self.slots)
                if st is not None and st.pos >= len(st.req.prompt)
                and self.roles[slot] != "prefill"]
@@ -1018,7 +1098,25 @@ def main(argv=None):
                          "transfer, no KV copy (--paged only, DESIGN.md "
                          "§7). Role shares follow --hetero-latencies "
                          "classes, else half/half")
+    ap.add_argument("--spec-ngram", action="store_true",
+                    help="speculative decoding with self-speculative "
+                         "n-gram drafting from each request's own token "
+                         "history — no draft model (--paged only, "
+                         "all-attention stacks, DESIGN.md §11)")
+    ap.add_argument("--spec-draft", default=None, metavar="ARCH",
+                    help="speculative decoding with a small draft model "
+                         "(any all-attention non-windowed config, e.g. "
+                         "gemma_2b drafting for a MoE target); resolved "
+                         "with the same --smoke switch as --arch "
+                         "(--paged only, DESIGN.md §11)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft length per verify round: up to k drafted "
+                         "tokens + 1 correction commit per forward")
     args = ap.parse_args(argv)
+    if (args.spec_ngram or args.spec_draft) and not args.paged:
+        ap.error("--spec-ngram/--spec-draft require --paged")
+    if args.spec_ngram and args.spec_draft:
+        ap.error("--spec-ngram and --spec-draft are mutually exclusive")
     if args.kv_quant != "none" and not args.paged:
         ap.error("--kv-quant requires --paged")
     if (args.prefix_cache or args.disagg) and not args.paged:
@@ -1114,6 +1212,21 @@ def main(argv=None):
             kv_quant=args.kv_quant, prefix_cache=args.prefix_cache,
             disagg=args.disagg, audit=args.audit,
         )
+        if args.spec_ngram or args.spec_draft:
+            # lazy import: spec imports serve (the shared sampling
+            # helpers), so serve must never import spec at module level
+            from repro.launch import spec as spec_lib
+            if args.spec_draft:
+                dcfg = (cfglib.get_smoke_config(args.spec_draft)
+                        if args.smoke else cfglib.get_config(args.spec_draft))
+                dparams, _ = split_tree(
+                    lm.init_params(jax.random.PRNGKey(1), dcfg))
+                drafter = spec_lib.ModelDrafter(
+                    dcfg, ParallelConfig(blk=16), None, dparams,
+                    max_seq=args.max_seq)
+            else:
+                drafter = spec_lib.NGramDrafter()
+            spec_lib.SpecDecoder(server, drafter, k=args.spec_k)
     else:
         server = BatchedServer(cfg, pcfg, mesh, num_slots=num_slots,
                                max_seq=args.max_seq, params=params,
@@ -1159,6 +1272,12 @@ def main(argv=None):
         if args.disagg:
             print(f"[serve] disagg: roles {server.roles}, "
                   f"{server.transfers} page-table handoffs")
+        if server.spec is not None:
+            sp = server.spec.stats()
+            print(f"[serve] speculative: {sp['rounds']} verify rounds, "
+                  f"{sp['accepted_drafts']}/{sp['drafted']} drafts "
+                  f"accepted ({sp['acceptance_rate']:.0%}), "
+                  f"{sp['rollback_tokens']} rows rolled back")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     faults_lib.install(None)

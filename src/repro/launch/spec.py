@@ -1,0 +1,320 @@
+"""Speculative decoding on the paged engine (DESIGN.md §11).
+
+Decode is memory-bound: a macro-step moves the whole weight set (and the
+slot's KV pages) to emit ONE token per slot. Verifying ``k`` drafted
+tokens in a single chunk-extension paged forward
+(``launch.steps.make_paged_score_step``) amortizes that same traffic over
+up to ``k + 1`` committed tokens — the classic speculative-decoding win,
+priced by ``parallel.autotune.spec_decode_speedup``.
+
+The acceptance rule here is **exact-match replay**, not
+distribution-preserving rejection sampling: each verify row ``i`` is the
+logits a sequential decode would have produced at that position, the
+engine samples from it with the standard ``launch.serve.next_token``
+(keys derive only from ``(seed, len(out))``, and accepted tokens are
+appended before the next row is sampled, so the keys advance exactly as
+in the non-speculative engine), and drafting continues only while the
+sampled token equals the drafted one. Accepted streams are therefore
+**token-identical** to the non-speculative paged engine — and to the
+batch-1 dense reference — for greedy AND seeded-temperature requests
+(tests/test_serve_parity.py pins the matrix); the draft only ever decides
+how many sequential steps collapse into one forward, never which tokens
+come out.
+
+Rejection rolls back by truncation only: ``PagedServer._rollback``
+shrinks the slot's device ``len`` (paged attention masks every row past
+it), returns now-unbacked tail pages to the request's own admission
+reservation (``PagePool.rollback`` — never to the free budget, and never
+a refcount>1 prefix-shared page), and the sampling key re-derives itself
+because rejected tokens were never appended to ``out``.
+
+Recurrent stacks (mamba/xlstm hybrids) cannot rewind: their per-slot
+state advances token-wise through ``_make_paged_prefill_scan`` and
+truncation would silently decode from a poisoned state — ``SpecDecoder``
+refuses them loudly at construction.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import steps as steps_lib
+from repro.launch.serve import argmax_token, next_token
+from repro.models import lm
+from repro.runtime import faults as faults_lib
+
+
+class NGramDrafter:
+    """Self-speculative n-gram drafting from the request's own history
+    (DESIGN.md §11): find the most recent PRIOR occurrence of the
+    trailing ``n``-gram in ``prompt + out`` and propose the tokens that
+    followed it. No draft model, no extra memory traffic — it exploits
+    the repetitiveness of real decode streams (templated boilerplate,
+    code, retrieval-stuffed contexts, greedy cycles). An empty draft
+    degrades the verify round to a plain one-token decode through the
+    same score step."""
+
+    def __init__(self, n: int = 3):
+        if n < 1:
+            raise ValueError(f"n-gram order must be >= 1, got {n}")
+        self.n = n
+
+    def draft(self, history: np.ndarray, k: int, rid: int = -1) -> list:
+        """Propose up to ``k`` continuation tokens after ``history``,
+        longest-matching-suffix first (order ``n`` down to 1); ``[]`` when
+        no prior occurrence exists. Among occurrences of the same order
+        the MOST RECENT one with a full ``k``-token continuation wins;
+        near the end of history (where recent occurrences' continuations
+        are cut short) the longest available continuation is proposed
+        instead — on a cyclic stream that is the difference between
+        drafting 1 token and drafting ``k``."""
+        h = np.asarray(history)
+        if k <= 0:
+            return []
+        for n in range(min(self.n, len(h) - 1), 0, -1):
+            pat = h[-n:]
+            best: list = []
+            # scan most-recent-first; a full-k continuation returns
+            # immediately, otherwise remember the longest seen
+            for i in range(len(h) - n - 1, -1, -1):
+                if np.array_equal(h[i:i + n], pat):
+                    cont = h[i + n:i + n + k]
+                    if len(cont) == k:
+                        return [int(t) for t in cont]
+                    if len(cont) > len(best):
+                        best = [int(t) for t in cont]
+            if best:
+                return best
+        return []
+
+
+class ModelDrafter:
+    """Draft-model drafting: a small dense-cache model (reusing the
+    existing configs, e.g. ``gemma_2b`` drafting for a MoE target) greedily
+    proposes ``k`` tokens per verify round (DESIGN.md §11).
+
+    Per request it keeps a batch-1 dense cache: each ``draft`` call first
+    catches the cache up on the tokens the target accepted since the last
+    round, then decodes ``k`` greedy tokens (``argmax_token`` — the same
+    convention as the target, so a deterministic draft of the same config
+    reaches 100% acceptance under greedy), and finally truncates its
+    ``len`` back to the committed history so rejected draft rows vanish
+    exactly like the target's rollback. That truncation is why only
+    all-attention, non-windowed draft configs are accepted: rolling-buffer
+    local-attention caches and recurrent states cannot rewind."""
+
+    def __init__(self, cfg, pcfg, mesh, params, *, max_seq: int):
+        if any(cfg.layer_kind(i) != "attn" for i in range(cfg.num_layers)):
+            raise ValueError(
+                "ModelDrafter requires an all-attention draft config: "
+                "recurrent draft state cannot rewind past rejected drafts")
+        if cfg.window > 0 and any(cfg.attn_kind(i) == "local"
+                                  for i in range(cfg.num_layers)):
+            raise ValueError(
+                "ModelDrafter requires a non-windowed draft config: the "
+                "rolling local-attention cache cannot truncate safely")
+        if cfg.num_codebooks > 1:
+            raise ValueError("ModelDrafter does not support codebook heads")
+        self.cfg, self.pcfg, self.mesh = cfg, pcfg, mesh
+        self.params = params
+        self.max_seq = max_seq
+        self.step = jax.jit(steps_lib.make_serve_step(
+            cfg, pcfg, mesh, (1, 1, cfg.d_model)))
+        self._state: dict = {}   # rid -> [cache, resident_len]
+
+    def _feed(self, cache, tok: int):
+        logits, cache = self.step(
+            self.params, {"tokens": jnp.asarray([[tok]], jnp.int32)}, cache)
+        return logits, cache
+
+    def draft(self, history: np.ndarray, k: int, rid: int = -1) -> list:
+        """Catch the request's draft cache up on ``history`` and greedily
+        decode up to ``k`` proposal tokens (empty when the draft cache
+        cannot hold them)."""
+        hist = np.asarray(history)
+        k = min(k, self.max_seq - len(hist))
+        if k <= 0:
+            return []
+        if rid not in self._state:
+            self._state[rid] = [lm.init_cache(self.cfg, 1, self.max_seq), 0]
+        cache, resident = self._state[rid]
+        logits = None
+        for tok in hist[resident:]:
+            logits, cache = self._feed(cache, int(tok))
+        draft = [argmax_token(logits[0, -1])]
+        for _ in range(k - 1):
+            logits, cache = self._feed(cache, draft[-1])
+            draft.append(argmax_token(logits[0, -1]))
+        # truncate the draft rows: next round's catch-up re-feeds from the
+        # committed history, whatever the target accepted
+        cache = {"layers": cache["layers"],
+                 "len": cache["len"].at[0].set(jnp.int32(len(hist)))}
+        self._state[rid] = [cache, len(hist)]
+        return draft
+
+    def drop(self, rid: int) -> None:
+        """Free the per-request draft cache (finish/abort/preempt)."""
+        self._state.pop(rid, None)
+
+
+class SpecDecoder:
+    """Drive speculative draft/verify rounds on a ``PagedServer``
+    (DESIGN.md §11). Constructing one attaches it to the server
+    (``server.spec``); ``PagedServer._decode_tick`` then delegates whole
+    decode ticks here. Each round, per decode-capable slot:
+
+    1. ask the drafter for up to ``k`` tokens after ``prompt + out``
+       (capped so the round can never write past the admitted worst-case
+       length);
+    2. score ``[out[-1]] + draft`` in ONE chunk-extension paged forward
+       (``make_paged_score_step``) — pages granted from the slot's
+       reservation exactly like a decode boundary;
+    3. sample each row with ``next_token`` (appending as it goes, so keys
+       advance exactly like sequential decode) while the sample equals
+       the draft;
+    4. roll rejected rows back by truncation (``PagedServer._rollback``)
+       and only then window-reclaim at the committed length.
+
+    Refuses hybrid (recurrent) stacks at construction: their token-wise
+    state advance cannot be rewound by page-table truncation, and a
+    silent wrong-state decode is the failure mode this guard kills."""
+
+    def __init__(self, server, drafter, k: int = 4):
+        cfg = server.cfg
+        if any(cfg.layer_kind(i) != "attn" for i in range(cfg.num_layers)):
+            raise ValueError(
+                "speculative decoding requires an all-attention stack: "
+                "recurrent layers advance per-slot state token-wise "
+                "(the scan prefill path), which page-table truncation "
+                "cannot rewind — rollback would silently decode from a "
+                "wrong state")
+        if cfg.num_codebooks > 1:
+            raise ValueError(
+                "speculative decoding does not support codebook heads")
+        if k < 1:
+            raise ValueError(f"draft length k must be >= 1, got {k}")
+        self.server = server
+        self.drafter = drafter
+        self.k = k
+        self.chunk = k + 1
+        self.rounds = 0
+        self.drafted = 0            # draft tokens scored
+        self.accepted_drafts = 0    # draft tokens that matched the sample
+        self.rollback_tokens = 0    # speculative rows truncated away
+        self._score_step = None
+        server.spec = self
+
+    def reset_steps(self) -> None:
+        """Drop the jitted score step (engine re-jit recovery path)."""
+        self._score_step = None
+
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verify sampler accepted."""
+        return self.accepted_drafts / max(self.drafted, 1)
+
+    def stats(self) -> dict:
+        """Counters for benches/CLI: rounds, drafted, accepted, rate."""
+        return {
+            "rounds": self.rounds,
+            "drafted": self.drafted,
+            "accepted_drafts": self.accepted_drafts,
+            "rollback_tokens": self.rollback_tokens,
+            "acceptance_rate": self.acceptance_rate(),
+        }
+
+    def _step(self):
+        if self._score_step is None:
+            srv = self.server
+            self._score_step = jax.jit(steps_lib.make_paged_score_step(
+                srv.cfg, srv.pcfg, srv.mesh, srv.page_size))
+        return self._score_step
+
+    def decode_tick(self, done: list) -> bool:
+        """One speculative round over every decode-capable slot — the
+        drop-in replacement for ``PagedServer._decode_tick``'s macro-step
+        (same fault sites, same NaN watchdog, same trace/timing hooks)."""
+        srv = self.server
+        dec = [(slot, st) for slot, st in enumerate(srv.slots)
+               if st is not None and st.pos >= len(st.req.prompt)
+               and srv.roles[slot] != "prefill"]
+        if not dec:
+            return False
+        faults_lib.inject("serve.decode")
+        step = self._step()
+        t0 = time.perf_counter()
+        for slot, st in dec:
+            self._verify_round(slot, st, step, done)
+        srv.decode_times_s.append(time.perf_counter() - t0)
+        return True
+
+    def _verify_round(self, slot, st, step, done) -> int:
+        srv = self.server
+        req = st.req
+        # cap the draft so the round's rows stay inside the admitted
+        # worst-case length (prompt + max_new - 1 cache rows): budget-1
+        # drafts at most, since row 0 is always the pending fed-back token
+        budget = req.max_new - len(req.out)
+        draft: list = []
+        if budget > 1:
+            history = np.concatenate(
+                [np.asarray(req.prompt, np.int64),
+                 np.asarray(req.out, np.int64)])
+            draft = [int(t) for t in
+                     self.drafter.draft(history, min(self.k, budget - 1),
+                                        req.rid)][:budget - 1]
+        n_valid = 1 + len(draft)
+        self.drafted += len(draft)
+        srv._ensure_pages(slot, st, st.length + n_valid)
+        toks = np.zeros((self.chunk,), np.int32)
+        toks[0] = req.out[-1]
+        toks[1:n_valid] = draft
+        logits, srv.cache = step(
+            srv.params, jnp.asarray(toks), jnp.int32(n_valid),
+            jnp.int32(slot),
+            # .copy() — see _prefill_tick: the live table buffer must not
+            # be aliased by an asynchronously-executing step
+            jnp.asarray(srv.table[slot].copy()), srv.cache)
+        st.length += n_valid
+        rows = np.array(logits, np.float32)   # owned: faults may poison
+        for f in faults_lib.inject("serve.logits"):
+            if f.kind == "nan" and int(f.payload.get("slot", slot)) == slot:
+                rows[:] = np.nan
+        if not np.all(np.isfinite(rows[:n_valid])):
+            srv._abort_slot(slot, reason="non-finite verify logits")
+            return 0
+        accepted = 0
+        finished = False
+        for i in range(n_valid):
+            tok = next_token(rows[i], req)
+            req.out.append(tok)
+            accepted = i + 1
+            if len(req.out) >= req.max_new:
+                finished = True
+                break
+            if i < len(draft) and tok != draft[i]:
+                break   # first mismatch: the sampled token is the
+                        # correction, everything past it is speculation
+        self.rounds += 1
+        self.accepted_drafts += accepted - 1
+        srv.trace.append(("spec_verify", req.rid, slot, n_valid, accepted))
+        if finished:
+            srv._finish(slot, st, done)
+            return accepted
+        n_reject = n_valid - accepted
+        self.rollback_tokens += n_reject
+        srv._rollback(slot, n_reject)
+        # window reclamation only ever sees COMMITTED lengths: reclaiming
+        # at the speculative length could free pages the rolled-back
+        # window still reads (the _rollback assert pins the ordering)
+        srv._reclaim(slot, st)
+        return accepted
+
+    def forget(self, rid: int) -> None:
+        """Drop per-request drafter state (finish/abort/preempt paths —
+        the server calls this from ``_finish``/``_release_slot``)."""
+        drop = getattr(self.drafter, "drop", None)
+        if drop is not None:
+            drop(rid)

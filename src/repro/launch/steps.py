@@ -221,11 +221,24 @@ def make_paged_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
     return _make_paged_prefill_scan(cfg, pcfg, mesh, page_size)
 
 
-def _make_paged_prefill_chunk(cfg: ModelConfig, pcfg: ParallelConfig,
-                              mesh: Optional[Mesh], page_size: int):
+def _paged_chunk_forward(cfg: ModelConfig, pcfg: ParallelConfig,
+                         mesh: Optional[Mesh], page_size: int):
+    """Shared body of the chunk-extension paged forward: one batch-1
+    ``mode="prefill"`` forward over ``chunk`` tokens continuing at the
+    slot's resident length, against the shared page pools through
+    ``table_row``. Returns the final-norm hidden states at EVERY chunk
+    position plus the cache with the slot's length advanced by
+    ``n_valid`` — the prefill step projects only the last valid row to
+    logits, the speculative score step projects them all (DESIGN.md §11).
+    All-attention stacks only: recurrent mixers advance per-slot state
+    token-wise and take the scan path instead."""
+    if any(cfg.layer_kind(p) != "attn" for p in range(cfg.period)):
+        raise ValueError(
+            "chunk-extension paged forward requires an all-attention "
+            "stack (recurrent mixers advance token-wise)")
     x_spec = activation_spec((1, 1, cfg.d_model), pcfg, mesh)
 
-    def prefill_step(params, tokens, n_valid, slot, table_row, cache):
+    def fwd(params, tokens, n_valid, slot, table_row, cache):
         chunk = tokens.shape[0]
         # every layer is attention, so the whole layer cache is the shared
         # (batch-free) page pools — only the length is per-slot
@@ -240,14 +253,57 @@ def _make_paged_prefill_chunk(cfg: ModelConfig, pcfg: ParallelConfig,
             paged={"table": table_row[None], "page_size": page_size},
             active=active, return_hidden=True,
         )
-        last_h = jax.lax.dynamic_slice_in_dim(hidden, n_valid - 1, 1, axis=1)
-        logits = lm._logits_out(params, last_h, cfg)
         new_len = jax.lax.dynamic_update_slice(
             cache["len"], sub["len"], (slot,))
-        return (logits.reshape(-1).astype(jnp.float32),
-                {"layers": sub["layers"], "len": new_len})
+        return hidden, {"layers": sub["layers"], "len": new_len}
+
+    return fwd
+
+
+def _make_paged_prefill_chunk(cfg: ModelConfig, pcfg: ParallelConfig,
+                              mesh: Optional[Mesh], page_size: int):
+    fwd = _paged_chunk_forward(cfg, pcfg, mesh, page_size)
+
+    def prefill_step(params, tokens, n_valid, slot, table_row, cache):
+        hidden, new_cache = fwd(params, tokens, n_valid, slot, table_row,
+                                cache)
+        # last valid row only: prefill wants the first-generated-token
+        # logits, and projecting one row keeps the vocab matmul off the
+        # chunk's other positions
+        last_h = jax.lax.dynamic_slice_in_dim(hidden, n_valid - 1, 1, axis=1)
+        logits = lm._logits_out(params, last_h, cfg)
+        return logits.reshape(-1).astype(jnp.float32), new_cache
 
     return prefill_step
+
+
+def make_paged_score_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                          mesh: Optional[Mesh], page_size: int):
+    """Multi-token scoring step for speculative verification (DESIGN.md
+    §11): the chunk-extension paged forward of ``make_paged_prefill_step``
+    with logits at **every** chunk position instead of only the last.
+
+    Signature ``(params, tokens (k,), n_valid (), slot (), table_row
+    (maxp,), cache) -> (logits (k, V) f32, cache)``: row ``i`` is the
+    next-token distribution AFTER ``tokens[:i+1]``, i.e. exactly what a
+    sequential decode would have produced having fed ``tokens[i]`` — so
+    one forward verifies a whole drafted continuation against the same
+    paged pools. The slot's cache length advances by ``n_valid``; rows at
+    and past ``n_valid`` are sink-written padding and must be ignored (the
+    caller rolls back rejected rows by page-table truncation,
+    ``PagedServer._rollback``). All-attention stacks only — raises
+    ``ValueError`` otherwise (see ``launch.spec.SpecDecoder``)."""
+    if cfg.num_codebooks > 1:
+        raise ValueError("score step does not support codebook heads")
+    fwd = _paged_chunk_forward(cfg, pcfg, mesh, page_size)
+
+    def score_step(params, tokens, n_valid, slot, table_row, cache):
+        hidden, new_cache = fwd(params, tokens, n_valid, slot, table_row,
+                                cache)
+        logits = lm.score_logits(params, hidden, cfg)   # (1, chunk, V)
+        return logits[0].astype(jnp.float32), new_cache
+
+    return score_step
 
 
 def make_paged_handoff_step(cfg: ModelConfig):

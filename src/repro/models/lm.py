@@ -387,6 +387,28 @@ def reset_slot(cfg: ModelConfig, cache: dict, slot: int,
             "len": cache["len"].at[slot].set(jnp.int32(length))}
 
 
+def rollback_slot(cfg: ModelConfig, cache: dict, slot: int,
+                  length: int) -> dict:
+    """Truncate one slot's resident length to ``length`` — the device half
+    of speculative-decoding rollback (DESIGN.md §11). Rejected drafted
+    rows need no scrub: paged attention masks every position at and past
+    ``len``, so truncating the length (plus returning the now-unreferenced
+    tail pages host-side, ``PagePool.rollback``) makes them unobservable,
+    exactly like the masked tail of a fresh page. Only valid for
+    all-attention stacks: recurrent mixers advance per-slot state
+    token-wise, and that state cannot be rewound by truncation — callers
+    must refuse speculation there (``launch.spec.SpecDecoder`` raises at
+    construction)."""
+    if any(cfg.layer_kind(p) != "attn" for p in range(cfg.period)):
+        raise ValueError(
+            "rollback (length truncation) requires an all-attention "
+            "stack: recurrent per-slot state cannot be rewound")
+    if length < 0:
+        raise ValueError(f"negative rollback length {length}")
+    return {"layers": cache["layers"],
+            "len": cache["len"].at[slot].set(jnp.int32(length))}
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
@@ -631,6 +653,20 @@ def _logits_out(params, x, cfg: ModelConfig):
         "bsd,dv->bsv", x, params["head"],
         preferred_element_type=jnp.float32,
     )
+
+
+def score_logits(params, hidden, cfg: ModelConfig):
+    """Project final-norm hidden states at EVERY position to vocabulary
+    logits ``(B, S, V)`` — the multi-position output head of the
+    speculative verify step (DESIGN.md §11). ``forward(...,
+    return_hidden=True)`` deliberately stops before the head so the
+    prefill path can project a single row; verification needs all ``S``
+    drafted rows, which is exactly the per-position amortization the
+    paged chunk forward already paid for. f32 accumulation, same einsum
+    as the single-row head."""
+    if cfg.num_codebooks > 1:
+        raise ValueError("score_logits does not support codebook heads")
+    return _logits_out(params, hidden, cfg)
 
 
 def forward(

@@ -332,7 +332,13 @@ def apply_attention(
         # admission reuses this path unchanged: cache_len starts at the
         # matched prefix length, so only the uncached suffix is written —
         # the shared (refcount>1) prefix pages are read through the table
-        # but never scattered into.
+        # but never scattered into. Speculative verification (DESIGN.md
+        # §11) also reuses this path verbatim: row i attends over
+        # positions <= cache_len + i, so its hidden state equals a
+        # sequential decode having fed tokens[..i] — which is why the
+        # score step can read per-position logits out of one chunk
+        # forward, and why truncating `len` afterwards fully un-writes
+        # rejected rows (every read past `len` is masked).
         from repro.kernels.paged_attention import NEG_INF
         from repro.quant.core import dequantize_rows, quantize_rows
 

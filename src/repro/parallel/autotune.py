@@ -492,6 +492,79 @@ def serve_decode_attn_latency(
     ) / hw.hbm_bw
 
 
+def expected_verify_tokens(accept_rate: float, spec_k: int) -> float:
+    """Expected tokens committed per speculative verify round (DESIGN.md
+    §11) when each drafted token independently matches the sampler with
+    probability ``accept_rate``: the round commits ``i + 1`` tokens when
+    the first mismatch lands on draft ``i``, so the expectation telescopes
+    to ``1 + a + a^2 + ... + a^spec_k = (1 - a^(k+1)) / (1 - a)``. Bounds:
+    1 at ``a = 0`` (the correction token alone) and ``spec_k + 1`` at
+    ``a = 1`` (every draft and the bonus sample commit)."""
+    if not 0.0 <= accept_rate <= 1.0:
+        raise ValueError(f"accept_rate must be in [0, 1]: {accept_rate}")
+    if spec_k < 0:
+        raise ValueError(f"spec_k must be >= 0: {spec_k}")
+    if accept_rate >= 1.0:
+        return float(spec_k + 1)
+    return float((1.0 - accept_rate ** (spec_k + 1)) / (1.0 - accept_rate))
+
+
+def spec_verify_latency(
+    n_tokens: int,
+    d: int,
+    f: int,
+    e: int,
+    k: int,
+    *,
+    n_dev: float = 16,
+    hw: HardwareProfile = V5E,
+    fused_ffn: bool = True,
+    weight_bits: int = 16,
+) -> float:
+    """Roofline latency of ONE MoE layer scoring ``n_tokens`` drafted
+    positions in a single paged forward — verification priced as a
+    ``k``-row data-centric micro-batch (DESIGN.md §11). Decode
+    (``n_tokens = 1``) is weight-bound: the whole expert weight movement
+    is billed to one token, so a verify step's cost grows far slower than
+    linearly in ``n_tokens`` until the token-proportional terms catch up.
+    ``choose_mode`` picks the same argmin mode the serving forward's auto
+    chooser will resolve for that token count, so the model prices what
+    actually runs."""
+    mode = choose_mode(n_tokens, d, f, e, k, n_dev=n_dev, hw=hw,
+                       fused_ffn=fused_ffn, weight_bits=weight_bits)
+    return layer_latency(mode, n_tokens, d, f, e, k, n_dev, hw,
+                         fused_ffn=fused_ffn, weight_bits=weight_bits)
+
+
+def spec_decode_speedup(
+    accept_rate: float,
+    spec_k: int,
+    d: int,
+    f: int,
+    e: int,
+    k: int,
+    *,
+    n_dev: float = 16,
+    hw: HardwareProfile = V5E,
+    fused_ffn: bool = True,
+    weight_bits: int = 16,
+) -> float:
+    """Expected decode-throughput ratio of speculative verify over
+    one-token-at-a-time decode on the MoE-layer roofline: committed
+    tokens per round (``expected_verify_tokens``) divided by the verify
+    round's cost relative to a single decode step. >1 exactly when the
+    per-round token gain outruns the (sub-linear, memory-bound) cost of
+    scoring ``spec_k + 1`` rows at once — the model-side version of the
+    measured ``serve/spec/{on,off}`` rows in ``BENCH_serve.json``. Draft
+    cost is not included (the n-gram drafter is host-side and free; a
+    draft model adds its own, much smaller, roofline)."""
+    dec = spec_verify_latency(1, d, f, e, k, n_dev=n_dev, hw=hw,
+                              fused_ffn=fused_ffn, weight_bits=weight_bits)
+    ver = spec_verify_latency(spec_k + 1, d, f, e, k, n_dev=n_dev, hw=hw,
+                              fused_ffn=fused_ffn, weight_bits=weight_bits)
+    return expected_verify_tokens(accept_rate, spec_k) * dec / ver
+
+
 # ---------------------------------------------------------------------------
 # runtime hooks (called from moe_parallel / lm with static shapes)
 # ---------------------------------------------------------------------------

@@ -251,6 +251,7 @@ class PagePool:
         self.total_frees = 0
         self.total_forks = 0
         self.total_cow_copies = 0
+        self.total_rollbacks = 0
         self.peak_in_use_pages = 0
 
     # -- admission / allocation ---------------------------------------------
@@ -343,6 +344,45 @@ class PagePool:
         if self._reserved[group] < 0:
             raise RuntimeError(f"group {group} over-released")
 
+    def rollback(self, pages: Sequence[int], group: int = 0) -> None:
+        """Return decode-granted pages to the caller's **reservation** —
+        the speculative-decoding rollback path (DESIGN.md §11).
+
+        ``release`` credits a freed page to its owner's FREE budget, where
+        the next admission can immediately claim it; a rolled-back request
+        is still live and must be able to re-grow to its admitted
+        worst-case length, so its truncated pages convert ``in_use`` back
+        into ``reserved`` instead (the alloc-cannot-fail invariant of
+        decode-boundary grants survives mid-request truncation).
+
+        Only exclusively-held (refcount-1) pages owned by ``group`` may
+        roll back: a refcount>1 page is prefix-shared content whose other
+        holders must survive (CoW semantics, DESIGN.md §7). The engine
+        never truncates into one — rollback pops strictly decode-region
+        tail pages, past any matched prompt prefix — so hitting a shared
+        or foreign page here is a scheduler bug and raises before any
+        state changes."""
+        for p in pages:
+            if not 1 <= p < self.num_pages:
+                raise ValueError(f"bad page id {p}")
+            r = self._ref.get(p, 0)
+            if r != 1:
+                raise RuntimeError(
+                    f"rollback of page {p} at refcount {r} (only "
+                    f"exclusively-held decode pages may roll back)")
+            if self._owner[p] != group:
+                raise RuntimeError(
+                    f"rollback of page {p} owned by group "
+                    f"{self._owner[p]}, not caller group {group}")
+        for p in pages:
+            del self._ref[p]
+            del self._owner[p]
+            self._free_list.append(p)
+            self._in_use[group] -= 1
+            self._reserved[group] += 1
+            self.total_frees += 1
+            self.total_rollbacks += 1
+
     # -- accounting -----------------------------------------------------------
 
     @property
@@ -426,6 +466,7 @@ class PagePool:
             "total_frees": self.total_frees,
             "total_forks": self.total_forks,
             "total_cow_copies": self.total_cow_copies,
+            "total_rollbacks": self.total_rollbacks,
         }
 
 

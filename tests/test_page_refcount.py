@@ -1,5 +1,5 @@
 """CoW refcount + radix-index property tests (ISSUE 6): the PagePool and
-PrefixIndex survive arbitrary admit/fork/write/insert/finish/evict
+PrefixIndex survive arbitrary admit/fork/write/insert/finish/evict/rollback
 interleavings with no leaked pages, no double-frees, and refcounts that
 exactly mirror who holds each page.
 
@@ -65,6 +65,7 @@ class _Driver:
         self.slots[self._sid] = {
             "group": group, "prompt": prompt, "pages": list(matched),
             "need": need, "reserved": reserve_n, "allocated": 0,
+            "matched_n": len(matched),
         }
         self._sid += 1
 
@@ -125,6 +126,22 @@ class _Driver:
         self.check()
         self.admit(seed)         # retry re-enters via match+fork+reserve
 
+    def rollback(self, seed: int):
+        """The ISSUE-9 speculative-rollback path: drop the tail page back
+        into the holder's RESERVATION (``PagePool.rollback``).  Only pages
+        the slot allocated itself are candidates — never the forked prefix
+        — and a tail page the index also holds (refcount > 1) is skipped,
+        mirroring the engine's decode-region-only guarantee."""
+        st_ = self._pick(seed)
+        if st_ is None or len(st_["pages"]) <= st_["matched_n"]:
+            return
+        page = st_["pages"][-1]
+        if self.pool.refcount(page) != 1:
+            return
+        self.pool.rollback([page], st_["group"])
+        st_["pages"].pop()
+        st_["allocated"] -= 1    # reservation restored by the pool
+
     def evict(self, seed: int):
         self.index.evict_lru(self.pool)
 
@@ -164,7 +181,8 @@ class _Driver:
         assert self.pool.total_allocs == self.pool.total_frees
 
 
-OPS = ("admit", "alloc", "write", "insert", "finish", "evict", "abort")
+OPS = ("admit", "alloc", "write", "insert", "finish", "evict", "abort",
+       "rollback")
 
 
 def _check_ops(ops, shares=None):
@@ -202,6 +220,17 @@ OPS_SAMPLES = [
     [("admit", 9), ("alloc", 0), ("alloc", 0), ("insert", 0),
      ("admit", 9), ("write", 0), ("abort", 1), ("abort", 0),
      ("admit", 10), ("abort", 0), ("evict", 0), ("finish", 0)],
+    # rollback paths (ISSUE 9): rollback of a speculative tail page, re-use
+    # of the restored reservation, a rollback refused because the tail page
+    # is also held by the index (refcount > 1), rollback on the matched
+    # prefix boundary (no-op), and rollback under hetero shares
+    [("admit", 0), ("alloc", 0), ("alloc", 0), ("rollback", 0),
+     ("alloc", 0), ("insert", 0), ("rollback", 0), ("admit", 0),
+     ("rollback", 1), ("evict", 0), ("rollback", 0), ("finish", 0),
+     ("finish", 0)],
+    [("admit", 19), ("alloc", 0), ("rollback", 0), ("rollback", 0),
+     ("alloc", 0), ("abort", 0), ("alloc", 0), ("rollback", 0),
+     ("finish", 0)],
 ]
 SHARES_SAMPLES = [None, [10, 6]]
 

@@ -19,7 +19,7 @@ import pytest
 from repro import configs as cfglib
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core import hetero as hetero_lib
-from repro.launch import serve, steps as steps_lib
+from repro.launch import serve, spec as spec_lib, steps as steps_lib
 from repro.models import lm
 from repro.parallel.sharding import ParallelConfig, split_tree
 
@@ -327,12 +327,14 @@ def _shared_prefix_requests(cfg, n, seed, *, shared_len=12):
 
 
 def _run_paged(cfg, pcfg, params, reqs, *, num_slots=NUM_SLOTS,
-               num_pages=None, **kw):
+               num_pages=None, spec=None, spec_k=3, **kw):
     maxp = MAX_SEQ // 4
     server = serve.PagedServer(
         cfg, pcfg, None, num_slots=num_slots, page_size=4,
         num_pages=num_pages or (1 + num_slots * maxp),
         max_pages_per_slot=maxp, params=params, prefill_chunk=5, **kw)
+    if spec is not None:
+        spec_lib.SpecDecoder(server, spec, k=spec_k)
     for r in reqs:
         server.submit(dataclasses.replace(r, out=[]))
     done = server.run()
@@ -567,3 +569,149 @@ def test_prefill_chunk_size_is_invisible():
         done = server.run()
         outs.append({r.rid: r.out for r in done})
     assert outs[0] == outs[1] == outs[2]
+
+
+# --- speculative decoding rows (ISSUE 9, DESIGN.md §11) ------------------
+
+class _WrongDrafter:
+    """Adversarial drafter proposing deliberately wrong tokens — every
+    verify round hits a mid-verify rejection and the rollback path, yet
+    the committed stream must be byte-identical (the sampled correction
+    token IS the non-speculative token)."""
+
+    def draft(self, history, k, rid=-1):
+        return [(int(history[-1]) + 1 + j) % 7 for j in range(k)]
+
+
+def _spec_requests(cfg, n, seed):
+    """Greedy + seeded-temperature mix (odd rids sample at 0.8)."""
+    reqs = _requests(cfg, n, seed)
+    for r in reqs:
+        if r.rid % 2:
+            r.temperature, r.seed = 0.8, 1000 + r.rid
+        r.max_new = max(r.max_new, 3)   # give speculation room to verify
+    return reqs
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spec_stream_parity(arch):
+    """Speculative ON == speculative OFF == batch-1 dense reference on
+    every all-attention config in the matrix, greedy AND seeded
+    temperature, with the page pool drained and rollback exercised under
+    --audit (the structural oracle runs every scheduler step)."""
+    cfg = _config(arch)
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    reqs = _spec_requests(cfg, N_REQ, seed=47)
+    step = jax.jit(steps_lib.make_serve_step(
+        cfg, pcfg, None, (1, 1, cfg.d_model)))
+    refs = {r.rid: serve.reference_stream(
+        cfg, pcfg, None, params, dataclasses.replace(r, out=[]),
+        max_seq=MAX_SEQ, step=step) for r in reqs}
+
+    srv_off, out_off = _run_paged(cfg, pcfg, params, reqs)
+    srv_on, out_on = _run_paged(cfg, pcfg, params, reqs,
+                                spec=spec_lib.NGramDrafter(), audit=True)
+    assert out_on == out_off == refs, (
+        f"{arch}: speculative stream diverged")
+    assert srv_on.spec.rounds > 0
+    _assert_drained(srv_on)
+
+
+def test_spec_forced_midverify_rejection_parity():
+    """An adversarial always-wrong drafter forces a rejection + rollback
+    every round; tokens stay identical, rollback trace events fire, and
+    the audit oracle holds through every truncation."""
+    cfg = _config("mixtral-8x7b")   # windowed: rollback meets reclamation
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    reqs = _spec_requests(cfg, N_REQ, seed=53)
+
+    _, out_off = _run_paged(cfg, pcfg, params, reqs)
+    srv_on, out_on = _run_paged(cfg, pcfg, params, reqs,
+                                spec=_WrongDrafter(), audit=True)
+    assert out_on == out_off
+    sp = srv_on.spec.stats()
+    assert sp["drafted"] > 0 and sp["accepted_drafts"] == 0
+    assert sp["rollback_tokens"] == sp["drafted"]
+    assert any(ev[0] == "rollback" for ev in srv_on.trace), (
+        "forced rejection never exercised _rollback")
+    _assert_drained(srv_on)
+
+
+def test_spec_parity_int8_kv():
+    """Speculative verify writes/reads int8-quantized pages row-wise like
+    prefill; streams must match the non-speculative int8 engine."""
+    cfg = _config("qwen3-moe-30b-a3b")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    reqs = _spec_requests(cfg, N_REQ, seed=59)
+
+    _, out_off = _run_paged(cfg, pcfg, params, reqs, kv_quant="int8")
+    srv_on, out_on = _run_paged(cfg, pcfg, params, reqs, kv_quant="int8",
+                                spec=spec_lib.NGramDrafter(), audit=True)
+    assert out_on == out_off
+    _assert_drained(srv_on)
+
+
+def test_spec_parity_under_prefix_cache_hits():
+    """Speculation on top of prefix-cache hits: rollback must only ever
+    pop decode-region pages, never a refcount>1 shared prompt page (the
+    pool raises on any violation), and streams stay identical."""
+    cfg = _config("gemma-2b")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    reqs = _shared_prefix_requests(cfg, N_REQ, seed=61)
+    for r in reqs:
+        r.max_new = max(r.max_new, 3)
+
+    srv_off, out_off = _run_paged(cfg, pcfg, params, reqs,
+                                  prefix_cache=True)
+    srv_on, out_on = _run_paged(cfg, pcfg, params, reqs, prefix_cache=True,
+                                spec=spec_lib.NGramDrafter(), audit=True)
+    assert out_on == out_off
+    assert srv_on.index.stats()["hit_tokens"] > 0, "no prefix hits"
+    _assert_drained(srv_on)
+
+
+def test_spec_model_drafter_self_draft_full_acceptance():
+    """A ModelDrafter running the TARGET's own config+params drafts
+    exactly what greedy verification will sample: every draft of every
+    greedy request is accepted (acceptance == 1.0) and the stream still
+    equals the non-speculative engine — the strongest equivalence check
+    on the multi-token score step."""
+    cfg = _config("gemma-2b")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    reqs = _requests(cfg, N_REQ, seed=67)
+    for r in reqs:
+        r.max_new = max(r.max_new, 4)   # greedy only
+
+    drafter = spec_lib.ModelDrafter(cfg, pcfg, None, params,
+                                    max_seq=MAX_SEQ)
+    _, out_off = _run_paged(cfg, pcfg, params, reqs)
+    srv_on, out_on = _run_paged(cfg, pcfg, params, reqs, spec=drafter,
+                                audit=True)
+    assert out_on == out_off
+    sp = srv_on.spec.stats()
+    assert sp["drafted"] > 0
+    assert sp["acceptance_rate"] == 1.0, (
+        f"self-drafting must be fully accepted under greedy: {sp}")
+    assert not drafter._state, "finished requests leaked draft caches"
+    _assert_drained(srv_on)
+
+
+def test_spec_rejects_recurrent_stack():
+    """Hybrid (recurrent) stacks cannot rewind token-wise state by page
+    truncation: SpecDecoder must refuse loudly at construction."""
+    cfg = dataclasses.replace(
+        cfglib.get_smoke_config("jamba-1.5-large-398b"), dtype="float32")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    maxp = MAX_SEQ // 4
+    server = serve.PagedServer(
+        cfg, pcfg, None, num_slots=2, page_size=4, num_pages=1 + 2 * maxp,
+        max_pages_per_slot=maxp, params=params)
+    with pytest.raises(ValueError, match="all-attention"):
+        spec_lib.SpecDecoder(server, spec_lib.NGramDrafter(), k=3)
+    assert server.spec is None, "failed construction must not attach"

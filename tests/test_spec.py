@@ -1,0 +1,374 @@
+"""Speculative-decoding unit suite (ISSUE 9, DESIGN.md §11): the n-gram
+drafter's matching rules, the multi-token score step against sequential
+scoring, rollback accounting (pool reservations + device length), the
+greedy tie-breaking convention shared by every engine, and the autotune
+verify-cost model. End-to-end stream parity lives in
+tests/test_serve_parity.py; the PagePool rollback op is also driven by the
+structural oracle in tests/test_page_refcount.py."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.launch import serve, spec as spec_lib, steps as steps_lib
+from repro.models import lm
+from repro.parallel import autotune
+from repro.parallel.cache import PagePool
+from repro.parallel.sharding import ParallelConfig, split_tree
+
+
+# --- n-gram drafter ------------------------------------------------------
+
+def test_ngram_drafts_most_recent_continuation():
+    d = spec_lib.NGramDrafter(n=2)
+    # trailing bigram (7, 8) occurred twice; the MOST RECENT prior
+    # occurrence (index 4) is the one whose continuation is proposed
+    h = np.array([7, 8, 1, 2, 7, 8, 3, 4, 7, 8])
+    assert d.draft(h, 3) == [3, 4, 7]
+
+
+def test_ngram_prefers_longest_suffix_match():
+    d = spec_lib.NGramDrafter(n=3)
+    # trigram (1, 2, 3) matches at the start -> continuation [9];
+    # a unigram match of (3,) alone would have proposed [5]
+    h = np.array([1, 2, 3, 9, 3, 5, 1, 2, 3])
+    assert d.draft(h, 2) == [9, 3]
+
+
+def test_ngram_falls_back_to_shorter_orders():
+    d = spec_lib.NGramDrafter(n=3)
+    # no trigram/bigram repeats, but token 4 recurs -> unigram fallback
+    h = np.array([4, 1, 2, 4])
+    assert d.draft(h, 2) == [1, 2]
+
+
+def test_ngram_empty_without_repetition_and_caps_k():
+    d = spec_lib.NGramDrafter(n=3)
+    assert d.draft(np.array([1, 2, 3, 4, 5]), 4) == []
+    # constant stream: the adjacent occurrence's continuation is cut off
+    # by the end of history, so an earlier one supplies the full k
+    assert d.draft(np.array([6, 6, 6, 6, 6]), 2) == [6, 6]
+    assert d.draft(np.array([6, 6]), 3) == [6]      # longest available
+    assert d.draft(np.array([1, 2]), 0) == []
+    with pytest.raises(ValueError):
+        spec_lib.NGramDrafter(n=0)
+
+
+# --- multi-token score step vs sequential scoring ------------------------
+
+def _paged_fixture(arch="gemma-2b"):
+    cfg = dataclasses.replace(cfglib.get_smoke_config(arch),
+                              dtype="float32")
+    pcfg = ParallelConfig(blk=8, impl="pallas")
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, pcfg, params
+
+
+def test_score_step_matches_sequential_rows():
+    """Scoring k tokens in ONE chunk forward yields, at every position,
+    the same logits as k one-token score steps — the property that makes
+    exact-match verification equivalent to sequential decode."""
+    cfg, pcfg, params = _paged_fixture()
+    page = 4
+    n_tok, n_pages = 8, 4
+    tokens = np.arange(1, n_tok + 1, dtype=np.int32) % cfg.vocab_size
+
+    def fresh():
+        cache = lm.init_paged_cache(cfg, num_slots=1, num_pages=1 + n_pages,
+                                    page_size=page)
+        table = np.zeros((8,), np.int32)
+        table[:n_pages] = np.arange(1, n_pages + 1)
+        return cache, jnp.asarray(table)
+
+    batched = jax.jit(steps_lib.make_paged_score_step(
+        cfg, pcfg, None, page))
+    cache, table = fresh()
+    all_rows, cache = batched(params, jnp.asarray(tokens),
+                              jnp.int32(n_tok), jnp.int32(0), table, cache)
+    assert all_rows.shape == (n_tok, cfg.vocab_size)
+    assert int(cache["len"][0]) == n_tok
+
+    one = jax.jit(steps_lib.make_paged_score_step(cfg, pcfg, None, page))
+    cache, table = fresh()
+    seq_rows = []
+    for t in tokens:
+        row, cache = one(params, jnp.asarray([t], jnp.int32),
+                         jnp.int32(1), jnp.int32(0), table, cache)
+        seq_rows.append(np.asarray(row[0]))
+    np.testing.assert_allclose(np.asarray(all_rows), np.stack(seq_rows),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_score_step_padded_tail_is_inert():
+    """Rows at and past n_valid are sink-written padding: they advance
+    nothing and leave the valid rows' logits untouched."""
+    cfg, pcfg, params = _paged_fixture()
+    page = 4
+
+    def run(width, n_valid):
+        cache = lm.init_paged_cache(cfg, num_slots=1, num_pages=5,
+                                    page_size=page)
+        table = jnp.asarray(np.array([1, 2, 3, 4, 0, 0, 0, 0], np.int32))
+        toks = np.zeros((width,), np.int32)
+        toks[:n_valid] = np.arange(1, n_valid + 1)
+        step = jax.jit(steps_lib.make_paged_score_step(cfg, pcfg, None,
+                                                       page))
+        rows, cache = step(params, jnp.asarray(toks), jnp.int32(n_valid),
+                           jnp.int32(0), table, cache)
+        return np.asarray(rows[:n_valid]), int(cache["len"][0])
+
+    exact, len_exact = run(3, 3)
+    padded, len_padded = run(8, 3)
+    assert len_exact == len_padded == 3
+    np.testing.assert_allclose(exact, padded, rtol=2e-5, atol=2e-5)
+
+
+def test_score_step_rejects_recurrent_stack():
+    cfg = dataclasses.replace(
+        cfglib.get_smoke_config("jamba-1.5-large-398b"), dtype="float32")
+    with pytest.raises(ValueError, match="all-attention"):
+        steps_lib.make_paged_score_step(cfg, ParallelConfig(blk=8), None, 4)
+
+
+# --- greedy tie-breaking convention (the parity bugfix) ------------------
+
+def test_greedy_tie_break_is_lowest_index_in_f32():
+    """Regression for the next_token/_greedy divergence: a two-way-tied
+    bf16 row must argmax to the LOWEST index under every entry point —
+    the single f32-upcast device convention (DESIGN.md §11)."""
+    row = np.full((16,), -3.0, np.float32)
+    row[5] = 1.0
+    row[11] = 1.0
+    bf16_row = jnp.asarray(row).astype(jnp.bfloat16)
+    assert float(bf16_row[5]) == float(bf16_row[11]), "tie not constructed"
+
+    req = serve.Request(rid=0, prompt=np.array([1]), max_new=1)
+    assert serve.argmax_token(bf16_row) == 5
+    assert serve.next_token(bf16_row, req) == 5
+    batch = serve._greedy(bf16_row[None, None, :])
+    assert batch.tolist() == [5]
+
+
+def test_greedy_convention_upcasts_before_comparing():
+    """f32-first ordering: values that are DISTINCT in f32 but collapse to
+    a tie in bf16 must still resolve to the lowest index consistently in
+    both the scalar and batch helpers — comparing at different precisions
+    between engines is exactly the bug the shared convention kills."""
+    row = np.zeros((8,), np.float32)
+    row[2] = 1.0
+    row[6] = 1.0 + 1e-4          # > row[2] in f32 ...
+    bf16_row = jnp.asarray(row).astype(jnp.bfloat16)
+    assert float(bf16_row[2]) == float(bf16_row[6])   # ... tied in bf16
+    # the convention operates on what the engine HAS (the bf16 row): both
+    # entry points must agree on the same index
+    assert serve.argmax_token(bf16_row) == int(
+        serve._greedy(bf16_row[None, None, :])[0]) == 2
+    # and on the original f32 row both pick the true max
+    assert serve.argmax_token(row) == int(
+        serve._greedy(jnp.asarray(row)[None, None, :])[0]) == 6
+
+
+# --- rollback accounting -------------------------------------------------
+
+def test_pool_rollback_returns_pages_to_reservation():
+    pool = PagePool(num_pages=9, page_bytes=1)
+    assert pool.try_reserve(4, 0)
+    pages = [pool.alloc(0) for _ in range(3)]
+    free0, res0, use0 = pool._free[0], pool._reserved[0], pool._in_use[0]
+    pool.rollback(pages[-2:], 0)
+    # in_use -> reserved; the FREE budget must NOT change (a live request
+    # keeps its admission guarantee, other admissions can't steal it)
+    assert pool._free[0] == free0
+    assert pool._reserved[0] == res0 + 2
+    assert pool._in_use[0] == use0 - 2
+    assert pool.refcount(pages[-1]) == 0
+    pool.assert_consistent()
+    # the reservation is re-allocatable and drains cleanly
+    again = [pool.alloc(0), pool.alloc(0)]
+    pool.release([pages[0]] + again, 0, unused_reserved=1)
+    pool.assert_consistent()
+    assert pool.free_pages == sum(pool.shares)
+    assert pool.stats()["total_rollbacks"] == 2
+
+
+def test_pool_rollback_refuses_shared_and_foreign_pages():
+    pool = PagePool(num_pages=9, page_bytes=1, shares=[4, 4])
+    assert pool.try_reserve(2, 0) and pool.try_reserve(1, 1)
+    mine = pool.alloc(0)
+    shared = pool.alloc(0)
+    pool.fork([shared])                      # refcount 2: prefix-shared
+    theirs = pool.alloc(1)
+    with pytest.raises(RuntimeError, match="refcount"):
+        pool.rollback([shared], 0)
+    with pytest.raises(RuntimeError, match="owned by group"):
+        pool.rollback([theirs], 0)
+    with pytest.raises(RuntimeError, match="refcount"):
+        pool.rollback([8], 0)                # free page
+    with pytest.raises(ValueError):
+        pool.rollback([0], 0)                # the sink
+    pool.assert_consistent()                 # guards fired BEFORE mutation
+    pool.rollback([mine], 0)
+    pool.release([shared], 0)
+    pool.release([shared], 0)
+    pool.release([theirs], 1)
+    pool.release([], 0, unused_reserved=1)
+    pool.assert_consistent()
+    assert pool.free_pages == sum(pool.shares)
+
+
+def test_rollback_slot_truncates_len_and_rejects_recurrent():
+    cfg, _, _ = _paged_fixture()
+    cache = lm.init_paged_cache(cfg, num_slots=2, num_pages=5, page_size=4)
+    cache = {"layers": cache["layers"],
+             "len": cache["len"].at[1].set(jnp.int32(9))}
+    cache = lm.rollback_slot(cfg, cache, 1, 6)
+    assert int(cache["len"][1]) == 6 and int(cache["len"][0]) == 0
+    with pytest.raises(ValueError):
+        lm.rollback_slot(cfg, cache, 1, -1)
+    jcfg = dataclasses.replace(
+        cfglib.get_smoke_config("jamba-1.5-large-398b"), dtype="float32")
+    jcache = lm.init_paged_cache(jcfg, num_slots=2, num_pages=5,
+                                 page_size=4)
+    with pytest.raises(ValueError, match="all-attention"):
+        lm.rollback_slot(jcfg, jcache, 0, 2)
+
+
+def test_spec_decoder_validates_construction():
+    cfg, pcfg, params = _paged_fixture()
+    server = serve.PagedServer(
+        cfg, pcfg, None, num_slots=2, page_size=4, num_pages=17,
+        max_pages_per_slot=8, params=params)
+    with pytest.raises(ValueError, match="k must be"):
+        spec_lib.SpecDecoder(server, spec_lib.NGramDrafter(), k=0)
+    assert server.spec is None
+    dec = spec_lib.SpecDecoder(server, spec_lib.NGramDrafter(), k=3)
+    assert server.spec is dec and dec.chunk == 4
+
+
+def test_model_drafter_rejects_unsafe_configs():
+    """Rolling-buffer windowed caches and recurrent stacks cannot truncate
+    their draft rows away — the drafter must refuse them."""
+    pcfg = ParallelConfig(blk=8)
+    windowed = dataclasses.replace(cfglib.get_smoke_config("mixtral-8x7b"),
+                                   dtype="float32")
+    with pytest.raises(ValueError, match="non-windowed"):
+        spec_lib.ModelDrafter(windowed, pcfg, None, {}, max_seq=32)
+    hybrid = dataclasses.replace(
+        cfglib.get_smoke_config("jamba-1.5-large-398b"), dtype="float32")
+    with pytest.raises(ValueError, match="all-attention"):
+        spec_lib.ModelDrafter(hybrid, pcfg, None, {}, max_seq=32)
+
+
+def test_model_drafter_drafts_its_own_greedy_stream():
+    """The drafter's k-token proposal equals the draft model's own
+    sequential greedy continuation (same argmax convention), across
+    rounds with intervening accepted tokens, and truncation keeps the
+    cache consistent; drop() frees the per-request state."""
+    cfg, pcfg, params = _paged_fixture()
+    drafter = spec_lib.ModelDrafter(cfg, pcfg, None, params, max_seq=32)
+    hist = np.array([3, 1, 4, 1, 5], np.int32)
+    ref = serve.greedy_reference(cfg, pcfg, None, params, hist, 6,
+                                 max_seq=32)
+    assert drafter.draft(hist, 3, rid=7) == ref[:3]
+    # target accepted 2 of them plus its own sample; catch-up must resume
+    hist2 = np.concatenate([hist, np.asarray(ref[:3], np.int32)])
+    assert drafter.draft(hist2, 3, rid=7) == ref[3:6]
+    # capacity clamp: 1 row left -> 1-token draft; 0 left -> refuse
+    assert len(drafter.draft(np.arange(31, dtype=np.int32), 4, rid=8)) == 1
+    assert drafter.draft(np.arange(32, dtype=np.int32), 4, rid=9) == [], (
+        "draft must refuse to overrun its cache capacity")
+    drafter.drop(7)
+    drafter.drop(7)   # idempotent
+    assert 7 not in drafter._state
+
+
+# --- autotune verify-cost model ------------------------------------------
+
+def test_expected_verify_tokens_bounds_and_monotonicity():
+    assert autotune.expected_verify_tokens(0.0, 5) == 1.0
+    assert autotune.expected_verify_tokens(1.0, 5) == 6.0
+    assert autotune.expected_verify_tokens(0.5, 0) == 1.0
+    vals = [autotune.expected_verify_tokens(a, 4)
+            for a in (0.0, 0.3, 0.6, 0.9, 1.0)]
+    assert all(b > a for a, b in zip(vals, vals[1:]))
+    ks = [autotune.expected_verify_tokens(0.8, k) for k in range(5)]
+    assert all(b > a for a, b in zip(ks, ks[1:]))
+    with pytest.raises(ValueError):
+        autotune.expected_verify_tokens(1.5, 3)
+    with pytest.raises(ValueError):
+        autotune.expected_verify_tokens(0.5, -1)
+
+
+def test_spec_verify_latency_sublinear_in_memory_bound_regime():
+    """Decode is weight-bound: scoring k+1 rows must cost far less than
+    k+1 decode steps (that gap IS the speculative win), and the verify
+    latency is monotone in the token count."""
+    shape = dict(d=4096, f=14336, e=8, k=2)
+    dec = autotune.spec_verify_latency(1, **shape)
+    ver8 = autotune.spec_verify_latency(8, **shape)
+    assert ver8 < 8 * dec * 0.5, (ver8, dec)
+    lats = [autotune.spec_verify_latency(n, **shape) for n in (1, 4, 16, 64)]
+    assert all(b >= a for a, b in zip(lats, lats[1:]))
+
+
+def test_spec_decode_speedup_behaviour():
+    """>1 with a decent drafter in the memory-bound regime; degrades
+    toward the no-draft floor at acceptance 0; improves with acceptance."""
+    shape = dict(d=4096, f=14336, e=8, k=2)
+    good = autotune.spec_decode_speedup(0.8, 4, **shape)
+    none = autotune.spec_decode_speedup(0.0, 4, **shape)
+    assert good > 1.5, good
+    assert none <= 1.0 + 1e-9, none
+    sweep = [autotune.spec_decode_speedup(a, 4, **shape)
+             for a in (0.0, 0.4, 0.8, 1.0)]
+    assert all(b > a for a, b in zip(sweep, sweep[1:]))
+
+
+# --- engine-level rollback accounting (pages + reservation) --------------
+
+def test_engine_rollback_restores_pages_and_reservation():
+    """Drive one slot to a speculative length crossing a page boundary,
+    roll back, and check: tail pages freed, reservation restored, table
+    zeroed, device len truncated, audit oracle clean."""
+    cfg, pcfg, params = _paged_fixture()
+    server = serve.PagedServer(
+        cfg, pcfg, None, num_slots=1, page_size=4, num_pages=17,
+        max_pages_per_slot=8, params=params, prefill_chunk=4)
+    req = serve.Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                        max_new=12)
+    server.submit(req)
+    server._admit()
+    done = []
+    while server.slots[0].pos < len(req.prompt):
+        server._prefill_tick(done)
+    st = server.slots[0]
+    base_len = st.length
+    n_pages = len(st.pages)
+    # speculative grant of 5 rows (crosses a page boundary), then reject 4
+    step = jax.jit(steps_lib.make_paged_score_step(cfg, pcfg, None, 4))
+    server._ensure_pages(0, st, st.length + 5)
+    toks = np.asarray([req.out[-1], 1, 2, 3, 4], np.int32)
+    _, server.cache = step(server.params, jnp.asarray(toks), jnp.int32(5),
+                           jnp.int32(0), jnp.asarray(server.table[0]),
+                           server.cache)
+    st.length += 5
+    assert len(st.pages) > n_pages
+    grew = len(st.pages) - n_pages
+    res_before = server.pool._reserved[st.group]
+    server._rollback(0, 4)
+    assert st.length == base_len + 1
+    assert len(st.pages) == serve.cdiv(st.length, 4)
+    assert int(server.cache["len"][0]) == st.length
+    assert server.pool._reserved[st.group] == res_before + grew, (
+        "rolled-back pages must return to the slot's reservation")
+    assert (server.table[0, len(st.pages):] == 0).all()
+    server.assert_page_invariants()
+    # the request can still grow back to its admitted worst case
+    server._ensure_pages(0, st, st.length + 4)
+    server.assert_page_invariants()
+    server._finish(0, st, done)
+    server.pool.assert_consistent()
+    assert server.pool.free_pages == sum(server.pool.shares)
