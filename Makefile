@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-tier1 test-multihost bench bench-check docs-check chaos ci
+.PHONY: test test-tier1 test-multihost bench bench-check docs-check chaos obs-check ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -27,6 +27,13 @@ bench:
 chaos:
 	JAX_PLATFORMS=cpu REPRO_PALLAS_INTERPRET=1 $(PY) scripts/chaos.py
 
+# Observability artifacts (DESIGN.md §12): drive train + paged-serve with
+# every pillar on and validate the Prometheus text grammar, the Chrome
+# trace schema + >=95% span coverage, the JSONL event log, and the
+# per-expert router invariant sum(expert_tokens) == top_k * routed.
+obs-check:
+	JAX_PLATFORMS=cpu REPRO_PALLAS_INTERPRET=1 $(PY) scripts/obs_check.py
+
 # Every `DESIGN.md §N` citation in src/ must resolve to a `## §N` heading,
 # and every public API in parallel/ + runtime/ + quant/ + launch/ must
 # carry a docstring.
@@ -38,7 +45,7 @@ docs-check:
 # paged-vs-dense comparison must carry both sides of every claim.
 bench-check:
 	$(PY) scripts/validate_bench.py BENCH_kernels.json BENCH_hetero.json \
-		BENCH_serve.json BENCH_quant.json \
+		BENCH_serve.json BENCH_quant.json BENCH_obs.json \
 		--require hetero_exec/data_centric/uniform \
 		--require hetero_exec/data_centric/proportional \
 		--require hetero_exec/model_centric/uniform \
@@ -56,7 +63,10 @@ bench-check:
 		--lt serve/spec/on/tokens_per_s:serve/spec/off/tokens_per_s \
 		--lt quant/esffn/bytes/int8:quant/esffn/bytes/bf16 \
 		--lt quant/crossover/tokens/int8:quant/crossover/tokens/bf16 \
-		--lt quant/kv/admitted/fp:quant/kv/admitted/int8
+		--lt quant/kv/admitted/fp:quant/kv/admitted/int8 \
+		--require obs/overhead/step_ratio \
+		--require obs/overhead/limit \
+		--lt obs/overhead/step_ratio:obs/overhead/limit
 
 ci:
 	bash scripts/ci.sh

@@ -35,7 +35,7 @@ def main() -> None:
                        help="quick grids (the default; explicit flag for CI)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: kernel,hetero,centric,"
-                         "memory,latency,ablation,serve,quant")
+                         "memory,latency,ablation,serve,quant,obs")
     ap.add_argument("--json", default=os.path.join(_ROOT, "BENCH_kernels.json"),
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args()
@@ -51,6 +51,7 @@ def main() -> None:
         kernel_bench,
         latency_table,
         memory_table,
+        obs_bench,
         quant_bench,
         serve_bench,
     )
@@ -64,6 +65,7 @@ def main() -> None:
         "ablation": ablation.run,
         "serve": serve_bench.run,
         "quant": quant_bench.run,
+        "obs": obs_bench.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     bench_common.reset_records()
@@ -109,7 +111,7 @@ def main() -> None:
 #: Suites whose rows accumulate in their own file (everything else goes to
 #: the --json default, BENCH_kernels.json).
 SUITE_JSON = {"hetero": "BENCH_hetero.json", "serve": "BENCH_serve.json",
-              "quant": "BENCH_quant.json"}
+              "quant": "BENCH_quant.json", "obs": "BENCH_obs.json"}
 
 
 def _write_json(path, results, suites, failed, meta_base, merge):

@@ -31,6 +31,10 @@ make test-multihost
 # retry/re-jit stream parity, elastic shrink on device dropout.
 make chaos
 
+# Observability artifact validation (DESIGN.md §12): real train + serve
+# runs with metrics/tracing/event-log on; grammar- and invariant-checked.
+make obs-check
+
 # Benchmark smoke: every paper-table module must at least run its quick grid
 # (JAX_PLATFORMS=cpu via the Makefile) and emit BENCH_kernels.json +
 # BENCH_hetero.json + BENCH_serve.json + BENCH_quant.json (the hetero suite

@@ -20,7 +20,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 AUDITED_DIRS = ("src/repro/parallel", "src/repro/runtime", "src/repro/quant",
-                "src/repro/launch", "src/repro/checkpoint")
+                "src/repro/launch", "src/repro/checkpoint", "src/repro/obs")
 
 
 def check_citations() -> list[str]:

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfglib
+from repro import obs
 from repro.common import cdiv, tree_bytes
 from repro.core import hetero as hetero_lib
 from repro.launch import steps as steps_lib
@@ -409,14 +410,34 @@ class PagedServer:
         self.admissions = 0
         self.admission_log: list[int] = []   # rids, in admission order
         self._order = 0
-        # Scheduler trace: ("admit", rid, slot), ("prefill_chunk", rid,
-        # slot, n), ("decode", (slots...)), ("transfer", rid, src, dst),
-        # ("finish", rid, slot) — plus the recovery events ("abort", rid,
-        # slot, reason), ("preempt", rid, slot), ("recover",),
-        # ("shrink", survivors) — the observable schedule the disagg
-        # invariants, degenerate-reduction, and chaos tests pin.
-        self.trace: list[tuple] = []
+        # Scheduler events (DESIGN.md §12): each entry holds the legacy
+        # positional tuple — exposed unchanged through the ``trace``
+        # property, the observable schedule the disagg invariants,
+        # degenerate-reduction, and chaos tests pin — plus a monotonic
+        # timestamp and a ``reason`` field, mirrored into the process-wide
+        # obs event log when enabled. Tuple kinds: ("admit", rid, slot),
+        # ("prefill_chunk", rid, slot, n), ("decode", (slots...)),
+        # ("transfer", rid, src, dst), ("finish", rid, slot), ("abort",
+        # rid, slot, reason), ("preempt", rid, slot), ("recover",),
+        # ("shrink", survivors), ("rollback", rid, slot, n),
+        # ("spec_verify", rid, slot, n_valid, accepted), ("fail", rid,
+        # reason).
+        self.events: list[dict] = []
         self.ttft_s: dict[int, float] = {}   # rid -> first-token latency
+        # Router telemetry drain (collect_router_stats): step outputs
+        # grow a stats pytree, pushed here and flushed at dump time.
+        self.router_drain = None
+        if self.pcfg.collect_router_stats and cfg.moe is not None:
+            self.router_drain = obs.RouterStatsDrain(
+                obs.registry, cfg.moe.num_experts, phase="serve")
+        # Periodic Prometheus dumps from inside run() (0 = final only,
+        # driven by the CLI's --metrics/--metrics-interval).
+        self.obs_dump_every = 0
+        self.obs_dump_path: Optional[str] = None
+        obs.maybe_register(self)
+        obs.maybe_register(self.pool)
+        if self.index is not None:
+            obs.maybe_register(self.index)
         self.transfers = 0
         self.failed: list[Request] = []      # permanently failed requests
         self.aborts = 0                      # fault/NaN slot aborts
@@ -445,6 +466,55 @@ class PagedServer:
         spec = getattr(self, "spec", None)
         if spec is not None:
             spec.reset_steps()
+
+    def _event(self, name: str, *args, reason: Optional[str] = None):
+        """Record one scheduler event: the legacy positional tuple (the
+        ``trace`` view), a monotonic-clock stamp, and an optional reason —
+        mirrored into the process-wide obs event log when enabled."""
+        t = self.clock()
+        self.events.append({"name": name, "t": t,
+                            "legacy": (name, *args), "reason": reason})
+        obs.events.emit(f"serve.{name}", reason=reason, t=t,
+                        detail=list(args))
+
+    @property
+    def trace(self) -> list[tuple]:
+        """The legacy timestamp-free event tuples, in order (the schedule
+        view the invariant tests compare across engine configurations)."""
+        return [e["legacy"] for e in self.events]
+
+    def obs_metrics(self) -> dict:
+        """Scheduler counters for registry snapshot polling."""
+        return {
+            "repro_serve_admissions_total": self.admissions,
+            "repro_serve_transfers_total": self.transfers,
+            "repro_serve_aborts_total": self.aborts,
+            "repro_serve_preemptions_total": self.preemptions,
+            "repro_serve_engine_recoveries_total": self.engine_recoveries,
+            "repro_serve_failed_requests_total": len(self.failed),
+            "repro_serve_queue_depth": len(self.queue),
+            "repro_serve_live_slots": sum(
+                s is not None for s in self.slots),
+        }
+
+    def _unpack_step(self, out):
+        """Normalise a step's flag-dependent arity: with
+        ``collect_router_stats`` every jitted step returns a trailing
+        stats pytree, pushed (asynchronously) onto the router drain."""
+        if self.pcfg.collect_router_stats:
+            a, cache, rstats = out
+            if self.router_drain is not None:
+                self.router_drain.push(rstats)
+            return a, cache
+        return out
+
+    def _dump_metrics(self):
+        """Flush the router drain and write a Prometheus snapshot (used
+        for the periodic in-run dumps; the CLI also dumps at exit)."""
+        if self.router_drain is not None:
+            self.router_drain.flush()
+        if self.obs_dump_path:
+            obs.dump_prometheus(obs.registry, self.obs_dump_path)
 
     def _need_pages(self, req: Request) -> int:
         # cache rows written = prompt + fed-back outputs (the last
@@ -534,7 +604,7 @@ class PagedServer:
             self.table[slot, :] = 0
             self.table[slot, :len(matched)] = matched
             self.slots[slot] = st
-            self.trace.append(("admit", req.rid, slot))
+            self._event("admit", req.rid, slot)
 
     def _cow_page(self, slot: int, st: _PagedSlot, j: int):
         """Copy-on-write guard: logical page ``j`` is about to be written
@@ -631,7 +701,7 @@ class PagedServer:
             st.allocated -= len(dropped)
         self.cache = lm.rollback_slot(self.cfg, self.cache, slot, new_len)
         st.length = new_len
-        self.trace.append(("rollback", st.req.rid, slot, n))
+        self._event("rollback", st.req.rid, slot, n, reason="speculative rows rejected")
 
     def _finish(self, slot: int, st: _PagedSlot, done: list):
         done.append(st.req)
@@ -642,7 +712,7 @@ class PagedServer:
         self.free.append(slot)
         if self.spec is not None:
             self.spec.forget(st.req.rid)
-        self.trace.append(("finish", st.req.rid, slot))
+        self._event("finish", st.req.rid, slot)
 
     # -- failure handling (DESIGN.md §9) --------------------------------------
 
@@ -665,7 +735,7 @@ class PagedServer:
         req.error = reason
         req.out.clear()
         self.failed.append(req)
-        self.trace.append(("fail", req.rid, reason))
+        self._event("fail", req.rid, reason, reason=reason)
 
     def _abort_slot(self, slot: int, *, reason: str, requeue_at: int = 0,
                     count_retry: bool = True):
@@ -679,7 +749,7 @@ class PagedServer:
         req = st.req
         self._release_slot(slot, st)
         req.out.clear()
-        self.trace.append(("abort", req.rid, slot, reason))
+        self._event("abort", req.rid, slot, reason, reason=reason)
         if count_retry:
             req.aborts += 1
             self.aborts += 1
@@ -704,7 +774,7 @@ class PagedServer:
         _, _, slot, st = min(victims)
         st.req.preemptions += 1
         self.preemptions += 1
-        self.trace.append(("preempt", st.req.rid, slot))
+        self._event("preempt", st.req.rid, slot, reason="page pressure")
         self._abort_slot(slot, reason="preempted", requeue_at=1,
                          count_retry=False)
         return True
@@ -725,7 +795,7 @@ class PagedServer:
             if st is not None and expired(st.req):
                 req = st.req
                 self._release_slot(slot, st)
-                self.trace.append(("abort", req.rid, slot, "deadline"))
+                self._event("abort", req.rid, slot, "deadline", reason="deadline")
                 self._fail_request(req, "deadline exceeded")
 
     def _recover_engine(self):
@@ -736,7 +806,7 @@ class PagedServer:
         every tick is idempotent on retry."""
         self.engine_recoveries += 1
         self._build_steps()
-        self.trace.append(("recover",))
+        self._event("recover", reason="engine step failure")
 
     def _on_fault(self, err: faults_lib.FaultError):
         """Route an injected fault: a ``{"slot": k}`` payload is a
@@ -785,7 +855,7 @@ class PagedServer:
             group_roles = derive_roles(weights)
             self.roles = [group_roles[self.groups[s]]
                           for s in range(self.num_slots)]
-        self.trace.append(("shrink", tuple(survivors)))
+        self._event("shrink", tuple(survivors), reason="device dropout")
         for req in [r for r in self.queue
                     if self._need_pages(r) > max(self.pool.shares)]:
             self.queue.remove(req)
@@ -857,14 +927,17 @@ class PagedServer:
         # jax aliases numpy inputs zero-copy, so an async read of the live
         # buffer could observe a FUTURE table state (a real, hash-seed-
         # timing-dependent token corruption caught by the parity tests).
-        last, self.cache = self.prefill_step(
-            self.params, jnp.asarray(toks), jnp.int32(n), jnp.int32(slot),
-            jnp.asarray(self.table[slot].copy()), self.cache,
-        )
+        with obs.tracer.span("serve.prefill_chunk", rid=st.req.rid,
+                             slot=slot, n=n):
+            last, self.cache = self._unpack_step(self.prefill_step(
+                self.params, jnp.asarray(toks), jnp.int32(n),
+                jnp.int32(slot),
+                jnp.asarray(self.table[slot].copy()), self.cache,
+            ))
         st.pos += n
         st.length += n
         self._reclaim(slot, st)
-        self.trace.append(("prefill_chunk", st.req.rid, slot, n))
+        self._event("prefill_chunk", st.req.rid, slot, n)
         if st.pos == len(st.req.prompt):
             self._index_prompt(st)
             last = np.asarray(last, np.float32)
@@ -877,7 +950,12 @@ class PagedServer:
                 self._abort_slot(slot, reason="non-finite prefill logits")
                 return True
             st.req.out.append(next_token(last, st.req))
-            self.ttft_s[st.req.rid] = time.perf_counter() - self._run_t0
+            # one clock read for BOTH the legacy dict and the trace
+            # instant, so the span-derived TTFT is bitwise the legacy
+            # value (tests/test_obs.py pins the equality)
+            now = time.perf_counter()
+            self.ttft_s[st.req.rid] = now - self._run_t0
+            obs.tracer.instant("serve.first_token", t=now, rid=st.req.rid)
             if len(st.req.out) >= st.req.max_new:
                 self._finish(slot, st, done)
         return True
@@ -886,8 +964,9 @@ class PagedServer:
         if self._handoff_step is None:
             self._handoff_step = jax.jit(
                 steps_lib.make_paged_handoff_step(self.cfg))
-        self.cache = self._handoff_step(
-            self.cache, jnp.int32(src), jnp.int32(dst))
+        with obs.tracer.span("serve.handoff", src=src, dst=dst):
+            self.cache = self._handoff_step(
+                self.cache, jnp.int32(src), jnp.int32(dst))
 
     def _transfer_tick(self) -> bool:
         """Disaggregated handoff: move every prefill-role slot that has
@@ -918,7 +997,7 @@ class PagedServer:
             self.slots[src] = None
             self.free.append(src)
             self.transfers += 1
-            self.trace.append(("transfer", st.req.rid, src, dst))
+            self._event("transfer", st.req.rid, src, dst)
             moved = True
         return moved
 
@@ -942,18 +1021,23 @@ class PagedServer:
             tokens[slot, 0] = st.req.out[-1]
             active[slot] = True
         t0 = time.perf_counter()
-        logits, self.cache = self.serve_step(
-            self.params,
-            {"tokens": jnp.asarray(tokens),
-             # .copy() — see _prefill_tick: the live table buffer must not
-             # be aliased by an asynchronously-executing step
-             "page_table": jnp.asarray(self.table.copy()),
-             "active": jnp.asarray(active)},
-            self.cache,
-        )
-        nxt = np.array(logits, np.float32)  # owned copy: faults may poison
-        self.decode_times_s.append(time.perf_counter() - t0)
-        self.trace.append(("decode", tuple(slot for slot, _ in dec)))
+        with obs.tracer.span("serve.decode", t0=t0, slots=len(dec)):
+            logits, self.cache = self._unpack_step(self.serve_step(
+                self.params,
+                {"tokens": jnp.asarray(tokens),
+                 # .copy() — see _prefill_tick: the live table buffer must
+                 # not be aliased by an asynchronously-executing step
+                 "page_table": jnp.asarray(self.table.copy()),
+                 "active": jnp.asarray(active)},
+                self.cache,
+            ))
+            nxt = np.array(logits, np.float32)  # owned: faults may poison
+        dt = time.perf_counter() - t0
+        self.decode_times_s.append(dt)
+        obs.registry.histogram(
+            "repro_serve_decode_step_seconds",
+            "paged decode macro-step latency").observe(dt)
+        self._event("decode", tuple(slot for slot, _ in dec))
         for f in faults_lib.inject("serve.logits"):
             if f.kind == "nan":
                 nxt[int(f.payload.get("slot", dec[0][0]))] = np.nan
@@ -967,6 +1051,7 @@ class PagedServer:
                 continue
             st.length += 1
             st.req.out.append(next_token(nxt[slot, -1], st.req))
+            obs.tracer.instant("serve.token", rid=st.req.rid)
             self._reclaim(slot, st)
             if len(st.req.out) >= st.req.max_new:
                 self._finish(slot, st, done)
@@ -980,25 +1065,31 @@ class PagedServer:
         done: list[Request] = []
         steps = 0
         self._run_t0 = time.perf_counter()
-        while (self.queue or any(s is not None for s in self.slots)) \
-                and steps < max_steps:
-            try:
-                self._expire_deadlines()
-                self._admit()
-                advanced = self._transfer_tick()
-                advanced |= self._prefill_tick(done)
-                advanced |= self._decode_tick(done)
-            except faults_lib.DeviceLostError as e:
-                self._shrink(e.survivors)
-                advanced = True
-            except faults_lib.FaultError as e:
-                self._on_fault(e)
-                advanced = True
-            if self.audit:
-                self.assert_page_invariants()
-            if not advanced and not self.queue:
-                break
-            steps += 1
+        # span start pinned to _run_t0 so TTFT derived from the trace
+        # subtracts the exact stamp the legacy ttft_s dict subtracts
+        with obs.tracer.span("serve.run", t0=self._run_t0):
+            while (self.queue or any(s is not None for s in self.slots)) \
+                    and steps < max_steps:
+                try:
+                    self._expire_deadlines()
+                    self._admit()
+                    advanced = self._transfer_tick()
+                    advanced |= self._prefill_tick(done)
+                    advanced |= self._decode_tick(done)
+                except faults_lib.DeviceLostError as e:
+                    self._shrink(e.survivors)
+                    advanced = True
+                except faults_lib.FaultError as e:
+                    self._on_fault(e)
+                    advanced = True
+                if self.audit:
+                    self.assert_page_invariants()
+                if not advanced and not self.queue:
+                    break
+                steps += 1
+                if self.obs_dump_every and steps % self.obs_dump_every == 0:
+                    self._dump_metrics()
+        self._dump_metrics()
         return done
 
     def drop_prefix_cache(self) -> int:
@@ -1112,6 +1203,21 @@ def main(argv=None):
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft length per verify round: up to k drafted "
                          "tokens + 1 correction commit per forward")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable the metrics registry and dump a "
+                         "Prometheus text snapshot to PATH at exit "
+                         "(DESIGN.md §12); with --paged the step outputs "
+                         "also carry per-expert router telemetry")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    metavar="N",
+                    help="also dump the Prometheus snapshot every N "
+                         "scheduler steps (0 = exit-only)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record spans/instants and write a Chrome "
+                         "trace-event JSON (Perfetto-loadable) to PATH")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the structured scheduler event log "
+                         "(JSONL, monotonic timestamps + reasons) to PATH")
     args = ap.parse_args(argv)
     if (args.spec_ngram or args.spec_draft) and not args.paged:
         ap.error("--spec-ngram/--spec-draft require --paged")
@@ -1126,6 +1232,12 @@ def main(argv=None):
                  "machinery lives in the paged engine)")
     if args.fault_spec:
         faults_lib.install(faults_lib.load_plan(args.fault_spec))
+
+    obs_on = bool(args.metrics or args.trace_out or args.events_out)
+    if obs_on:
+        obs.configure(metrics=bool(args.metrics),
+                      tracing=bool(args.trace_out),
+                      event_log=bool(args.events_out), reset=True)
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -1182,6 +1294,10 @@ def main(argv=None):
         # itself skips QAT fake-quant when the params carry true payloads)
         quant=args.quant,
         topology=topo,
+        # --metrics adds router telemetry outputs to the paged engine's
+        # jitted steps (the dense baseline keeps its 2-tuple contract)
+        collect_router_stats=(bool(args.metrics) and args.paged
+                              and cfg.moe is not None),
     )
 
     params, specs = split_tree(
@@ -1212,6 +1328,9 @@ def main(argv=None):
             kv_quant=args.kv_quant, prefix_cache=args.prefix_cache,
             disagg=args.disagg, audit=args.audit,
         )
+        if args.metrics:
+            server.obs_dump_path = args.metrics
+            server.obs_dump_every = args.metrics_interval
         if args.spec_ngram or args.spec_draft:
             # lazy import: spec imports serve (the shared sampling
             # helpers), so serve must never import spec at module level
@@ -1278,6 +1397,32 @@ def main(argv=None):
                   f"{sp['accepted_drafts']}/{sp['drafted']} drafts "
                   f"accepted ({sp['acceptance_rate']:.0%}), "
                   f"{sp['rollback_tokens']} rows rolled back")
+    if obs_on:
+        if args.metrics:
+            if getattr(server, "router_drain", None) is not None:
+                server.router_drain.flush()
+            obs.registry.collect()
+            obs.dump_prometheus(obs.registry, args.metrics)
+            print(f"[serve] metrics -> {args.metrics}")
+        if args.trace_out:
+            obs.tracer.write(args.trace_out)
+            cov = obs.span_coverage(obs.tracer.events)
+            ttft, tpot = obs.derive_request_latencies(obs.tracer.events)
+            print(f"[serve] trace -> {args.trace_out} "
+                  f"({len(obs.tracer.events)} events, "
+                  f"{cov:.0%} span coverage)")
+            if ttft:
+                ms = sorted(v * 1e3 for v in ttft.values())
+                line = (f"[serve] TTFT from spans: median "
+                        f"{ms[len(ms) // 2]:.1f}ms over {len(ms)} requests")
+                if tpot:
+                    tp = sorted(v * 1e3 for v in tpot.values())
+                    line += f"; TPOT median {tp[len(tp) // 2]:.2f}ms"
+                print(line)
+        if args.events_out:
+            obs.events.write_jsonl(args.events_out)
+            print(f"[serve] events -> {args.events_out} "
+                  f"({len(obs.events.records)} records)")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     faults_lib.install(None)

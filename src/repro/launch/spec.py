@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.launch import steps as steps_lib
 from repro.launch.serve import argmax_token, next_token
 from repro.models import lm
@@ -206,6 +207,17 @@ class SpecDecoder:
         self.rollback_tokens = 0    # speculative rows truncated away
         self._score_step = None
         server.spec = self
+        obs.maybe_register(self)
+
+    def obs_metrics(self) -> dict:
+        """Speculative counters for registry snapshot polling."""
+        return {
+            "repro_spec_rounds_total": self.rounds,
+            "repro_spec_drafted_tokens_total": self.drafted,
+            "repro_spec_accepted_drafts_total": self.accepted_drafts,
+            "repro_spec_rollback_tokens_total": self.rollback_tokens,
+            "repro_spec_acceptance_rate": self.acceptance_rate(),
+        }
 
     def reset_steps(self) -> None:
         """Drop the jitted score step (engine re-jit recovery path)."""
@@ -271,12 +283,14 @@ class SpecDecoder:
         toks = np.zeros((self.chunk,), np.int32)
         toks[0] = req.out[-1]
         toks[1:n_valid] = draft
-        logits, srv.cache = step(
-            srv.params, jnp.asarray(toks), jnp.int32(n_valid),
-            jnp.int32(slot),
-            # .copy() — see _prefill_tick: the live table buffer must not
-            # be aliased by an asynchronously-executing step
-            jnp.asarray(srv.table[slot].copy()), srv.cache)
+        with obs.tracer.span("serve.spec_verify", rid=req.rid, slot=slot,
+                             n_valid=n_valid):
+            logits, srv.cache = srv._unpack_step(step(
+                srv.params, jnp.asarray(toks), jnp.int32(n_valid),
+                jnp.int32(slot),
+                # .copy() — see _prefill_tick: the live table buffer must
+                # not be aliased by an asynchronously-executing step
+                jnp.asarray(srv.table[slot].copy()), srv.cache))
         st.length += n_valid
         rows = np.array(logits, np.float32)   # owned: faults may poison
         for f in faults_lib.inject("serve.logits"):
@@ -290,6 +304,7 @@ class SpecDecoder:
         for i in range(n_valid):
             tok = next_token(rows[i], req)
             req.out.append(tok)
+            obs.tracer.instant("serve.token", rid=req.rid)
             accepted = i + 1
             if len(req.out) >= req.max_new:
                 finished = True
@@ -299,7 +314,7 @@ class SpecDecoder:
                         # correction, everything past it is speculation
         self.rounds += 1
         self.accepted_drafts += accepted - 1
-        srv.trace.append(("spec_verify", req.rid, slot, n_valid, accepted))
+        srv._event("spec_verify", req.rid, slot, n_valid, accepted)
         if finished:
             srv._finish(slot, st, done)
             return accepted

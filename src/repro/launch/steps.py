@@ -13,6 +13,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.inputs import activation_spec
 from repro.models import lm
+from repro.obs import device as obs_device
 from repro.optim import adamw
 from repro.parallel.sharding import (
     ParallelConfig,
@@ -20,6 +21,13 @@ from repro.parallel.sharding import (
     resolve_spec,
     tree_shardings,
 )
+
+
+def _fwd5(out):
+    """Normalise ``lm.forward``'s flag-dependent arity to a 5-tuple
+    ``(x, cache, aux, z, stats)`` — ``stats`` is None when router
+    telemetry (``pcfg.collect_router_stats``) is off."""
+    return out if len(out) == 5 else (*out, None)
 
 
 def xent_loss(logits, labels, mask):
@@ -100,10 +108,10 @@ def make_loss_fn(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Optional[Mesh],
     zw = cfg.moe.z_weight if cfg.moe else 0.0
 
     def loss_fn(params, batch):
-        hidden, _, aux, z = lm.forward(
+        hidden, _, aux, z, stats = _fwd5(lm.forward(
             params, batch, cfg, pcfg, mesh, mode="train", x_spec=x_spec,
             return_hidden=True,
-        )
+        ))
         labels = batch["labels"]
         mask = batch["loss_mask"]
         if cfg.frontend == "siglip":
@@ -114,7 +122,13 @@ def make_loss_fn(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Optional[Mesh],
         loss = chunked_xent(hidden, params, cfg, labels, mask,
                             pcfg=pcfg, mesh=mesh)
         total = loss + aw * aux + zw * z
-        return total, {"loss": loss, "aux_loss": aux, "z_loss": z}
+        metrics = {"loss": loss, "aux_loss": aux, "z_loss": z}
+        if stats is not None:
+            # Device telemetry rides the has_aux channel (not
+            # differentiated); train drivers pop this non-scalar entry
+            # before float()-ing the metrics dict.
+            metrics["router_stats"] = stats
+        return total, metrics
 
     return loss_fn
 
@@ -149,10 +163,12 @@ def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
     x_spec = activation_spec(batch_shape3, pcfg, mesh)
 
     def prefill_step(params, inputs, cache):
-        logits, new_cache, _, _ = lm.forward(
+        logits, new_cache, _, _, stats = _fwd5(lm.forward(
             params, inputs, cfg, pcfg, mesh, mode="prefill",
             cache=cache, x_spec=x_spec,
-        )
+        ))
+        if pcfg.collect_router_stats:
+            return logits, new_cache, stats
         return logits, new_cache
 
     return prefill_step
@@ -161,16 +177,20 @@ def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
 def make_serve_step(cfg: ModelConfig, pcfg: ParallelConfig,
                     mesh: Optional[Mesh], batch_shape3):
     """Build the dense-cache decode macro-step: one token per occupied
-    slot (``active`` masks the rest), returning last-position logits."""
+    slot (``active`` masks the rest), returning last-position logits.
+    With ``pcfg.collect_router_stats`` the return grows a third element,
+    the obs.device stats pytree (DESIGN.md §12)."""
     # decode tokens are replicated over TP (S=1 can't shard).
     x_spec = activation_spec(batch_shape3, pcfg, mesh)
 
     def serve_step(params, inputs, cache):
-        logits, new_cache, _, _ = lm.forward(
+        logits, new_cache, _, _, stats = _fwd5(lm.forward(
             params, inputs, cfg, pcfg, mesh, mode="decode",
             cache=cache, x_spec=x_spec,
             active=inputs.get("active"),
-        )
+        ))
+        if pcfg.collect_router_stats:
+            return logits, new_cache, stats
         return logits, new_cache
 
     return serve_step
@@ -181,16 +201,20 @@ def make_paged_serve_step(cfg: ModelConfig, pcfg: ParallelConfig,
                           page_size: int):
     """Continuous-batching decode macro-step over the paged KV cache
     (DESIGN.md §7). ``inputs`` carries the scheduler's per-step view:
-    tokens (B, 1), page_table (B, maxp) int32, active (B,) bool."""
+    tokens (B, 1), page_table (B, maxp) int32, active (B,) bool. With
+    ``pcfg.collect_router_stats`` the return grows a third element, the
+    obs.device stats pytree (DESIGN.md §12)."""
     x_spec = activation_spec(batch_shape3, pcfg, mesh)
 
     def serve_step(params, inputs, cache):
-        logits, new_cache, _, _ = lm.forward(
+        logits, new_cache, _, _, stats = _fwd5(lm.forward(
             params, {"tokens": inputs["tokens"]}, cfg, pcfg, mesh,
             mode="decode", cache=cache, x_spec=x_spec,
             paged={"table": inputs["page_table"], "page_size": page_size},
             active=inputs["active"],
-        )
+        ))
+        if pcfg.collect_router_stats:
+            return logits, new_cache, stats
         return logits, new_cache
 
     return serve_step
@@ -227,9 +251,10 @@ def _paged_chunk_forward(cfg: ModelConfig, pcfg: ParallelConfig,
     ``mode="prefill"`` forward over ``chunk`` tokens continuing at the
     slot's resident length, against the shared page pools through
     ``table_row``. Returns the final-norm hidden states at EVERY chunk
-    position plus the cache with the slot's length advanced by
-    ``n_valid`` — the prefill step projects only the last valid row to
-    logits, the speculative score step projects them all (DESIGN.md §11).
+    position, the cache with the slot's length advanced by ``n_valid``,
+    and the obs.device stats pytree (None when telemetry is off) — the
+    prefill step projects only the last valid row to logits, the
+    speculative score step projects them all (DESIGN.md §11).
     All-attention stacks only: recurrent mixers advance per-slot state
     token-wise and take the scan path instead."""
     if any(cfg.layer_kind(p) != "attn" for p in range(cfg.period)):
@@ -247,15 +272,15 @@ def _paged_chunk_forward(cfg: ModelConfig, pcfg: ParallelConfig,
             "len": jax.lax.dynamic_slice(cache["len"], (slot,), (1,)),
         }
         active = (jnp.arange(chunk) < n_valid)[None]       # (1, chunk)
-        hidden, sub, _, _ = lm.forward(
+        hidden, sub, _, _, stats = _fwd5(lm.forward(
             params, {"tokens": tokens[None]}, cfg, pcfg, mesh,
             mode="prefill", cache=sub, x_spec=x_spec,
             paged={"table": table_row[None], "page_size": page_size},
             active=active, return_hidden=True,
-        )
+        ))
         new_len = jax.lax.dynamic_update_slice(
             cache["len"], sub["len"], (slot,))
-        return hidden, {"layers": sub["layers"], "len": new_len}
+        return hidden, {"layers": sub["layers"], "len": new_len}, stats
 
     return fwd
 
@@ -265,14 +290,17 @@ def _make_paged_prefill_chunk(cfg: ModelConfig, pcfg: ParallelConfig,
     fwd = _paged_chunk_forward(cfg, pcfg, mesh, page_size)
 
     def prefill_step(params, tokens, n_valid, slot, table_row, cache):
-        hidden, new_cache = fwd(params, tokens, n_valid, slot, table_row,
-                                cache)
+        hidden, new_cache, stats = fwd(params, tokens, n_valid, slot,
+                                       table_row, cache)
         # last valid row only: prefill wants the first-generated-token
         # logits, and projecting one row keeps the vocab matmul off the
         # chunk's other positions
         last_h = jax.lax.dynamic_slice_in_dim(hidden, n_valid - 1, 1, axis=1)
         logits = lm._logits_out(params, last_h, cfg)
-        return logits.reshape(-1).astype(jnp.float32), new_cache
+        out = logits.reshape(-1).astype(jnp.float32)
+        if pcfg.collect_router_stats:
+            return out, new_cache, stats
+        return out, new_cache
 
     return prefill_step
 
@@ -298,10 +326,13 @@ def make_paged_score_step(cfg: ModelConfig, pcfg: ParallelConfig,
     fwd = _paged_chunk_forward(cfg, pcfg, mesh, page_size)
 
     def score_step(params, tokens, n_valid, slot, table_row, cache):
-        hidden, new_cache = fwd(params, tokens, n_valid, slot, table_row,
-                                cache)
+        hidden, new_cache, stats = fwd(params, tokens, n_valid, slot,
+                                       table_row, cache)
         logits = lm.score_logits(params, hidden, cfg)   # (1, chunk, V)
-        return logits[0].astype(jnp.float32), new_cache
+        out = logits[0].astype(jnp.float32)
+        if pcfg.collect_router_stats:
+            return out, new_cache, stats
+        return out, new_cache
 
     return score_step
 
@@ -369,6 +400,8 @@ def _make_paged_prefill_scan(cfg: ModelConfig, pcfg: ParallelConfig,
     x_spec = activation_spec((1, 1, cfg.d_model), pcfg, mesh)
     period = cfg.period
     is_attn = [cfg.layer_kind(p) == "attn" for p in range(period)]
+    collect = pcfg.collect_router_stats
+    n_experts = cfg.moe.num_experts if cfg.moe is not None else 1
 
     def prefill_step(params, tokens, n_valid, slot, table_row, cache):
         def take_slot(tree):
@@ -388,23 +421,35 @@ def _make_paged_prefill_scan(cfg: ModelConfig, pcfg: ParallelConfig,
         }
 
         def body(carry, xs):
-            sc, last = carry
+            if collect:
+                sc, last, stacc = carry
+            else:
+                sc, last = carry
             tok, t = xs
             act = (t < n_valid)[None]
-            logits, sc, _, _ = lm.forward(
+            logits, sc, _, _, st = _fwd5(lm.forward(
                 params, {"tokens": tok.reshape(1, 1)}, cfg, pcfg, mesh,
                 mode="decode", cache=sc, x_spec=x_spec,
                 paged={"table": table_row[None], "page_size": page_size},
                 active=act,
-            )
+            ))
             last = jnp.where(act[0], logits.reshape(-1), last)
+            if collect:
+                return (sc, last, obs_device.add_stats(stacc, st)), None
             return (sc, last), None
 
         chunk = tokens.shape[0]
         last0 = jnp.zeros((cfg.vocab_size,), jnp.float32)
-        (sub, last), _ = jax.lax.scan(
-            body, (sub, last0), (tokens, jnp.arange(chunk))
-        )
+        if collect:
+            init = (sub, last0, obs_device.zero_stats(n_experts))
+            (sub, last, stats), _ = jax.lax.scan(
+                body, init, (tokens, jnp.arange(chunk))
+            )
+        else:
+            (sub, last), _ = jax.lax.scan(
+                body, (sub, last0), (tokens, jnp.arange(chunk))
+            )
+            stats = None
 
         new_layers = []
         for p in range(period):
@@ -420,7 +465,10 @@ def _make_paged_prefill_scan(cfg: ModelConfig, pcfg: ParallelConfig,
         new_len = jax.lax.dynamic_update_slice(
             cache["len"], sub["len"], (slot,)
         )
-        return last, {"layers": new_layers, "len": new_len}
+        new_cache = {"layers": new_layers, "len": new_len}
+        if collect:
+            return last, new_cache, stats
+        return last, new_cache
 
     return prefill_step
 

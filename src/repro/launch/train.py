@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfglib
+from repro import obs
 from repro.checkpoint import manager as ckpt
 from repro.configs.base import ShapeConfig
 from repro.core import hetero as hetero_lib
@@ -140,6 +141,20 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable the metrics registry and dump a "
+                         "Prometheus text snapshot to PATH at exit "
+                         "(DESIGN.md §12); also turns on per-expert "
+                         "router telemetry as extra train-step outputs")
+    ap.add_argument("--metrics-interval", type=int, default=0, metavar="N",
+                    help="also dump the Prometheus snapshot every N steps "
+                         "(0 = exit-only)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record train-loop spans and write a Chrome "
+                         "trace-event JSON (Perfetto-loadable) to PATH")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the structured event log (replans, "
+                         "recoveries; JSONL) to PATH")
     ap.add_argument("--fault-spec", default=None,
                     help="chaos fault plan: inline JSON or a JSON file "
                          "(runtime.faults; sites train.step / train.loss / "
@@ -154,6 +169,12 @@ def main(argv=None):
         ap.error("--elastic requires --mesh (nothing to re-mesh)")
     if args.fault_spec:
         faults_lib.install(faults_lib.load_plan(args.fault_spec))
+
+    obs_on = bool(args.metrics or args.trace_out or args.events_out)
+    if obs_on:
+        obs.configure(metrics=bool(args.metrics),
+                      tracing=bool(args.trace_out),
+                      event_log=bool(args.events_out), reset=True)
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -202,6 +223,8 @@ def main(argv=None):
         quant=args.quant,
         topology=topo,
         overlap_dispatch=args.overlap_dispatch,
+        # --metrics adds per-expert router telemetry to the step outputs
+        collect_router_stats=bool(args.metrics) and cfg.moe is not None,
     )
 
     def parse_lat(s, flag):
@@ -303,8 +326,21 @@ def main(argv=None):
             ap.error(f"--simulate-skew needs {n_workers} factors")
     metrics_log = []
     t_last = [time.time()]
+    router_drain = None
+    if pcfg.collect_router_stats:
+        router_drain = obs.RouterStatsDrain(
+            obs.registry, cfg.moe.num_experts, phase="train")
+
+    def dump_obs_metrics():
+        if not args.metrics:
+            return
+        if router_drain is not None:
+            router_drain.flush()
+        obs.registry.collect()
+        obs.dump_prometheus(obs.registry, args.metrics)
 
     def step_fn(state, step):
+        t_data0 = time.perf_counter()
         batch = {k: jnp.asarray(v) for k, v in source.batch(step).items()}
         if cfg.frontend == "encodec":
             rngb = np.random.default_rng(step)
@@ -338,11 +374,24 @@ def main(argv=None):
                     {k: np.asarray(v) for k, v in batch.items()}, plan
                 ).items()
             }
-        params, opt, m = jit_step_box[0](state["params"], state["opt"], batch)
-        m = {k: float(v) for k, v in m.items()}
+        obs.tracer.complete("train.data", t_data0, time.perf_counter(),
+                            step=step)
+        with obs.tracer.span("train.step", step=step):
+            params, opt, m = jit_step_box[0](
+                state["params"], state["opt"], batch)
+            # The device-side router accumulators ride the metrics pytree as
+            # a non-scalar entry; hand them to the async drain before the
+            # scalar float() conversion below.
+            rstats = m.pop("router_stats", None)
+            if rstats is not None and router_drain is not None:
+                router_drain.push(rstats)
+            m = {k: float(v) for k, v in m.items()}
         now = time.time()
         m["step_time_s"] = now - t_last[0]
         t_last[0] = now
+        obs.registry.histogram(
+            "repro_train_step_seconds",
+            "Wall time per optimiser step").observe(m["step_time_s"])
         # Per-worker telemetry: real deployments feed host timings here; a
         # single-host demo synthesises them from the wall time, the plan
         # shares, and the simulated skew (time_i ∝ share_i * skew_i).
@@ -360,12 +409,16 @@ def main(argv=None):
             cur_plan[0] = monitor.current_plan()
             jit_step_box[0] = jit_step_for(cur_plan[0])
             st = plan_cache.stats()
+            obs.events.emit("train.replan", reason="straggler",
+                            step=step, shares=list(new_shares))
             print(f"[hetero] replan -> shares {new_shares} "
                   f"(traces: {st['misses']}, reused: {st['hits']})")
         return {"params": params, "opt": opt}, m
 
     def on_metrics(step, m):
         metrics_log.append({"step": step, **m})
+        if args.metrics_interval and step % args.metrics_interval == 0:
+            dump_obs_metrics()
         if step % args.log_every == 0:
             print(f"step {step:5d} loss {m['loss']:.4f} "
                   f"aux {m.get('aux_loss', 0):.4f} lr {m['lr']:.2e} "
@@ -419,6 +472,9 @@ def main(argv=None):
                 if sim_skew is not None and not isinstance(survivors, int):
                     sim_skew = sim_skew[[int(i) for i in survivors]]
             jit_step_box[0] = jit_step_for(new_plan)
+            obs.events.emit("train.shrink", reason="device dropout",
+                            mesh_shape=list(new_shape),
+                            survivors=len(devs))
             print(f"[elastic] device loss -> re-mesh {new_shape} over "
                   f"{len(devs)} survivors")
             return state, None
@@ -426,15 +482,29 @@ def main(argv=None):
     ft_cfg = ft_lib.FTConfig(
         ckpt_dir=args.ckpt_dir, save_every=args.save_every
     )
-    state, last = ft_lib.run_with_recovery(
-        state=state, step_fn=step_fn, start_step=start_step,
-        num_steps=args.steps, ft=ft_cfg, on_metrics=on_metrics,
-        on_device_loss=on_device_loss,
-    )
+    with obs.tracer.span("train.run", steps=args.steps):
+        state, last = ft_lib.run_with_recovery(
+            state=state, step_fn=step_fn, start_step=start_step,
+            num_steps=args.steps, ft=ft_cfg, on_metrics=on_metrics,
+            on_device_loss=on_device_loss,
+        )
     faults_lib.install(None)
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(metrics_log, f, indent=1)
+    if args.metrics:
+        dump_obs_metrics()
+        print(f"[obs] prometheus metrics -> {args.metrics}")
+    if args.trace_out:
+        obs.tracer.write(args.trace_out)
+        cov = obs.span_coverage(obs.tracer.events)
+        print(f"[obs] chrome trace -> {args.trace_out} "
+              f"({len(obs.tracer.events)} events, "
+              f"span coverage {cov:.1%})")
+    if args.events_out:
+        obs.events.write_jsonl(args.events_out)
+        print(f"[obs] event log -> {args.events_out} "
+              f"({len(obs.events.records)} records)")
     print(f"[train] finished at step {last}; "
           f"final loss {metrics_log[-1]['loss']:.4f}"
           if metrics_log else "[train] no steps run")

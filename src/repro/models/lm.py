@@ -21,6 +21,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import frontends, mamba, transformer as tfm, xlstm
+from repro.obs import device as obs_device
 from repro.models.transformer import Ctx
 from repro.parallel.sharding import (
     ParallelConfig,
@@ -414,6 +415,11 @@ def rollback_slot(cfg: ModelConfig, cache: dict, slot: int,
 # ---------------------------------------------------------------------------
 
 def apply_block(p, x, ctx: Ctx, pos: int, cache, ffn_gathered=None):
+    """One block: mixer + (optional) FFN. Returns
+    (x, new_cache, aux_loss, z_loss, stats) — ``stats`` is the MoE
+    layer's obs.device telemetry pytree when
+    ``ctx.pcfg.collect_router_stats`` is set and this block holds an MoE
+    FFN, else None (dense / telemetry disabled)."""
     kind = ctx.cfg.layer_kind(pos)
     h = tfm.apply_norm(p["ln1"], x, ctx.cfg)
     if kind == "attn":
@@ -444,18 +450,23 @@ def apply_block(p, x, ctx: Ctx, pos: int, cache, ffn_gathered=None):
         )
     aux = jnp.zeros((), jnp.float32)
     z = jnp.zeros((), jnp.float32)
+    stats = None
     if "ffn" in p:
         h2 = tfm.apply_norm(p["ln2"], x, ctx.cfg)
         if ctx.cfg.is_moe_layer(pos):
-            y, aux, z = tfm.apply_moe_ffn(
+            out = tfm.apply_moe_ffn(
                 p["ffn"], h2, dataclasses.replace(ctx, layer_idx=pos),
                 gathered=ffn_gathered,
             )
+            if ctx.pcfg.collect_router_stats:
+                y, aux, z, stats = out
+            else:
+                y, aux, z = out
         else:
             y = tfm.apply_dense_ffn(p["ffn"], h2, ctx)
         x = x + y
     x = constrain(x, (("dp",), "sp", None), ctx.pcfg, ctx.mesh)
-    return x, new_cache, aux, z
+    return x, new_cache, aux, z, stats
 
 
 def _remat_policy(pcfg: ParallelConfig):
@@ -476,20 +487,30 @@ LAST_PIPELINE_CACHE_STATS: Optional[dict] = None
 def run_layers(layers, x, ctx: Ctx, cache_layers):
     cfg, pcfg = ctx.cfg, ctx.pcfg
     period = cfg.period
+    # Router telemetry (DESIGN.md §12): when enabled the scan carry grows
+    # a stats pytree summed over every MoE layer. Gated statically so the
+    # default path's carry structure — and compiled HLO — is unchanged.
+    collect = pcfg.collect_router_stats and cfg.moe is not None
 
     def period_fn(carry, xs):
-        x, aux, z = carry
+        if collect:
+            x, aux, z, stats = carry
+        else:
+            x, aux, z = carry
+            stats = None
         lp, lc, gf = xs
         new_caches = []
         for pos in range(period):
             c_in = None if lc is None else lc[pos]
             g = None if gf is None else gf.get(pos)
-            x, nc, a, zz = apply_block(lp[pos], x, ctx, pos, c_in,
-                                       ffn_gathered=g)
+            x, nc, a, zz, st = apply_block(lp[pos], x, ctx, pos, c_in,
+                                           ffn_gathered=g)
             new_caches.append(nc)
             aux = aux + a
             z = z + zz
-        return (x, aux, z), new_caches
+            if collect and st is not None:
+                stats = obs_device.add_stats(stats, st)
+        return ((x, aux, z, stats) if collect else (x, aux, z)), new_caches
 
     if pcfg.remat != "none" and ctx.mode == "train":
         period_fn = jax.checkpoint(
@@ -504,9 +525,17 @@ def run_layers(layers, x, ctx: Ctx, cache_layers):
                 "pipeline-shared prefetch cache lives in the unrolled "
                 "layer loop)"
             )
-        (x, aux, z), new_cache = jax.lax.scan(
-            period_fn, (x, zero, zero), (layers, cache_layers, None)
-        )
+        if collect:
+            init = (x, zero, zero, obs_device.zero_stats(
+                cfg.moe.num_experts))
+            (x, aux, z, stats), new_cache = jax.lax.scan(
+                period_fn, init, (layers, cache_layers, None)
+            )
+        else:
+            (x, aux, z), new_cache = jax.lax.scan(
+                period_fn, (x, zero, zero), (layers, cache_layers, None)
+            )
+            stats = None
     else:
         n_periods = cfg.num_layers // period
         moe_positions = [
@@ -589,7 +618,8 @@ def run_layers(layers, x, ctx: Ctx, cache_layers):
                     out[pos] = g
                 return out
 
-        carry = (x, zero, zero)
+        carry = ((x, zero, zero, obs_device.zero_stats(cfg.moe.num_experts))
+                 if collect else (x, zero, zero))
         outs = []
         for pp in range(n_periods):
             lp = jax.tree.map(lambda v: v[pp], layers)
@@ -606,7 +636,11 @@ def run_layers(layers, x, ctx: Ctx, cache_layers):
                     pcache.prefetch(pp + 1, lambda: gather_period(pp + 1))
             carry, nc = period_fn(carry, (lp, lc, gf))
             outs.append(nc)
-        x, aux, z = carry
+        if collect:
+            x, aux, z, stats = carry
+        else:
+            x, aux, z = carry
+            stats = None
         if pcache is not None:
             global LAST_PIPELINE_CACHE_STATS
             LAST_PIPELINE_CACHE_STATS = pcache.stats()
@@ -615,7 +649,7 @@ def run_layers(layers, x, ctx: Ctx, cache_layers):
             if cache_layers is None
             else jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         )
-    return x, aux, z, new_cache
+    return x, aux, z, new_cache, stats
 
 
 def _embed_in(params, inputs, cfg: ModelConfig, dtype):
@@ -686,7 +720,10 @@ def forward(
 ):
     """Returns (logits, new_cache, aux_loss, z_loss). With
     ``return_hidden`` the first element is the final normed hidden states
-    instead (callers compute chunked logits/loss themselves).
+    instead (callers compute chunked logits/loss themselves). When
+    ``pcfg.collect_router_stats`` is set a fifth element is appended: the
+    obs.device stats pytree summed over every MoE layer (per-expert token
+    counts, capacity drops, entropy/token sums; DESIGN.md §12).
 
     ``paged`` (decode only, DESIGN.md §7): ``{"table": (B, maxp) int32,
     "page_size": int}`` switches the KV write/read to the shared page pool
@@ -732,7 +769,7 @@ def forward(
     )
     x = constrain(x, (("dp",), "sp", None), pcfg, mesh)
     cache_layers = None if cache is None else cache["layers"]
-    x, aux, z, new_cache_layers = run_layers(
+    x, aux, z, new_cache_layers, stats = run_layers(
         params["layers"], x, ctx, cache_layers
     )
     x = tfm.apply_norm(params["final_norm"], x, cfg)
@@ -758,4 +795,9 @@ def forward(
             new_len = jnp.full((b,), s, jnp.int32)
         new_cache = {"layers": new_cache_layers, "len": new_len}
     n_moe = max(sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers)), 1)
+    if pcfg.collect_router_stats:
+        if stats is None:
+            stats = obs_device.zero_stats(
+                cfg.moe.num_experts if cfg.moe is not None else 1)
+        return logits, new_cache, aux / n_moe, z / n_moe, stats
     return logits, new_cache, aux / n_moe, z / n_moe

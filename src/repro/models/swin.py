@@ -217,6 +217,10 @@ def _apply_moe_ffn(p, x_tokens, cfg: SwinConfig, pcfg, mesh, moe_impl, x_spec):
         )
         mp = MoEParams(router=p["router"], w1=p["w1"], b1=p["b1"],
                        w2=p["w2"], b2=p["b2"])
+        if pcfg.collect_router_stats:
+            # Router telemetry is an LM-stack feature; the vision tower
+            # keeps the plain 3-tuple contract.
+            pcfg = dataclasses.replace(pcfg, collect_router_stats=False)
         return moe_layer(x_tokens, mp, ms, pcfg, mesh, x_spec=x_spec)
     bsz, L, c = x_tokens.shape
     xf = x_tokens.reshape(bsz * L, c)

@@ -199,7 +199,9 @@ def init_moe_ffn(key, cfg: ModelConfig, dtype, plan=None) -> dict:
 
 def apply_moe_ffn(p: dict, x: jax.Array, ctx: Ctx,
                   gathered: Optional[dict] = None):
-    """Returns (y, aux_loss, z_loss). x: (B, S, D).
+    """Returns (y, aux_loss, z_loss) — plus a trailing stats pytree when
+    ``ctx.pcfg.collect_router_stats`` is set (passed through from
+    parallel.moe_parallel.moe_layer unchanged). x: (B, S, D).
 
     ``gathered``: pregathered weight leaves from the pipeline-shared cache
     (parallel.cache); they replace the sharded ones and the island skips

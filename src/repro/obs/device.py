@@ -1,0 +1,172 @@
+"""On-device router/expert telemetry accumulators (DESIGN.md §12).
+
+``expert_stats`` computes, *inside* the jitted MoE islands, the per-expert
+token-slot counts, capacity-overflow drops, and gate-entropy sums the
+observability layer publishes — as plain extra jit outputs, so enabling
+them (``ParallelConfig.collect_router_stats``) changes the step's output
+pytree but adds no host synchronisation. The counts are exact integers:
+a host-side recount of the same routing decisions (``np.bincount`` over
+``expert_idx``) matches bitwise (pinned by tests/test_obs.py).
+
+``RouterStatsDrain`` is the asynchronous host side: ``push()`` only keeps
+references to the device arrays (on an async backend those are futures —
+no block), and ``flush()`` — called at metrics-dump boundaries, never in
+the tick/step hot path — materialises them with ``np.asarray`` and folds
+them into the metrics registry, preserving push order.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+STAT_KEYS = ("expert_tokens", "dropped_tokens", "entropy_sum", "tokens")
+
+
+def zero_stats(num_experts: int) -> Dict[str, jax.Array]:
+    """The all-zero stats pytree (scan-carry init / dense-layer filler)."""
+    return {
+        "expert_tokens": jnp.zeros((num_experts,), jnp.int32),
+        "dropped_tokens": jnp.zeros((), jnp.int32),
+        "entropy_sum": jnp.zeros((), jnp.float32),
+        "tokens": jnp.zeros((), jnp.int32),
+    }
+
+
+def add_stats(a: Dict[str, jax.Array],
+              b: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Elementwise sum of two stats pytrees (layer/period accumulation)."""
+    return {k: a[k] + b[k] for k in STAT_KEYS}
+
+
+def expert_stats(
+    expert_idx: jax.Array,          # (N, k) int32 routed expert ids
+    probs: jax.Array,               # (N, E) f32 full router distribution
+    num_experts: int,
+    valid_mask: Optional[jax.Array] = None,   # (N,) bool hetero tail mask
+    dropped: Optional[jax.Array] = None,      # () int32 capacity drops
+) -> Dict[str, jax.Array]:
+    """Device-side router telemetry for one MoE layer's routing decisions.
+
+    ``expert_tokens[e]`` counts valid token-slot assignments to expert
+    ``e`` (a token routed to k experts contributes k assignments) —
+    integer-exact, so the host recount comparison is bitwise. The entropy
+    sum is over each valid token's full router distribution (natural log,
+    gradient-stopped — telemetry must not grow the backward graph);
+    ``tokens`` is the valid-token count the host divides by for the mean.
+    """
+    n, k = expert_idx.shape
+    idx = jax.lax.stop_gradient(expert_idx)
+    p = jax.lax.stop_gradient(probs).astype(jnp.float32)
+    if valid_mask is None:
+        vtok = jnp.ones((n,), jnp.int32)
+    else:
+        vtok = valid_mask.astype(jnp.int32)
+    w = jnp.broadcast_to(vtok[:, None], (n, k)).reshape(-1)
+    counts = jnp.zeros((num_experts,), jnp.int32).at[idx.reshape(-1)].add(
+        w, mode="drop")
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-30)), 0.0),
+                   axis=-1)
+    return {
+        "expert_tokens": counts,
+        "dropped_tokens": (jnp.zeros((), jnp.int32) if dropped is None
+                           else dropped.astype(jnp.int32)),
+        "entropy_sum": jnp.sum(ent * vtok.astype(jnp.float32)),
+        "tokens": jnp.sum(vtok),
+    }
+
+
+def load_imbalance(expert_tokens: np.ndarray) -> float:
+    """Host-side load-imbalance factor: max over experts / mean over
+    experts of the token counts (1.0 = perfectly balanced; 0 when no
+    tokens were routed)."""
+    counts = np.asarray(expert_tokens, np.float64)
+    mean = counts.mean()
+    return float(counts.max() / mean) if mean > 0 else 0.0
+
+
+class RouterStatsDrain:
+    """Asynchronous device→host drain of ``expert_stats`` outputs.
+
+    ``push`` is O(1) and never synchronises — it appends the device
+    arrays (futures on async backends) to a bounded pending list.
+    ``flush`` materialises and aggregates everything pending into the
+    registry, in push order (DESIGN.md §12 drain-ordering guarantee:
+    within one drain, step ``i``'s contribution lands before step
+    ``i+1``'s; flush never runs concurrently with push — both belong to
+    the driver thread)."""
+
+    def __init__(self, registry, num_experts: int, phase: str,
+                 max_pending: int = 4096):
+        self.registry = registry
+        self.num_experts = num_experts
+        self.phase = phase
+        self.max_pending = max_pending
+        self._pending: List[dict] = []
+        self.total = np.zeros((num_experts,), np.int64)
+        self.total_dropped = 0
+        self.total_tokens = 0
+        self.entropy_sum = 0.0
+
+    def push(self, stats: Optional[dict]) -> None:
+        """Queue one step's device stats (no device→host copy happens
+        here). Auto-flushes only if the pending list hits its bound."""
+        if stats is None:
+            return
+        self._pending.append(stats)
+        if len(self._pending) >= self.max_pending:
+            self.flush()
+
+    def flush(self) -> None:
+        """Materialise all pending device stats and publish: per-expert
+        token counters, drop counters, the routed-token counter, and the
+        derived gate-entropy / load-imbalance gauges."""
+        if not self._pending:
+            self._publish_gauges()
+            return
+        pending, self._pending = self._pending, []
+        for st in pending:
+            self.total += np.asarray(st["expert_tokens"], np.int64)
+            self.total_dropped += int(np.asarray(st["dropped_tokens"]))
+            self.total_tokens += int(np.asarray(st["tokens"]))
+            self.entropy_sum += float(np.asarray(st["entropy_sum"]))
+        reg = self.registry
+        c = reg.counter("repro_router_expert_tokens_total",
+                        "per-expert routed token-slot assignments",
+                        labels=("phase", "expert"))
+        # counters are monotonic: re-publish by setting the delta between
+        # the running total and what the series already holds
+        for e in range(self.num_experts):
+            cur = _series_value(c, (self.phase, str(e)))
+            c.labels(self.phase, str(e)).inc(float(self.total[e]) - cur)
+        d = reg.counter("repro_router_dropped_tokens_total",
+                        "capacity-overflow dropped token slots",
+                        labels=("phase",))
+        d.labels(self.phase).inc(
+            float(self.total_dropped) - _series_value(d, (self.phase,)))
+        t = reg.counter("repro_router_routed_tokens_total",
+                        "valid tokens routed through MoE layers",
+                        labels=("phase",))
+        t.labels(self.phase).inc(
+            float(self.total_tokens) - _series_value(t, (self.phase,)))
+        self._publish_gauges()
+
+    def _publish_gauges(self) -> None:
+        reg = self.registry
+        if self.total_tokens > 0:
+            reg.gauge("repro_router_gate_entropy",
+                      "mean router-distribution entropy (nats)",
+                      labels=("phase",)).labels(self.phase).set(
+                self.entropy_sum / self.total_tokens)
+        if self.total.sum() > 0:
+            reg.gauge("repro_router_load_imbalance",
+                      "max/mean per-expert token load",
+                      labels=("phase",)).labels(self.phase).set(
+                load_imbalance(self.total))
+
+
+def _series_value(family, key: tuple) -> float:
+    child = getattr(family, "children", {}).get(key)
+    return float(child.value) if child is not None else 0.0

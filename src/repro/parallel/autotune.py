@@ -40,6 +40,8 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 
 @dataclasses.dataclass(frozen=True)
 class Topology:
@@ -585,6 +587,20 @@ def _tp_group_size(cfg, mesh) -> int:
     return size
 
 
+def _record_mode(mode: str, source: str, cost_s=None) -> str:
+    """Publish a layer-mode decision (trace-time only) and pass it through."""
+    obs.registry.counter(
+        "repro_autotune_mode_total",
+        "per-layer parallel-mode decisions, by mode and decision source",
+        labels=("mode", "source")).labels(mode, source).inc()
+    if cost_s is not None:
+        obs.registry.gauge(
+            "repro_autotune_predicted_latency_seconds",
+            "roofline-predicted layer latency for the chosen mode",
+            labels=("mode",)).labels(mode).set(float(cost_s))
+    return mode
+
+
 def resolve_layer_mode(
     tokens: int,
     *,
@@ -616,11 +632,11 @@ def resolve_layer_mode(
     data-centric — the per-node weight staging amortises the slow links.
     """
     if cfg.forced_layer_mode is not None:
-        return cfg.forced_layer_mode
+        return _record_mode(cfg.forced_layer_mode, "forced")
     if cfg.layer_mode_plan and layer_idx is not None:
         planned = cfg.layer_mode_plan[layer_idx % len(cfg.layer_mode_plan)]
         if planned is not None:
-            return planned
+            return _record_mode(planned, "plan")
     from repro.quant.core import quant_bits
 
     topo = getattr(cfg, "topology", None)
@@ -648,7 +664,8 @@ def resolve_layer_mode(
             )
             for m in CHOOSABLE_MODES
         }
-        return min(costs, key=costs.get)
+        best = min(costs, key=costs.get)
+        return _record_mode(best, "roofline_uneven", cost_s=costs[best])
     if cfg.device_latencies:
         lat = list(cfg.device_latencies)
         # Exactly one latency per group member: use them directly. A shorter
@@ -659,10 +676,10 @@ def resolve_layer_mode(
             n_dev = effective_devices(lat)
         else:
             n_dev = n_dev * effective_devices(lat) / len(lat)
-    return choose_mode(
+    return _record_mode(choose_mode(
         tokens, d, f, e, k, n_dev=n_dev, hw=hw, fused_ffn=fused is not False,
         weight_bits=bits,
-    )
+    ), "roofline")
 
 
 def plan_layer_modes(model_cfg, cfg, mesh, tokens: int) -> Tuple[Optional[str], ...]:

@@ -31,6 +31,7 @@ from collections import OrderedDict
 from typing import Any, Callable, Dict, Hashable, Optional, Sequence
 
 from repro.common import tree_bytes  # noqa: F401  (re-exported: cache API)
+from repro import obs
 
 
 class PipelineSharedCache:
@@ -52,6 +53,7 @@ class PipelineSharedCache:
         self.evictions = 0
         self.peak_resident_layers = 0
         self.peak_resident_bytes = 0
+        obs.maybe_register(self)
 
     # -- core ---------------------------------------------------------------
 
@@ -110,6 +112,12 @@ class PipelineSharedCache:
             "prefetches": self.prefetches,
             "evictions": self.evictions,
         }
+
+    def obs_metrics(self) -> Dict[str, float]:
+        """Snapshot for the observability registry (DESIGN.md §12): one
+        ``repro_cache_<stat>`` gauge per ``stats()`` entry, disambiguated
+        across cache kinds by the registry's ``kind`` label."""
+        return {f"repro_cache_{k}": float(v) for k, v in self.stats().items()}
 
 
 class PlanCache(PipelineSharedCache):
@@ -469,6 +477,10 @@ class PagePool:
             "total_rollbacks": self.total_rollbacks,
         }
 
+    def obs_metrics(self) -> Dict[str, float]:
+        """Snapshot for the observability registry (DESIGN.md §12)."""
+        return {f"repro_cache_{k}": float(v) for k, v in self.stats().items()}
+
 
 def page_shares(weights: Sequence[float], usable_pages: int) -> list[int]:
     """Largest-remainder split of the allocatable pages proportional to
@@ -650,6 +662,10 @@ class PrefixIndex:
             "lookup_tokens": self.lookup_tokens,
             "evictions": self.evictions,
         }
+
+    def obs_metrics(self) -> Dict[str, float]:
+        """Snapshot for the observability registry (DESIGN.md §12)."""
+        return {f"repro_cache_{k}": float(v) for k, v in self.stats().items()}
 
 
 def gathered_layer_bytes(d: int, f: int, e: int, *, glu: bool = True,

@@ -42,6 +42,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import baselines, espec
 from repro.core.reindex import build_reindex
 from repro.core.routing import route
+from repro.obs import device as obs_device
 from repro.parallel.sharding import ParallelConfig
 
 
@@ -232,6 +233,12 @@ def hexa_moe_island(
         noise_rng=noise_rng,
         valid_mask=token_valid,
     )
+    # Router telemetry (DESIGN.md §12): device-side accumulators over the
+    # rows this device routed; the caller de-duplicates TP-replicated
+    # counts before they leave the shard_map.
+    stats = (obs_device.expert_stats(r.expert_idx, r.probs, ms.num_experts,
+                                     valid_mask=token_valid)
+             if cfg.collect_router_stats else None)
     ri = build_reindex(r.expert_idx, r.gates, ms.num_experts, cfg.blk)
 
     # True-quantized expert weights (int8/fp8 payloads + block scales,
@@ -315,6 +322,8 @@ def hexa_moe_island(
 
     # Per-device aux losses; mean over the data axes happens in the caller
     # after the island returns (values are replicated within TP).
+    if stats is not None:
+        return y, r.aux_loss, r.z_loss, stats
     return y, r.aux_loss, r.z_loss
 
 
@@ -364,6 +373,17 @@ def ep_moe_island(
 
     rank, _ = baselines._dispatch_ranks(r.expert_idx, e)
     keep = rank < capacity
+    stats = None
+    if cfg.collect_router_stats:
+        # Capacity-overflow drops (DESIGN.md §12): valid token slots whose
+        # dispatch rank exceeded the buffer — the redundancy the paper's
+        # modes remove, now measurable against them.
+        vt = (jnp.ones((n,), jnp.int32) if token_valid is None
+              else token_valid.astype(jnp.int32))
+        dropped = jnp.sum((~keep).astype(jnp.int32) * vt[:, None])
+        stats = obs_device.expert_stats(
+            r.expert_idx, r.probs, e, valid_mask=token_valid,
+            dropped=dropped)
     slot = r.expert_idx * capacity + rank
     slot = jnp.where(keep, slot, e * capacity)
     buf = jnp.zeros((e * capacity, d), x.dtype)
@@ -402,6 +422,8 @@ def ep_moe_island(
     got = y_flat[jnp.minimum(slot, e * capacity - 1).reshape(-1)].reshape(n, k, d)
     gates = (r.gates * keep.astype(r.gates.dtype))[..., None].astype(x.dtype)
     y = jnp.sum(got * gates, axis=1)
+    if stats is not None:
+        return y, r.aux_loss, r.z_loss, stats
     return y, r.aux_loss, r.z_loss
 
 
@@ -479,7 +501,10 @@ def moe_layer(
     pregathered=False,
 ):
     """Distributed MoE FFN over a (B, S, D) activation. Returns
-    (y, aux_loss, z_loss) with y sharded like x.
+    (y, aux_loss, z_loss) with y sharded like x — or, when
+    ``cfg.collect_router_stats`` is set, (y, aux_loss, z_loss, stats)
+    where ``stats`` is the replicated obs.device telemetry pytree
+    (globally-exact per-expert token counts; DESIGN.md §12).
 
     ``layer_idx`` feeds the auto-mode plan lookup; ``pregathered`` marks
     which weight collectives already ran outside (pipeline-shared cache
@@ -494,8 +519,8 @@ def moe_layer(
     b, s, d = x.shape
 
     island = ep_moe_island if cfg.mode == "ep" else hexa_moe_island
+    layer_mode = None
     if island is hexa_moe_island:
-        layer_mode = None
         if pregathered == "all":
             # The overlap prefetcher already gathered the weights' tp
             # factor for this layer — it necessarily runs data-centric.
@@ -508,17 +533,41 @@ def moe_layer(
 
     mask_counts = _hetero_mask_counts(cfg.hetero_plan, x_spec, mesh, b)
 
+    collect = cfg.collect_router_stats
+
     if mesh is None:
         # Single-process path (unit tests): plain local computation.
         local_cfg = cfg
         xf = x.reshape(b * s, d)
-        y, aux, z = island(
+        out = island(
             xf, p, ms, local_cfg, _SINGLE_MESH, tokens_sharded_tp=False,
             noise_rng=noise_rng,
         )
+        if collect:
+            y, aux, z, stats = out
+            return y.reshape(b, s, d), aux, z, stats
+        y, aux, z = out
         return y.reshape(b, s, d), aux, z
 
     tokens_tp = x_spec[1] is not None  # seq dim sharded over "model"?
+
+    # Telemetry de-duplication factor (DESIGN.md §12): when tokens are
+    # gathered over TP (model-centric training/prefill) or replicated over
+    # TP (decode), every TP rank routes — and counts — the same tokens, so
+    # the psum'd totals are exact multiples of the true counts. Static per
+    # layer, so the integer floor-division below is exact.
+    stat_dup = 1
+    if collect:
+        tp = cfg.axes(mesh)["tp"]
+        if tp is not None:
+            tp_size = 1
+            for a in (tp if isinstance(tp, tuple) else (tp,)):
+                tp_size *= int(mesh.shape[a])
+            if cfg.mode == "ep":
+                stat_dup = 1 if tokens_tp else tp_size
+            else:
+                dc = layer_mode == "data_centric"
+                stat_dup = 1 if (tokens_tp and dc) else tp_size
 
     def body(xl, pl, rngl):
         bl, sl, _ = xl.shape
@@ -534,12 +583,16 @@ def moe_layer(
                 rank = rank * mesh.shape[a] + lax.axis_index(a)
             bv = jnp.asarray(counts, jnp.int32)[rank]
             tv = (jnp.arange(bl * sl, dtype=jnp.int32) // sl) < bv
-        y, aux, z = island(
+        out = island(
             xl.reshape(bl * sl, d), pl, ms, cfg, mesh,
             tokens_sharded_tp=tokens_tp,
             noise_rng=None if rngl is None else rngl[0],
             token_valid=tv,
         )
+        if collect:
+            y, aux, z, stats = out
+        else:
+            (y, aux, z), stats = out, None
         if bv is None:
             # Mean aux over all devices (aux is per-local-batch).
             aux = lax.pmean(aux, mesh.axis_names)
@@ -553,11 +606,33 @@ def moe_layer(
             wsum = lax.psum(w, mesh.axis_names)
             aux = lax.psum(aux * w, mesh.axis_names) / wsum
             z = lax.psum(z * w, mesh.axis_names) / wsum
+        if collect:
+            # Global totals: sum every device's local counts, then divide
+            # out the TP replication factor (exact — see stat_dup above).
+            stats = {k: lax.psum(v, mesh.axis_names)
+                     for k, v in stats.items()}
+            if stat_dup > 1:
+                stats = {
+                    "expert_tokens": stats["expert_tokens"] // stat_dup,
+                    "dropped_tokens": stats["dropped_tokens"] // stat_dup,
+                    "entropy_sum": stats["entropy_sum"] / stat_dup,
+                    "tokens": stats["tokens"] // stat_dup,
+                }
+            return y.reshape(bl, sl, d), aux, z, stats
         return y.reshape(bl, sl, d), aux, z
 
     p_specs = _param_specs(p, ms, cfg, mesh, pregathered=pregathered)
     rng_arg = None if noise_rng is None else noise_rng[None]
     rng_spec = None if noise_rng is None else P()
+    if collect:
+        stat_specs = {k: P() for k in obs_device.STAT_KEYS}
+        y, aux, z, stats = _shard_map(
+            body,
+            mesh,
+            in_specs=(x_spec, p_specs, rng_spec),
+            out_specs=(x_spec, P(), P(), stat_specs),
+        )(x, p, rng_arg)
+        return y, aux, z, stats
     y, aux, z = _shard_map(
         body,
         mesh,

@@ -155,6 +155,13 @@ class ParallelConfig:
     # factor as well (DESIGN.md §10). Requires cache_layers > 0 and the
     # unrolled layer loop; values are bit-identical to the eager schedule.
     overlap_dispatch: bool = False
+    # Router/expert telemetry (DESIGN.md §12): when True the MoE islands
+    # return per-expert token counts, capacity drops, and gate-entropy
+    # sums as extra jit outputs (obs.device.expert_stats) and
+    # models.lm.forward grows a fifth, stats, return element. Default
+    # False keeps every return arity — and the compiled HLO — bitwise
+    # identical to the uninstrumented path.
+    collect_router_stats: bool = False
 
     def axes(self, mesh: Mesh) -> dict:
         names = list(mesh.axis_names)

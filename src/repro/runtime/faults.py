@@ -59,6 +59,8 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
+
 
 class FaultError(RuntimeError):
     """An injected device-error-style step failure. ``fault`` carries the
@@ -141,6 +143,10 @@ class FaultPlan:
             if f.matches(call, self.rng):
                 entry[1] -= 1
                 self.fired.append((site, call, f.kind))
+                obs.registry.counter(
+                    "repro_faults_fired_total",
+                    "injected faults that fired, by site and kind",
+                    labels=("site", "kind")).labels(site, f.kind).inc()
                 out.append(f)
         return out
 

@@ -34,6 +34,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import manager as ckpt
 from repro.runtime import faults as faults_lib
 
@@ -181,7 +182,15 @@ def run_with_recovery(
     def recover(err) -> None:
         nonlocal state, step
         backoff = budget.record()
+        obs.registry.counter(
+            "repro_ft_recoveries_total",
+            "step failures recovered via checkpoint restore").inc()
+        obs.registry.gauge(
+            "repro_ft_backoff_seconds",
+            "backoff slept before the most recent restore").set(backoff)
         if budget.exhausted:
+            obs.events.emit("train.recover", reason="failure budget exhausted",
+                            failures=len(budget.stamps))
             raise err
         try:
             saver.wait()  # settle the in-flight write before reading
@@ -196,6 +205,9 @@ def run_with_recovery(
         state, meta, restored = got
         step = int(meta["step"])
         sleep_fn(backoff)
+        obs.events.emit("train.recover", reason=repr(err),
+                        restored_step=step, backoff_s=backoff,
+                        failures_in_window=len(budget.stamps))
         print(f"[ft] step failure ({err!r}); restored step {step} "
               f"(ckpt {restored}), {len(budget.stamps)} failures in "
               f"window, backoff {backoff:.3f}s")

@@ -21,6 +21,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.hetero import (
     HeteroPlan,
     clamp_shares,
@@ -87,6 +88,13 @@ class StragglerMonitor:
         self._step += 1
         for h, t in zip(self._hist, step_times_s):
             h.append(t)
+        if obs.registry.enabled:
+            g = obs.registry.gauge(
+                "repro_straggler_worker_step_seconds",
+                "windowed mean step time per worker", labels=("worker",))
+            for i, h in enumerate(self._hist):
+                if h:
+                    g.labels(str(i)).set(float(np.mean(h)))
         if self._step - self._last_replan < self.cfg.min_steps_between_replans:
             return None
         if min(len(h) for h in self._hist) < self.cfg.window // 2:
@@ -105,6 +113,9 @@ class StragglerMonitor:
             )
         self._last_replan = self._step
         self.replans += 1
+        obs.registry.counter(
+            "repro_straggler_replans_total",
+            "replans triggered by the straggler monitor").inc()
         self.shares = new
         return new
 

@@ -1,0 +1,354 @@
+"""Unified observability subsystem tests (ISSUE 10, DESIGN.md §12).
+
+Four contracts pinned here:
+
+  * registry semantics — counter/gauge/histogram families with labels,
+    Prometheus text rendering, snapshot-object polling, and the
+    disabled ⇒ shared-no-op-singleton fast path;
+  * tracing — span nesting, Chrome trace-event JSON schema validity,
+    span-union coverage, and the TTFT/TPOT derivation's bitwise
+    agreement with the raw-float subtraction it formalises;
+  * device-side router telemetry — per-expert token counts are
+    integer-exact against a host numpy recount of the same routing
+    decisions, and the flag-gated forward arity leaves the default
+    path's logits bitwise untouched;
+  * the serve loop — TTFT derived from the recorded spans equals the
+    legacy ``PagedServer.ttft_s`` dict bitwise, because both subtract
+    the same two clock reads.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.routing import route
+from repro.launch import serve
+from repro.models import lm
+from repro.obs import device as obs_device
+from repro.obs.metrics import _NOOP_FAMILY, MetricsRegistry, log_buckets
+from repro.obs.tracing import (
+    Tracer,
+    derive_request_latencies,
+    span_coverage,
+)
+from repro.parallel.sharding import ParallelConfig, split_tree
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts from and returns to the disabled baseline so the
+    process-wide instances never leak state across the suite."""
+    obs.configure(metrics=False, tracing=False, event_log=False, reset=True)
+    yield
+    obs.configure(metrics=False, tracing=False, event_log=False, reset=True)
+
+
+# -- registry ---------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_semantics():
+    reg = MetricsRegistry(enabled=True)
+    c = reg.counter("repro_test_ops_total", "ops", labels=("kind",))
+    c.labels("read").inc()
+    c.labels("read").inc(2)
+    c.labels("write").inc()
+    assert reg.value("repro_test_ops_total", "read") == 3
+    assert reg.value("repro_test_ops_total", "write") == 1
+    with pytest.raises(ValueError):
+        c.labels("read").inc(-1)
+
+    g = reg.gauge("repro_test_depth", "queue depth")
+    g.set(7)
+    g.set(3.5)
+    assert reg.value("repro_test_depth") == 3.5
+
+    h = reg.histogram("repro_test_latency_seconds", "lat",
+                      buckets=[0.01, 0.1, 1.0])
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    text = reg.render_prometheus()
+    assert '# TYPE repro_test_latency_seconds histogram' in text
+    assert 'repro_test_latency_seconds_bucket{le="0.01"} 1' in text
+    assert 'repro_test_latency_seconds_bucket{le="1"} 3' in text
+    assert 'repro_test_latency_seconds_bucket{le="+Inf"} 4' in text
+    assert 'repro_test_latency_seconds_count 4' in text
+    assert '# TYPE repro_test_ops_total counter' in text
+    assert 'repro_test_ops_total{kind="read"} 3' in text
+
+
+def test_kind_and_label_arity_mismatch_raise():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("repro_test_x", "x")
+    with pytest.raises(ValueError):
+        reg.gauge("repro_test_x", "x")
+    fam = reg.counter("repro_test_y", "y", labels=("a", "b"))
+    with pytest.raises(ValueError):
+        fam.labels("only-one")
+
+
+def test_disabled_registry_is_noop_singleton():
+    reg = MetricsRegistry(enabled=False)
+    fam = reg.counter("repro_test_never", "never")
+    assert fam is _NOOP_FAMILY
+    fam.inc()
+    fam.labels("x").inc(10)
+    reg.gauge("repro_test_g").set(1)
+    reg.histogram("repro_test_h").observe(1)
+    assert reg.families == {}
+    assert reg.render_prometheus() == ""
+
+
+def test_collect_polls_registered_objects():
+    class Pool:
+        def obs_metrics(self):
+            return {"repro_test_free": 12, "repro_test_used": 4}
+
+    reg = MetricsRegistry(enabled=True)
+    p = Pool()
+    reg.register_object(p)
+    reg.collect()
+    assert reg.value("repro_test_free", "pool", "0") == 12
+    assert reg.value("repro_test_used", "pool", "0") == 4
+    # Dead weakrefs are pruned, not polled.
+    del p
+    reg.collect()
+
+
+def test_log_buckets_are_sorted_decades():
+    b = log_buckets(1e-3, 1.0, 3)
+    assert list(b) == sorted(b)
+    assert b[0] == pytest.approx(1e-3)
+    assert b[-1] == pytest.approx(1.0)
+    assert len(b) == 10
+
+
+# -- tracing ----------------------------------------------------------------
+
+
+def test_span_nesting_and_chrome_schema():
+    clock_vals = iter([1.0, 1.1, 1.2, 1.6, 2.0])
+    tr = Tracer(enabled=True, clock=lambda: next(clock_vals))
+    with tr.span("outer", n=1):
+        with tr.span("inner"):
+            pass
+        tr.instant("tick", rid=7)
+    inner, outer = tr.events[0], tr.events[2]
+    assert (inner["name"], inner["depth"]) == ("inner", 1)
+    assert (outer["name"], outer["depth"]) == ("outer", 0)
+    assert outer["t"] <= inner["t"]
+    trace = tr.chrome_trace()
+    json.dumps(trace)  # schema must be JSON-serialisable as-is
+    evs = trace["traceEvents"]
+    assert {e["ph"] for e in evs} == {"X", "i"}
+    for e in evs:
+        assert e["ts"] >= 0 and "pid" in e and "tid" in e
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+        else:
+            assert e["s"] == "p"
+    tick = next(e for e in evs if e["ph"] == "i")
+    assert tick["args"]["rid"] == 7
+
+
+def test_disabled_tracer_records_nothing():
+    tr = Tracer(enabled=False)
+    with tr.span("x"):
+        tr.instant("y")
+    assert tr.events == []
+    assert tr.chrome_trace() == {"traceEvents": []}
+
+
+def test_span_coverage_union():
+    evs = [
+        {"ph": "X", "t": 0.0, "dur": 1.0},
+        {"ph": "X", "t": 0.5, "dur": 1.0},   # overlaps the first
+        {"ph": "X", "t": 3.0, "dur": 1.0},   # gap [1.5, 3.0)
+        {"ph": "i", "t": 9.0},               # instants don't count
+    ]
+    assert span_coverage(evs) == pytest.approx(2.5 / 4.0)
+    assert span_coverage([]) == 1.0
+
+
+def test_derive_request_latencies_bitwise():
+    t0 = 100.0
+    t_first = {1: 100.75, 2: 101.5}
+    events = [{"name": "serve.run", "ph": "X", "t": t0, "dur": 10.0,
+               "args": {}}]
+    for rid, t in t_first.items():
+        events.append({"name": "serve.first_token", "ph": "i", "t": t,
+                       "args": {"rid": rid}})
+    events.append({"name": "serve.token", "ph": "i", "t": 101.0,
+                   "args": {"rid": 1}})
+    events.append({"name": "serve.token", "ph": "i", "t": 101.5,
+                   "args": {"rid": 1}})
+    ttft, tpot = derive_request_latencies(events)
+    assert ttft[1] == t_first[1] - t0   # same float subtraction: bitwise
+    assert ttft[2] == t_first[2] - t0
+    assert tpot == {1: pytest.approx((101.5 - 100.75) / 2)}
+
+
+# -- device-side router telemetry -------------------------------------------
+
+
+def test_expert_counts_bitwise_equal_host_recount():
+    rng = np.random.default_rng(0)
+    n, d, e, k = 64, 16, 8, 2
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    w = rng.normal(size=(d, e)).astype(np.float32)
+    ro = route(jax.numpy.asarray(x), jax.numpy.asarray(w), k)
+    stats = jax.jit(
+        lambda i, p: obs_device.expert_stats(i, p, e)
+    )(ro.expert_idx, ro.probs)
+    idx = np.asarray(ro.expert_idx)
+    recount = np.bincount(idx.reshape(-1), minlength=e).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(stats["expert_tokens"]), recount)
+    assert int(stats["tokens"]) == n
+    assert int(stats["dropped_tokens"]) == 0
+    assert int(np.asarray(stats["expert_tokens"]).sum()) == n * k
+
+    # Hetero tail masking: masked rows contribute no counts, no entropy.
+    mask = np.zeros(n, bool)
+    mask[: n // 2] = True
+    ms = obs_device.expert_stats(
+        ro.expert_idx, ro.probs, e,
+        valid_mask=jax.numpy.asarray(mask))
+    recount_m = np.bincount(idx[mask].reshape(-1), minlength=e)
+    np.testing.assert_array_equal(np.asarray(ms["expert_tokens"]), recount_m)
+    assert int(ms["tokens"]) == n // 2
+    assert float(ms["entropy_sum"]) < float(stats["entropy_sum"])
+
+
+def test_router_stats_drain_publishes_deltas():
+    reg = MetricsRegistry(enabled=True)
+    drain = obs.RouterStatsDrain(reg, num_experts=2, phase="t")
+    mk = lambda c0, c1, tok: {
+        "expert_tokens": np.array([c0, c1], np.int32),
+        "dropped_tokens": np.int32(0),
+        "entropy_sum": np.float32(0.5 * tok),
+        "tokens": np.int32(tok),
+    }
+    drain.push(mk(3, 5, 4))
+    drain.flush()
+    assert reg.value("repro_router_expert_tokens_total", "t", "0") == 3
+    assert reg.value("repro_router_routed_tokens_total", "t") == 4
+    drain.push(mk(4, 6, 5))
+    drain.flush()
+    # Counters accumulate pushed totals monotonically across flushes.
+    assert reg.value("repro_router_expert_tokens_total", "t", "0") == 7
+    assert reg.value("repro_router_expert_tokens_total", "t", "1") == 11
+    assert reg.value("repro_router_routed_tokens_total", "t") == 9
+    assert reg.value("repro_router_gate_entropy", "t") == pytest.approx(0.5)
+
+
+MOE_CFG = ModelConfig(
+    name="obs-moe", family="moe",
+    num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+    d_ff=0, vocab_size=32, dtype="float32",
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff=64),
+)
+
+
+def test_forward_arity_and_bitwise_default_path():
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), MOE_CFG))
+    tokens = jax.numpy.asarray(
+        np.random.default_rng(1).integers(0, 32, size=(2, 8)), np.int32)
+    pcfg_off = ParallelConfig(blk=8)
+    pcfg_on = dataclasses.replace(pcfg_off, collect_router_stats=True)
+    out_off = lm.forward(params, {"tokens": tokens}, MOE_CFG, pcfg_off,
+                         None, mode="train")
+    out_on = lm.forward(params, {"tokens": tokens}, MOE_CFG, pcfg_on,
+                        None, mode="train")
+    assert len(out_off) == 4
+    assert len(out_on) == 5
+    np.testing.assert_array_equal(np.asarray(out_off[0]),
+                                  np.asarray(out_on[0]))
+    stats = out_on[4]
+    n_moe = sum(1 for i in range(MOE_CFG.num_layers)
+                if MOE_CFG.is_moe_layer(i))
+    total = 2 * 8 * MOE_CFG.moe.top_k * n_moe
+    assert int(np.asarray(stats["expert_tokens"]).sum()) == total
+    assert int(stats["tokens"]) == 2 * 8 * n_moe
+
+
+# -- event log --------------------------------------------------------------
+
+
+def test_event_log_records_and_jsonl(tmp_path):
+    clock_vals = iter([5.0, 6.0])
+    log = obs.EventLog(enabled=True, clock=lambda: next(clock_vals))
+    log.emit("train.replan", reason="straggler", shares=[3, 1])
+    log.emit("serve.recover", reason="engine step failure")
+    assert [r["kind"] for r in log.records] == ["train.replan",
+                                                "serve.recover"]
+    assert log.records[0]["t"] == 5.0
+    assert log.records[0]["reason"] == "straggler"
+    path = tmp_path / "events.jsonl"
+    log.write_jsonl(str(path))
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert lines == log.records
+
+    off = obs.EventLog(enabled=False)
+    off.emit("x")
+    assert off.records == []
+
+
+# -- serve loop -------------------------------------------------------------
+
+
+SERVE_CFG = ModelConfig(
+    name="obs-serve", family="dense",
+    num_layers=1, d_model=16, num_heads=2, num_kv_heads=2, head_dim=8,
+    d_ff=32, vocab_size=32, dtype="float32",
+)
+
+
+def _serve_requests(n, seed=3):
+    rng = np.random.default_rng(seed)
+    return [serve.Request(
+        rid=i,
+        prompt=rng.integers(0, SERVE_CFG.vocab_size,
+                            size=int(rng.integers(2, 10))).astype(np.int32),
+        max_new=int(rng.integers(2, 5)), out=[])
+        for i in range(n)]
+
+
+def _run_paged(reqs):
+    params, _ = split_tree(lm.init_params(jax.random.PRNGKey(0), SERVE_CFG))
+    srv = serve.PagedServer(
+        SERVE_CFG, ParallelConfig(blk=8), None, num_slots=2, page_size=4,
+        num_pages=24, max_pages_per_slot=8, params=params, prefill_chunk=4)
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run()
+    return srv, {r.rid: list(r.out) for r in done}
+
+
+def test_serve_ttft_from_spans_matches_legacy():
+    obs.configure(metrics=True, tracing=True, event_log=True, reset=True)
+    srv, _ = _run_paged(_serve_requests(3))
+    ttft, tpot = derive_request_latencies(obs.tracer.events)
+    assert set(ttft) == set(srv.ttft_s)
+    for rid, legacy in srv.ttft_s.items():
+        assert ttft[rid] == legacy, "span-derived TTFT must be bitwise legacy"
+    # The run span must dominate the trace window.
+    assert span_coverage(obs.tracer.events) > 0.95
+    # The legacy trace shim still reports tuple events.
+    kinds = {e[0] for e in srv.trace}
+    assert {"admit", "prefill_chunk", "decode", "finish"} <= kinds
+    # Scheduler counters landed on the process registry.
+    obs.registry.collect()
+    text = obs.registry.render_prometheus()
+    assert "repro_serve_admissions_total" in text
+    assert "repro_serve_decode_step_seconds_count" in text
+    assert "repro_cache_num_pages" in text  # PagePool snapshot polled
+
+
+def test_serve_obs_enabled_changes_no_tokens():
+    _, out_ref = _run_paged(_serve_requests(2, seed=9))
+    obs.configure(metrics=True, tracing=True, event_log=True, reset=True)
+    _, out_obs = _run_paged(_serve_requests(2, seed=9))
+    assert out_obs == out_ref
